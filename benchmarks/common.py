@@ -1,0 +1,45 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+
+def kl_divergence(p: np.ndarray, q: np.ndarray) -> float:
+    q = np.maximum(q, 1e-12)
+    p = np.maximum(p, 1e-12)
+    return float((p * np.log(p / q)).sum())
+
+
+def empirical(samples: np.ndarray, n_states: int) -> np.ndarray:
+    c = np.bincount(np.asarray(samples).reshape(-1), minlength=n_states)
+    return c / c.sum()
+
+
+def fit_loglog_slope(xs, ys) -> float:
+    """Least-squares slope of log(y) vs log(x) (convergence order)."""
+    lx, ly = np.log(np.asarray(xs, float)), np.log(np.asarray(ys, float))
+    a = np.vstack([lx, np.ones_like(lx)]).T
+    slope, _ = np.linalg.lstsq(a, ly, rcond=None)[0]
+    return float(slope)
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    """(result, seconds_per_call) with a warmup call."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return out, (time.time() - t0) / repeats
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks.
+
+This container executes kernels in interpret mode (CPU), so wall-times of the
+XLA-fused oracle path are reported as the CPU-executable proxy, together with
+the bytes-touched model that motivates the fusion (HBM passes saved on TPU).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from .common import csv_row, timed
+
+from repro.kernels import ref
+from repro.kernels.fused_jump import fused_jump
+
+
+def hbm_passes_model(t: int, v: int, dtype_bytes: int = 2) -> str:
+    """Bytes over HBM: unfused (~6 passes over [T,V]) vs fused (1 read/operand)."""
+    tv = t * v * dtype_bytes
+    unfused = 6 * tv  # rates, clip, sum, log, +gumbel, argmax re-read
+    fused = 3 * tv  # mu_a, mu_b, gumbel single read each
+    return f"unfused_bytes={unfused} fused_bytes={fused} saving={unfused/fused:.1f}x"
+
+
+def run(shapes=((1024, 4096), (4096, 32768)), quick: bool = True) -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for t, v in shapes[: 1 if quick else None]:
+        ks = jax.random.split(key, 5)
+        mu_a = jax.nn.softmax(jax.random.normal(ks[0], (t, v)), -1)
+        mu_b = jax.nn.softmax(jax.random.normal(ks[1], (t, v)), -1)
+        g = jax.random.gumbel(ks[2], (t, v))
+        u = jax.random.uniform(ks[3], (t,))
+        act = jnp.ones((t,), bool)
+
+        fn = jax.jit(lambda *a: ref.fused_jump_ref(a[0], a[1], 2.667, -1.667,
+                                                   0.05, a[2], a[3], a[4]))
+        _, sec = timed(fn, mu_a, mu_b, g, u, act, repeats=3)
+        rows.append(csv_row(f"fused_jump/oracle_xla/T{t}xV{v}", sec * 1e6,
+                            hbm_passes_model(t, v)))
+        if t <= 1024:  # interpret mode is slow; validate-and-time small only
+            _, sec_k = timed(
+                lambda: fused_jump(mu_a, mu_b, g, u, act, coeff_a=2.667,
+                                   coeff_b=-1.667, dt=0.05, interpret=True),
+                repeats=1)
+            rows.append(csv_row(f"fused_jump/pallas_interpret/T{t}xV{v}",
+                                sec_k * 1e6, "correctness_path_only"))
+
+    # flash attention oracle timing
+    b, h, s, d = 1, 8, 1024, 64
+    ks = jax.random.split(key, 3)
+    q, k, v_ = (jax.random.normal(kk, (b, h, s, d)) for kk in ks)
+    fn = jax.jit(lambda *a: ref.flash_attention_ref(*a, causal=True))
+    _, sec = timed(fn, q, k, v_, repeats=3)
+    flops = 4 * b * h * s * s * d
+    rows.append(csv_row(f"flash_attention/oracle_xla/B{b}H{h}S{s}D{d}",
+                        sec * 1e6, f"flops={flops:.2e}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("\n".join(run(quick=not args.full)))
+
+
+if __name__ == "__main__":
+    main()

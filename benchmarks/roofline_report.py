@@ -1,0 +1,76 @@
+"""Roofline report (deliverable g): tabulates artifacts/dryrun.jsonl.
+
+Prints, per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPs (useful-compute ratio), and per-device
+memory — the §Roofline table of EXPERIMENTS.md is generated from this.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .common import csv_row
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "dryrun.jsonl")
+
+
+def load(path: str) -> list[dict]:
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                recs.append(json.loads(line))
+    # de-dup: keep latest record per (arch, shape, mesh)
+    latest = {}
+    for r in recs:
+        latest[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(latest.values())
+
+
+def run(path: str = DEFAULT_PATH) -> list[str]:
+    recs = load(path)
+    rows = []
+    if not recs:
+        return [csv_row("roofline/none", 0.0,
+                        "no dryrun artifact; run python -m repro.launch.dryrun --all")]
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    errs = [r for r in recs if r["status"] == "error"]
+    rows.append(csv_row("roofline/summary", 0.0,
+                        f"ok={len(ok)} skipped={len(skipped)} errors={len(errs)}"))
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        total_gb = (mem.get("argument_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0)) / 2**30
+        rows.append(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            (r.get("lower_s", 0) + r.get("compile_s", 0)) * 1e6,
+            f"dominant={rl['dominant']} compute_s={rl['compute_s']:.3e} "
+            f"memory_s={rl['memory_s']:.3e} collective_s={rl['collective_s']:.3e} "
+            f"useful_flops={rl['useful_flops_ratio']:.3f} mem_gb={total_gb:.1f}"))
+    for r in skipped:
+        rows.append(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+            f"SKIPPED: {r['reason'][:60]}"))
+    for r in errs:
+        rows.append(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+            f"ERROR: {r['error'][:80]}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=DEFAULT_PATH)
+    args = ap.parse_args()
+    print("\n".join(run(args.path)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Benchmark runner — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default is the quick profile
+(CPU-minutes); ``--full`` reproduces the EXPERIMENTS.md-scale numbers.
+
+  toy_convergence    -> Fig. 2 (KL vs steps, fitted order)
+  theta_sweep        -> Fig. 4/5 (quality vs theta)
+  uniformization     -> Fig. 1 (exact-simulation NFE blow-up)
+  text_nfe           -> Tab. 1/2 (generative perplexity vs NFE)
+  image_nfe          -> Fig. 3 (Frechet distance vs NFE, incl. parallel decoding)
+  kernels            -> kernel microbenches + bytes-touched model
+  roofline           -> §Roofline table from the dry-run artifact
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of section names")
+    args = ap.parse_args()
+
+    from . import (  # noqa: PLC0415
+        image_nfe,
+        kernels_bench,
+        roofline_report,
+        text_nfe,
+        theta_sweep,
+        toy_convergence,
+        uniformization_nfe,
+    )
+
+    sections = {
+        "toy_convergence": lambda: toy_convergence.run(
+            n_samples=200_000 if args.full else 30_000,
+            steps_grid=(4, 8, 16, 32, 64) if args.full else (4, 8, 16)),
+        "theta_sweep": lambda: theta_sweep.run(
+            n_samples=100_000 if args.full else 30_000,
+            steps=16 if args.full else 8),
+        "uniformization": lambda: uniformization_nfe.run(
+            batch=100_000 if args.full else 20_000),
+        "text_nfe": lambda: text_nfe.run(
+            nfe_grid=(8, 16, 32, 64, 128) if args.full else (8, 16, 32),
+            eval_batch=512 if args.full else 128,
+            train_steps=1500 if args.full else 300),
+        "image_nfe": (lambda: image_nfe.run(side=16, n_colors=32,
+                                            train_steps=1500,
+                                            nfe_grid=(4, 8, 16, 32, 64),
+                                            eval_batch=256))
+        if args.full else image_nfe.run,
+        "kernels": lambda: kernels_bench.run(quick=not args.full),
+        "roofline": roofline_report.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        sections = {k: v for k, v in sections.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in sections.items():
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+            print(f"{name}/TOTAL,{(time.time()-t0)*1e6:.1f},ok", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/TOTAL,0.0,FAILED", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

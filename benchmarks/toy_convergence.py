@@ -1,0 +1,59 @@
+"""Paper Fig. 2: KL divergence vs step count on the 15-state toy model.
+
+Exact scores isolate the solvers' discretization error; the fitted log-log
+slope is the empirical convergence order (theta-trapezoidal: ~2).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from .common import csv_row, empirical, fit_loglog_slope, kl_divergence
+
+from repro.core import DenseCTMC, SamplerConfig, sample_dense, uniform_rate_matrix
+
+
+def run(n_samples: int = 30_000, steps_grid=(4, 8, 16), theta: float = 0.5,
+        n_states: int = 15, t_max: float = 12.0, seed: int = 0,
+        methods=("tau_leaping", "theta_rk2", "theta_trapezoidal")) -> list[str]:
+    rng = np.random.default_rng(seed)
+    p0 = rng.dirichlet(np.ones(n_states))  # uniform on the simplex (Sec. 6.1)
+    ctmc = DenseCTMC(q=uniform_rate_matrix(n_states), p0=p0, t_max=t_max)
+    key = jax.random.PRNGKey(seed)
+    rows = []
+    for method in methods:
+        kls, times = [], []
+        for steps in steps_grid:
+            cfg = SamplerConfig(method=method, n_steps=steps, theta=theta,
+                                t_stop=1e-3)
+            t0 = time.time()
+            xs = jax.jit(lambda k: sample_dense(k, ctmc, cfg, n_samples))(key)
+            xs.block_until_ready()
+            dt = time.time() - t0
+            kls.append(kl_divergence(p0, empirical(np.asarray(xs), n_states)))
+            times.append(dt)
+            rows.append(csv_row(
+                f"toy_convergence/{method}/steps{steps}", dt * 1e6,
+                f"kl={kls[-1]:.4e}"))
+        slope = fit_loglog_slope(steps_grid, kls)
+        rows.append(csv_row(f"toy_convergence/{method}/order",
+                            sum(times) * 1e6, f"slope={slope:.2f}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.full:
+        rows = run(n_samples=400_000, steps_grid=(4, 8, 16, 32, 64, 128))
+    else:
+        rows = run()
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the paper's solvers in ~40 lines.
+
+Builds the 15-state toy model of Sec. 6.1 (exact scores!), samples with
+tau-leaping vs the theta-trapezoidal method at the same step count, and prints
+the KL divergence to the true target — the high-order scheme wins.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import (
+    DenseCTMC,
+    SamplerConfig,
+    sample_dense,
+    uniform_rate_matrix,
+)
+
+
+def main() -> None:
+    n_states, t_max, n_samples, steps = 15, 12.0, 100_000, 8
+    rng = np.random.default_rng(0)
+    p0 = rng.dirichlet(np.ones(n_states))  # target distribution on the simplex
+    ctmc = DenseCTMC(q=uniform_rate_matrix(n_states), p0=p0, t_max=t_max)
+    key = jax.random.PRNGKey(0)
+
+    def kl_of(method: str, theta: float = 0.5) -> float:
+        cfg = SamplerConfig(method=method, n_steps=steps, theta=theta)
+        xs = jax.jit(lambda k: sample_dense(k, ctmc, cfg, n_samples))(key)
+        q = np.bincount(np.asarray(xs), minlength=n_states) / n_samples
+        return float((p0 * np.log(p0 / np.maximum(q, 1e-12))).sum())
+
+    print(f"toy model: {n_states} states, {steps} solver steps, "
+          f"{n_samples} samples")
+    for method in ("euler", "tau_leaping", "theta_rk2", "theta_trapezoidal"):
+        print(f"  {method:20s} KL(p0 || samples) = {kl_of(method):.4f}")
+    print("theta-trapezoidal (Alg. 2) achieves the lowest KL at equal steps — "
+          "the paper's second-order speedup.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""End-to-end driver: train a masked discrete diffusion LM, then sample with
+every solver at matched NFE and score samples under the TRUE data law.
+
+This is the paper's Sec. 6.2 protocol at container scale: the "GPT-2 judge" is
+replaced by the exactly-known Markov generating law (see DESIGN.md §6).
+
+    PYTHONPATH=src python examples/train_and_sample.py \
+        --steps 4000 --vocab 32 --seq-len 32 --ckpt-dir artifacts/text_ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SamplerConfig, loglinear_schedule, masked_process, sample_masked
+from repro.data import MarkovText, TokenDataset
+from repro.models.config import ModelConfig
+from repro.serve import make_score_fn
+from repro.train import (
+    OptimizerConfig,
+    TrainConfig,
+    Trainer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def build(args):
+    cfg = ModelConfig(
+        name="text-diffusion", family="dense",
+        n_layers=args.layers, d_model=args.d_model, n_heads=4, n_kv_heads=2,
+        head_dim=args.d_model // 4, d_ff=args.d_model * 3,
+        vocab_size=args.vocab, dtype="float32",
+    )
+    proc = masked_process(args.vocab, loglinear_schedule())
+    corpus = MarkovText(vocab_size=args.vocab, seed=0)
+    return cfg, proc, corpus
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--vocab", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="artifacts/text_ckpt")
+    ap.add_argument("--nfe", type=int, default=32)
+    ap.add_argument("--eval-batch", type=int, default=256)
+    ap.add_argument("--skip-train-if-ckpt", action="store_true")
+    args = ap.parse_args()
+
+    cfg, proc, corpus = build(args)
+    data = corpus.sample(8192, args.seq_len, seed=1)
+    ds = TokenDataset(data)
+
+    trainer = Trainer(
+        cfg, proc,
+        OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 10),
+                        total_steps=args.steps),
+        TrainConfig(batch_size=args.batch, steps=args.steps,
+                    log_every=max(args.steps // 20, 1)))
+    params, opt = trainer.init(jax.random.PRNGKey(0))
+
+    step0 = latest_step(args.ckpt_dir) if args.ckpt_dir else None
+    if step0 is not None and args.skip_train_if_ckpt:
+        print(f"restoring checkpoint step {step0}")
+        params = restore_checkpoint(args.ckpt_dir, step0, params)
+    else:
+        params, opt, _ = trainer.fit(params, opt,
+                                     ds.batches(args.batch, epochs=10_000))
+        if args.ckpt_dir:
+            path = save_checkpoint(args.ckpt_dir, args.steps, params)
+            print(f"saved checkpoint to {path}")
+
+    # ---- sample with every solver at matched NFE; score under the true law.
+    score_fn = make_score_fn(params, cfg)
+    key = jax.random.PRNGKey(42)
+    print(f"\n== generative perplexity under the TRUE Markov law "
+          f"(NFE={args.nfe}; data ppl="
+          f"{corpus.perplexity(data[:args.eval_batch]):.2f}) ==")
+    for method in ("euler", "tweedie", "tau_leaping", "theta_rk2",
+                   "theta_trapezoidal", "parallel_decoding"):
+        sampler = SamplerConfig.for_nfe(method, args.nfe, theta=0.4)
+        toks = jax.jit(
+            lambda k: sample_masked(k, proc, score_fn, sampler,
+                                    args.eval_batch, args.seq_len))(key)
+        ppl = corpus.perplexity(np.asarray(toks))
+        print(f"{method:20s} steps={sampler.n_steps:3d} NFE={sampler.nfe:3d} "
+              f"ppl={ppl:9.2f}")
+
+
+if __name__ == "__main__":
+    main()

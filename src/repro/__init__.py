@@ -1,0 +1,7 @@
+"""repro: production JAX framework for discrete diffusion with high-order solvers.
+
+Reproduces "Fast Solvers for Discrete Diffusion Models: Theory and Applications
+of High-Order Algorithms" (NeurIPS 2025): the theta-trapezoidal and theta-RK-2
+samplers as first-class features of a trainable, shardable, multi-pod framework.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,44 @@
+"""Registry of assigned architecture configs (+ paper-native models).
+
+Each module defines `CONFIG: ModelConfig` with the exact assigned settings and a
+`[source]` citation.  `get_config(name)` returns the full config;
+`get_config(name, reduced=True)` returns the CPU smoke-test variant.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "starcoder2_7b",
+    "internvl2_2b",
+    "deepseek_v3_671b",
+    "whisper_tiny",
+    "yi_34b",
+    "hymba_1_5b",
+    "starcoder2_15b",
+    "mamba2_780m",
+    "minitron_4b",
+    "grok_1_314b",
+    # paper-native models
+    "radd_small",
+    "maskgit_small",
+)
+
+
+def canonical(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    cname = canonical(name)
+    if cname not in ARCH_IDS:
+        raise ValueError(f"unknown arch {name!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{cname}")
+    cfg: ModelConfig = mod.CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

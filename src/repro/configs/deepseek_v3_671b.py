@@ -1,0 +1,30 @@
+"""DeepSeek-V3-671B [arXiv:2412.19437] — MLA + 1 shared + 256 routed top-8 MoE.
+
+Deviations (DESIGN.md §7): MTP head omitted; all 61 layers are MoE (the source
+keeps the first 3 dense).  MLA dims follow the technical report.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,  # MLA: per-head K derived from the shared latent
+    head_dim=128,
+    d_ff=18432,       # dense-path reference width (unused: all layers MoE)
+    vocab_size=129280,
+    attention="mla",
+    rope_theta=1e4,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    n_experts=256,
+    experts_per_tok=8,
+    n_shared_experts=1,
+    moe_d_ff=2048,
+    source="arXiv:2412.19437",
+)

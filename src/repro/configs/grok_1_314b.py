@@ -1,0 +1,20 @@
+"""Grok-1 314B [hf:xai-org/grok-1] — 8-expert top-2 MoE, GQA."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    attention="gqa",
+    rope_theta=1e4,
+    n_experts=8,
+    experts_per_tok=2,
+    moe_d_ff=32768,
+    source="hf:xai-org/grok-1",
+)

@@ -1,0 +1,26 @@
+"""Hymba-1.5B [arXiv:2411.13676] — parallel attention + mamba heads per block.
+
+Global full attention every 8th layer (+ last); others sliding-window 1024,
+mirroring the source's 3-global-layer design.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    attention="gqa",
+    rope_theta=1e4,
+    sliding_window=1024,
+    hybrid_global_every=8,
+    ssm_state=16,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    source="arXiv:2411.13676",
+)

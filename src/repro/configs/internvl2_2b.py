@@ -1,0 +1,24 @@
+"""InternVL2-2B [arXiv:2404.16821] — InternViT (STUB frontend) + InternLM2-1.8B LM.
+
+The vision encoder + MLP projector is a stub per the assignment carve-out:
+`input_specs()` supplies 256 pre-computed patch embeddings per image that the
+backbone prepends to the text sequence.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92553,
+    attention="gqa",
+    rope_theta=1e6,
+    frontend="vision",
+    frontend_tokens=256,
+    source="arXiv:2404.16821",
+)

@@ -1,0 +1,19 @@
+"""Mamba2-780M [arXiv:2405.21060] — attention-free SSD (state-space duality)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,           # mixer-only blocks (Mamba-2 has no separate MLP)
+    vocab_size=50280,
+    attention="none",
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=64,
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,21 @@
+"""MaskGIT-small stand-in [arXiv:2202.04200 / Besnier & Chen 2023].
+
+Masked image-token transformer over 16x16 = 256 VQ tokens (1024-entry codebook),
+the paper's Sec. 6.3 base model family, at trainable scale.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="maskgit-small",
+    family="dense",
+    n_layers=8,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=1024,
+    attention="gqa",
+    rope_theta=1e4,
+    source="arXiv:2202.04200",
+)

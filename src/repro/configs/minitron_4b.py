@@ -1,0 +1,18 @@
+"""Minitron-4B [arXiv:2407.14679] — pruned Nemotron; 256k vocab."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=9216,
+    vocab_size=256000,
+    mlp_kind="relu2",
+    attention="gqa",
+    rope_theta=1e4,
+    source="arXiv:2407.14679",
+)

@@ -1,0 +1,21 @@
+"""RADD-small-scale stand-in [arXiv:2406.03736] — the paper's own text model.
+
+GPT-2-small-like masked-diffusion denoiser used by the paper's Sec. 6.2; here a
+trainable configuration for the end-to-end examples and text benchmarks.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="radd-small",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=50257,
+    attention="gqa",
+    rope_theta=1e4,
+    source="arXiv:2406.03736 (RADD); arXiv:1908.? GPT-2 scale",
+)

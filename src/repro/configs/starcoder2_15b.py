@@ -1,0 +1,18 @@
+"""StarCoder2-15B [arXiv:2402.19173] — dense, GQA, RoPE."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp_kind="gelu",
+    attention="gqa",
+    rope_theta=1e5,
+    source="arXiv:2402.19173",
+)

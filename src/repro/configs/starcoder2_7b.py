@@ -1,0 +1,18 @@
+"""StarCoder2-7B [arXiv:2402.19173] — dense, GQA, RoPE, sliding-window-capable."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18432,
+    vocab_size=49152,
+    mlp_kind="gelu",
+    attention="gqa",
+    rope_theta=1e5,
+    source="arXiv:2402.19173",
+)

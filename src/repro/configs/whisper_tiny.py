@@ -1,0 +1,26 @@
+"""Whisper-tiny [arXiv:2212.04356] — encoder-decoder; mel+conv frontend STUB.
+
+`input_specs()` supplies 1500 pre-computed frame embeddings (30 s of audio after
+the conv stem) to the 4-layer encoder; the 4-layer decoder self+cross-attends.
+Decode shapes use a synthetic long decoder cache (the original caps at 448).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    mlp_kind="gelu",
+    attention="gqa",
+    rope_theta=1e4,  # deviation: RoPE instead of learned positions (noted in DESIGN)
+    encoder_layers=4,
+    encoder_seq=1500,
+    frontend="audio",
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,45 @@
+"""Core library: the paper's contribution — CTMC processes and high-order solvers."""
+from .schedules import (
+    NoiseSchedule,
+    constant_schedule,
+    cosine_schedule,
+    get_schedule,
+    loglinear_schedule,
+    theta_section,
+    time_grid,
+)
+from .process import DiffusionProcess, masked_process, uniform_process
+from .dense import (
+    DenseCTMC,
+    adaptive_uniformization_sample,
+    uniform_rate_matrix,
+    uniformization_sample,
+)
+from .solvers import (
+    METHODS,
+    TWO_STAGE,
+    SamplerConfig,
+    dense_step,
+    fhs_sample,
+    masked_step,
+    rk2_coefficients,
+    sample_dense,
+    sample_masked,
+    sample_uniform,
+    set_fused_jump,
+    trapezoidal_coefficients,
+    uniform_step,
+)
+from .losses import masked_cross_entropy, masked_elbo_loss, score_entropy_loss
+
+__all__ = [
+    "NoiseSchedule", "constant_schedule", "cosine_schedule", "get_schedule",
+    "loglinear_schedule", "theta_section", "time_grid",
+    "DiffusionProcess", "masked_process", "uniform_process",
+    "DenseCTMC", "adaptive_uniformization_sample", "uniform_rate_matrix",
+    "uniformization_sample",
+    "METHODS", "TWO_STAGE", "SamplerConfig", "dense_step", "fhs_sample",
+    "masked_step", "rk2_coefficients", "sample_dense", "sample_masked",
+    "sample_uniform", "set_fused_jump", "trapezoidal_coefficients", "uniform_step",
+    "masked_cross_entropy", "masked_elbo_loss", "score_entropy_loss",
+]

@@ -1,0 +1,103 @@
+"""Forward CTMC corruption processes for discrete diffusion.
+
+Two canonical forward processes (Sec. 2.1):
+
+* **masked / absorbing**: each position independently jumps to the MASK state with
+  rate sigma(t); once masked it stays masked.  p(masked at t) = 1 - exp(-sigma_bar).
+* **uniform**: each position jumps to a uniformly random state with rate sigma(t);
+  marginal interpolates toward the uniform distribution.
+
+Both factorize over positions, so corruption sampling is vectorized and exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import NoiseSchedule
+
+Array = jnp.ndarray
+
+ProcessKind = Literal["masked", "uniform"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionProcess:
+    """Forward corruption process on X = [vocab]^d (+ mask token if absorbing)."""
+
+    kind: ProcessKind
+    vocab_size: int  # number of *data* states S (mask token excluded)
+    schedule: NoiseSchedule
+
+    @property
+    def mask_id(self) -> int:
+        if self.kind != "masked":
+            raise ValueError("mask_id only defined for masked process")
+        return self.vocab_size
+
+    @property
+    def num_states(self) -> int:
+        return self.vocab_size + (1 if self.kind == "masked" else 0)
+
+    # ------------------------------------------------------------------ forward
+    def corrupt(self, key: jax.Array, x0: Array, t: Array) -> Array:
+        """Sample x_t ~ p_{t|0}(. | x0). t broadcasts against x0's batch dims.
+
+        x0: int32 tokens [...]; t: scalar or [batch] forward time.
+        """
+        t = jnp.asarray(t)
+        while t.ndim < x0.ndim:
+            t = t[..., None]
+        if self.kind == "masked":
+            p_mask = self.schedule.mask_prob(t)
+            u = jax.random.uniform(key, x0.shape)
+            return jnp.where(u < p_mask, self.mask_id, x0).astype(x0.dtype)
+        # uniform: with prob 1 - alpha(t) resample uniformly (exact marginal of the
+        # uniform-rate CTMC: p_t = alpha x0 + (1 - alpha) Unif).
+        alpha = self.schedule.alpha(t)
+        k_flip, k_val = jax.random.split(key)
+        u = jax.random.uniform(k_flip, x0.shape)
+        rand_tok = jax.random.randint(k_val, x0.shape, 0, self.vocab_size)
+        return jnp.where(u < 1.0 - alpha, rand_tok, x0).astype(x0.dtype)
+
+    def transition_prob(self, t_from: Array, t_to: Array) -> Array:
+        """For masked: P(token still unmasked at t_to | unmasked at t_from), t_to>t_from."""
+        a_to = self.schedule.alpha(t_to)
+        a_from = self.schedule.alpha(t_from)
+        return a_to / a_from
+
+    # --------------------------------------------------------------- backward
+    def backward_rates_masked(self, probs: Array, t: Array) -> Array:
+        """Per-target backward intensities for masked positions (Eq. 6 + Eq. 33).
+
+        probs: p_theta(y | x_UM) over data vocab, shape [..., vocab];
+        returns mu(y) = sigma(t) * score_scale(t) * probs, same shape.
+        """
+        lam = self.schedule.unmask_rate(t)
+        lam = jnp.asarray(lam)
+        while lam.ndim < probs.ndim:
+            lam = lam[..., None]
+        return lam * probs
+
+    def backward_rates_uniform(self, score: Array, t: Array) -> Array:
+        """Backward intensities for uniform diffusion.
+
+        score: estimated ratio s_t(x, y) = p_t(x^{l->y}) / p_t(x), [..., vocab];
+        forward rate Q(x->y) = sigma(t)/S for all y != x, so
+        mu(y) = sigma(t)/S * score(y).  The caller zeroes the y == x entry.
+        """
+        sig = jnp.asarray(self.schedule.sigma(t))
+        while sig.ndim < score.ndim:
+            sig = sig[..., None]
+        return (sig / self.vocab_size) * score
+
+
+def masked_process(vocab_size: int, schedule: NoiseSchedule) -> DiffusionProcess:
+    return DiffusionProcess(kind="masked", vocab_size=vocab_size, schedule=schedule)
+
+
+def uniform_process(vocab_size: int, schedule: NoiseSchedule) -> DiffusionProcess:
+    return DiffusionProcess(kind="uniform", vocab_size=vocab_size, schedule=schedule)

@@ -1,0 +1,167 @@
+"""Noise schedules for discrete diffusion models.
+
+A schedule is defined by the instantaneous rate ``sigma(t)`` and its integral
+``sigma_bar(t) = int_0^t sigma(s) ds``.  For masked (absorbing-state) diffusion the
+survival probability of a token at forward time ``t`` is
+
+    alpha(t) = exp(-sigma_bar(t)),        P(masked at t) = 1 - alpha(t),
+
+and for uniform-state diffusion with rate matrix ``Q = (1/S) E - I`` the marginal is
+
+    p_t = (1 - e^{-t}) / S * 1 + e^{-t} * p_0      (time directly = sigma_bar).
+
+The paper's text/image experiments (App. D.3/D.4) use the *log-linear* schedule
+
+    sigma(t) = (1 - eps) / (1 - (1 - eps) t),   sigma_bar(t) = -log(1 - (1 - eps) t)
+
+on t in (0, 1].  The toy model (Sec. 6.1) uses a constant-rate schedule on [0, T].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseSchedule:
+    """Continuous-time noise schedule.
+
+    Attributes:
+      name: schedule identifier.
+      t_max: time horizon T of the forward process (inference integrates backward
+        from t_max to ``eps_stop``).
+      sigma: instantaneous corruption rate sigma(t).
+      sigma_bar: integrated rate, sigma_bar(t) = int_0^t sigma.
+    """
+
+    name: str
+    t_max: float
+    sigma: Callable[[Array], Array]
+    sigma_bar: Callable[[Array], Array]
+    # Optional inverse of alpha(t) = exp(-sigma_bar(t)); required by the exact
+    # first-hitting sampler (FHS).  alpha_inv(a) returns t with alpha(t) = a.
+    alpha_inv: Callable[[Array], Array] | None = None
+
+    def alpha(self, t: Array) -> Array:
+        """Survival (unmasked) probability at forward time t."""
+        return jnp.exp(-self.sigma_bar(t))
+
+    def mask_prob(self, t: Array) -> Array:
+        return 1.0 - self.alpha(t)
+
+    def score_scale(self, t: Array) -> Array:
+        """RADD score factor e^{-sigma_bar} / (1 - e^{-sigma_bar})  (Eq. 33)."""
+        sb = self.sigma_bar(t)
+        # Numerically stable: e^{-sb}/(1-e^{-sb}) = 1/(e^{sb}-1) = 1/expm1(sb).
+        return 1.0 / jnp.expm1(sb)
+
+    def unmask_rate(self, t: Array) -> Array:
+        """Total backward unmask intensity at forward time t for masked diffusion.
+
+        lambda(t) = sigma(t) * e^{-sigma_bar(t)} / (1 - e^{-sigma_bar(t)}).
+        (The per-target intensity is lambda(t) * p_theta(y | x_UM).)
+        """
+        return self.sigma(t) * self.score_scale(t)
+
+
+def loglinear_schedule(eps: float = 1e-3) -> NoiseSchedule:
+    """Log-linear schedule used by RADD / the paper's text & image runs (Eq. 32)."""
+    one_m_eps = 1.0 - eps
+
+    def sigma(t: Array) -> Array:
+        return one_m_eps / (1.0 - one_m_eps * t)
+
+    def sigma_bar(t: Array) -> Array:
+        return -jnp.log1p(-one_m_eps * t)
+
+    def alpha_inv(a: Array) -> Array:
+        # alpha(t) = 1 - (1 - eps) t exactly for this schedule.
+        return (1.0 - a) / one_m_eps
+
+    return NoiseSchedule(
+        name="loglinear", t_max=1.0, sigma=sigma, sigma_bar=sigma_bar, alpha_inv=alpha_inv
+    )
+
+
+def constant_schedule(t_max: float = 12.0, rate: float = 1.0) -> NoiseSchedule:
+    """Constant-rate schedule; toy model of Sec. 6.1 uses t_max=12, rate=1."""
+
+    def sigma(t: Array) -> Array:
+        return rate * jnp.ones_like(jnp.asarray(t, dtype=jnp.float32))
+
+    def sigma_bar(t: Array) -> Array:
+        return rate * jnp.asarray(t, dtype=jnp.float32)
+
+    def alpha_inv(a: Array) -> Array:
+        return -jnp.log(a) / rate
+
+    return NoiseSchedule(
+        name="constant", t_max=t_max, sigma=sigma, sigma_bar=sigma_bar, alpha_inv=alpha_inv
+    )
+
+
+def cosine_schedule(eps: float = 1e-3) -> NoiseSchedule:
+    """Cosine masking schedule (MaskGIT-style): alpha(t) = cos(pi t / 2).
+
+    sigma_bar(t) = -log cos(pi t / 2); clipped near t=1 for stability.
+    """
+    t_cap = 1.0 - eps
+
+    def sigma_bar(t: Array) -> Array:
+        tc = jnp.minimum(jnp.asarray(t, jnp.float32), t_cap)
+        return -jnp.log(jnp.cos(jnp.pi * tc / 2.0))
+
+    def sigma(t: Array) -> Array:
+        tc = jnp.minimum(jnp.asarray(t, jnp.float32), t_cap)
+        return (jnp.pi / 2.0) * jnp.tan(jnp.pi * tc / 2.0)
+
+    return NoiseSchedule(name="cosine", t_max=1.0, sigma=sigma, sigma_bar=sigma_bar)
+
+
+_REGISTRY: dict[str, Callable[[], NoiseSchedule]] = {
+    "loglinear": loglinear_schedule,
+    "constant": constant_schedule,
+    "cosine": cosine_schedule,
+}
+
+
+def get_schedule(name: str, **kwargs) -> NoiseSchedule:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown schedule {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def time_grid(
+    n_steps: int,
+    t_max: float,
+    eps_stop: float,
+    kind: str = "uniform",
+) -> Array:
+    """Backward-time discretization: decreasing forward times t_max -> eps_stop.
+
+    Returns an array of n_steps+1 forward times ``t_0 = t_max > ... > t_N = eps_stop``
+    (the early-stopping time delta of Thm. 5.4).
+
+    kinds:
+      uniform  — arithmetic grid (paper's choice for all experiments);
+      quadratic — denser near the data end (t ~ eps_stop), an optional refinement.
+    """
+    if kind == "uniform":
+        return jnp.linspace(t_max, eps_stop, n_steps + 1)
+    if kind == "quadratic":
+        u = jnp.linspace(0.0, 1.0, n_steps + 1)
+        return t_max - (t_max - eps_stop) * u**2
+    raise ValueError(f"unknown grid kind {kind!r}")
+
+
+def theta_section(t0: Array, t1: Array, theta: float) -> Array:
+    """theta-section point between consecutive forward times t0 > t1.
+
+    In backward time s (= t_max - t), rho_n = (1-theta) s_n + theta s_{n+1};
+    in forward time that is  t0 - theta * (t0 - t1).
+    """
+    return t0 - theta * (t0 - t1)

@@ -1,0 +1,583 @@
+"""Inference solvers for discrete diffusion models.
+
+Implements the paper's contribution — the theta-RK-2 method (Alg. 1 / practical
+Alg. 4) and the theta-trapezoidal method (Alg. 2) — alongside the baselines it is
+compared against: the Euler method (Ou et al.), tau-leaping (Alg. 3, Campbell et
+al.), Tweedie tau-leaping (Lou et al.), MaskGIT-style parallel decoding (Chang et
+al.), and the exact first-hitting sampler (Zheng et al.).
+
+Two engines share the same solver definitions:
+
+* **dense** — small state space X = {0..S-1}; intensities are exact vectors from a
+  `DenseCTMC`.  Jump magnitudes nu in D = {-(S-1)..S-1} minus {0} are enumerated, and
+  tau-leaps apply Poisson jump counts per magnitude with clipping to X (the usual
+  tau-leaping caveat, cf. Cao et al. 2005b).
+* **factorized** — X = [vocab]^d masked (absorbing) or uniform diffusion driven by
+  a neural score network.  For the absorbing case a position jumps at most once
+  (mask -> token), so `P(K >= 1) = 1 - exp(-lam * dt)` Bernoulli thinning is the
+  *exact* law of the Poisson jump decision.
+
+Both theta-schemes share stage 1 (tau-leap of theta * dt with mu_{s_n}); they
+differ in stage 2 exactly as the paper specifies:
+
+  theta-RK-2 (Alg. 4):   from y_{s_n}, full dt, rate ((1-1/2th) mu_n + 1/2th mu*)_+
+  theta-trap (Alg. 2):   from y*_rho, (1-theta) dt, rate (a1 mu* - a2 mu_n)_+
+                         with a1 = 1/(2th(1-th)), a2 = (th^2+(1-th)^2)/(2th(1-th)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .dense import DenseCTMC
+from .process import DiffusionProcess
+from .schedules import time_grid, theta_section
+
+Array = jnp.ndarray
+
+# score_fn(tokens [B, L], t scalar) -> probs/scores [B, L, V] over the data vocab.
+ScoreFn = Callable[[Array, Array], Array]
+
+METHODS = (
+    "euler",
+    "tau_leaping",
+    "tweedie",
+    "theta_rk2",
+    "theta_trapezoidal",
+    "parallel_decoding",
+    "fhs",
+)
+
+# Methods that evaluate the score network twice per step.
+TWO_STAGE = ("theta_rk2", "theta_trapezoidal")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    method: str = "theta_trapezoidal"
+    n_steps: int = 64
+    theta: float = 0.5
+    t_stop: float = 1e-3
+    grid: str = "uniform"
+    # parallel decoding only:
+    pd_temperature: float = 1.0
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; have {METHODS}")
+        if not (0.0 < self.theta <= 1.0):
+            raise ValueError("theta must lie in (0, 1]")
+        if self.method == "theta_trapezoidal" and self.theta >= 1.0:
+            raise ValueError("theta-trapezoidal requires theta in (0, 1)")
+
+    @property
+    def nfe_per_step(self) -> int:
+        return 2 if self.method in TWO_STAGE else 1
+
+    @property
+    def nfe(self) -> int:
+        return self.n_steps * self.nfe_per_step
+
+    @staticmethod
+    def for_nfe(method: str, nfe: int, **kw) -> "SamplerConfig":
+        """Build a config with an *equalized* NFE budget (paper's comparison basis)."""
+        per = 2 if method in TWO_STAGE else 1
+        return SamplerConfig(method=method, n_steps=max(nfe // per, 1), **kw)
+
+
+def trapezoidal_coefficients(theta: float) -> tuple[float, float]:
+    """alpha_1 = 1/(2 th (1-th)), alpha_2 = (th^2 + (1-th)^2)/(2 th (1-th))."""
+    a1 = 1.0 / (2.0 * theta * (1.0 - theta))
+    a2 = ((1.0 - theta) ** 2 + theta**2) / (2.0 * theta * (1.0 - theta))
+    return a1, a2
+
+
+def rk2_coefficients(theta: float) -> tuple[float, float]:
+    """(1 - 1/(2 theta), 1/(2 theta)) — interpolation for th > 1/2, extrapolation below."""
+    return 1.0 - 1.0 / (2.0 * theta), 1.0 / (2.0 * theta)
+
+
+# ============================================================================ #
+# Dense engine
+# ============================================================================ #
+
+
+def _dense_rates_nu(ctmc: DenseCTMC, x: Array, t: Array) -> Array:
+    """Backward intensities indexed by jump magnitude nu.
+
+    Returns mu [B, 2S-1] where column j corresponds to nu = j - (S-1); the nu = 0
+    column is zero.  Entries with x + nu outside X are zero.
+    """
+    s = ctmc.n_states
+    rates_y = ctmc.backward_rates(x, t)  # [B, S] over target states
+    nu = jnp.arange(-(s - 1), s)  # [2S-1]
+    tgt = x[:, None] + nu[None, :]
+    valid = (tgt >= 0) & (tgt < s) & (nu[None, :] != 0)
+    tgt_c = jnp.clip(tgt, 0, s - 1)
+    mu = jnp.take_along_axis(rates_y, tgt_c, axis=1)
+    return jnp.where(valid, mu, 0.0)
+
+
+def _dense_apply_poisson(key: jax.Array, x: Array, mu_nu: Array, dt: Array,
+                         n_states: int) -> Array:
+    """tau-leap update x + sum_nu K_nu * nu with K_nu ~ Poisson(mu_nu dt), clipped."""
+    s = n_states
+    nu = jnp.arange(-(s - 1), s)
+    k = jax.random.poisson(key, jnp.maximum(mu_nu * dt, 0.0))
+    delta = (k * nu[None, :]).sum(axis=1)
+    return jnp.clip(x + delta, 0, s - 1).astype(x.dtype)
+
+
+def dense_step(
+    key: jax.Array,
+    ctmc: DenseCTMC,
+    x: Array,
+    t0: Array,
+    t1: Array,
+    method: str,
+    theta: float,
+) -> Array:
+    """One backward step t0 -> t1 (t1 < t0) of the chosen scheme on the dense engine."""
+    s = ctmc.n_states
+    dt = t0 - t1
+
+    if method == "euler":
+        # Linearized single-jump kernel: jump to y w.p. mu_y dt (clipped), else stay.
+        rates = ctmc.backward_rates(x, t0)  # [B, S]
+        p = rates * dt
+        p_stay = jnp.maximum(1.0 - p.sum(-1), 0.0)
+        p_full = jnp.concatenate([p, p_stay[:, None]], axis=1)
+        y = jax.random.categorical(key, jnp.log(p_full + 1e-30))
+        return jnp.where(y == s, x, y).astype(x.dtype)
+
+    if method == "tau_leaping":
+        mu = _dense_rates_nu(ctmc, x, t0)
+        return _dense_apply_poisson(key, x, mu, dt, s)
+
+    if method == "theta_rk2":
+        k1, k2 = jax.random.split(key)
+        mu_n = _dense_rates_nu(ctmc, x, t0)
+        rho = theta_section(t0, t1, theta)
+        x_star = _dense_apply_poisson(k1, x, mu_n, theta * dt, s)
+        mu_star = _dense_rates_nu(ctmc, x_star, rho)
+        c1, c2 = rk2_coefficients(theta)
+        rate = jnp.maximum(c1 * mu_n + c2 * mu_star, 0.0)  # practical Alg. 4 clip
+        return _dense_apply_poisson(k2, x, rate, dt, s)
+
+    if method == "theta_trapezoidal":
+        k1, k2 = jax.random.split(key)
+        mu_n = _dense_rates_nu(ctmc, x, t0)
+        rho = theta_section(t0, t1, theta)
+        x_star = _dense_apply_poisson(k1, x, mu_n, theta * dt, s)
+        mu_star = _dense_rates_nu(ctmc, x_star, rho)
+        a1, a2 = trapezoidal_coefficients(theta)
+        rate = jnp.maximum(a1 * mu_star - a2 * mu_n, 0.0)
+        return _dense_apply_poisson(k2, x_star, rate, (1.0 - theta) * dt, s)
+
+    raise ValueError(f"dense engine does not implement {method!r}")
+
+
+def sample_dense(
+    key: jax.Array,
+    ctmc: DenseCTMC,
+    config: SamplerConfig,
+    batch: int,
+) -> Array:
+    """Draw `batch` samples by integrating the backward CTMC with the given scheme."""
+    import numpy as np
+
+    # Host-side static grid (identical to time_grid, but remains a concrete numpy
+    # array even when sample_dense itself is traced under jit — needed to build
+    # the analytic tweedie kernels below).
+    if config.grid == "uniform":
+        times_np = np.linspace(ctmc.t_max, config.t_stop, config.n_steps + 1)
+    else:
+        u = np.linspace(0.0, 1.0, config.n_steps + 1) ** 2
+        times_np = ctmc.t_max - (ctmc.t_max - config.t_stop) * u
+    times = jnp.asarray(times_np, jnp.float32)
+    k_init, k_loop = jax.random.split(key)
+    x = ctmc.sample_prior(k_init, batch)
+
+    if config.method == "tweedie":
+        # Exact reverse transition kernels per step (analytic marginals).
+        kerns = np.stack(
+            [ctmc.reverse_kernel(float(times_np[i]), float(times_np[i + 1]))
+             for i in range(config.n_steps)]
+        )
+        kerns = jnp.asarray(kerns, jnp.float32)
+
+        def body(i, x):
+            logits = jnp.log(kerns[i][x] + 1e-30)
+            return jax.random.categorical(jax.random.fold_in(k_loop, i), logits).astype(x.dtype)
+
+        return jax.lax.fori_loop(0, config.n_steps, body, x)
+
+    def body(i, x):
+        return dense_step(
+            jax.random.fold_in(k_loop, i), ctmc, x, times[i], times[i + 1],
+            config.method, config.theta,
+        )
+
+    return jax.lax.fori_loop(0, config.n_steps, body, x)
+
+
+# ============================================================================ #
+# Factorized engine — masked (absorbing) diffusion
+# ============================================================================ #
+
+
+def _categorical_from_rates(key: jax.Array, rates: Array) -> Array:
+    """Sample argmax_y (log rates_y + Gumbel) — categorical proportional to rates."""
+    g = jax.random.gumbel(key, rates.shape)
+    return jnp.argmax(jnp.log(jnp.maximum(rates, 1e-30)) + g, axis=-1)
+
+
+# When True, two-intensity stage updates route through the fused Pallas kernel
+# (repro.kernels.fused_jump): one VMEM pass builds the extrapolated rate,
+# Poisson-thins, and draws the categorical.  The CPU fallback is mathematically
+# identical, so this is purely an execution-path switch.
+_FUSED_JUMP = False
+
+
+def set_fused_jump(enabled: bool) -> None:
+    global _FUSED_JUMP
+    _FUSED_JUMP = enabled
+
+
+def _unmask_update_fused(
+    key: jax.Array,
+    x: Array,
+    mu_a: Array,
+    mu_b: Optional[Array],
+    coeff_a: float,
+    coeff_b: float,
+    dt: Array,
+    mask_id: int,
+) -> Array:
+    """Fused-kernel path for rates = (coeff_a mu_a + coeff_b mu_b)_+ updates.
+
+    dt is traced (a time-grid element), and the kernel's dt is static — so dt is
+    folded into the intensities: rates*dt = ca*(mu_a*dt) + cb*(mu_b*dt).
+    """
+    from repro.kernels import ops  # local import: kernels are optional at core
+
+    b, l, v = mu_a.shape
+    k_g, k_u = jax.random.split(key)
+    gumbel = jax.random.gumbel(k_g, (b * l, v))
+    u = jax.random.uniform(k_u, (b * l,))
+    active = (x == mask_id).reshape(-1)
+    token, jump = ops.fused_jump_update(
+        (mu_a * dt).reshape(b * l, v),
+        None if mu_b is None else (mu_b * dt).reshape(b * l, v),
+        gumbel, u, active,
+        coeff_a=coeff_a, coeff_b=coeff_b, dt=1.0,
+    )
+    return jnp.where(jump.reshape(b, l), token.reshape(b, l), x).astype(x.dtype)
+
+
+def _unmask_update(
+    key: jax.Array,
+    x: Array,
+    rates: Array,
+    dt: Array,
+    mask_id: int,
+    exponential: bool = True,
+) -> Array:
+    """Shared jump applicator for masked diffusion.
+
+    rates: [B, L, V] per-target intensities (zero where position not masked);
+    a masked position unmasks with prob 1 - exp(-sum_y rates dt) (or the
+    linearized `sum_y rates * dt` when exponential=False, i.e. the Euler kernel),
+    revealing y ~ Categorical(rates).
+    """
+    k_jump, k_tok = jax.random.split(key)
+    lam = rates.sum(-1)
+    p_jump = 1.0 - jnp.exp(-lam * dt) if exponential else jnp.clip(lam * dt, 0.0, 1.0)
+    is_masked = x == mask_id
+    u = jax.random.uniform(k_jump, x.shape)
+    do_jump = is_masked & (u < p_jump)
+    y = _categorical_from_rates(k_tok, rates)
+    return jnp.where(do_jump, y, x).astype(x.dtype)
+
+
+def masked_step(
+    key: jax.Array,
+    process: DiffusionProcess,
+    score_fn: ScoreFn,
+    x: Array,
+    t0: Array,
+    t1: Array,
+    method: str,
+    theta: float,
+) -> Array:
+    """One backward step t0 -> t1 for masked diffusion with a neural score net."""
+    mask_id = process.mask_id
+    dt = t0 - t1
+    is_masked = (x == mask_id)[..., None]
+
+    if method in ("euler", "tau_leaping"):
+        probs = score_fn(x, t0)
+        rates = process.backward_rates_masked(probs, t0) * is_masked
+        if _FUSED_JUMP and method == "tau_leaping":
+            return _unmask_update_fused(key, x, rates, None, 1.0, 0.0, dt, mask_id)
+        return _unmask_update(key, x, rates, dt, mask_id,
+                              exponential=(method == "tau_leaping"))
+
+    if method == "tweedie":
+        # Exact per-position conditional: P(unmask on [t1, t0] | masked at t0)
+        #   = (alpha(t1) - alpha(t0)) / (1 - alpha(t0)).
+        probs = score_fn(x, t0)
+        a0, a1_ = process.schedule.alpha(t0), process.schedule.alpha(t1)
+        p_unmask = jnp.clip((a1_ - a0) / (1.0 - a0), 0.0, 1.0)
+        k_jump, k_tok = jax.random.split(key)
+        u = jax.random.uniform(k_jump, x.shape)
+        do_jump = (x == mask_id) & (u < p_unmask)
+        y = _categorical_from_rates(k_tok, probs * is_masked + 1e-30)
+        return jnp.where(do_jump, y, x).astype(x.dtype)
+
+    if method in TWO_STAGE:
+        k1, k2 = jax.random.split(key)
+        rho = theta_section(t0, t1, theta)
+        probs_n = score_fn(x, t0)
+        mu_n = process.backward_rates_masked(probs_n, t0) * is_masked
+        # Stage 1: tau-leap of theta * dt with mu_{s_n}.
+        x_star = _unmask_update(k1, x, mu_n, theta * dt, mask_id)
+        star_masked = (x_star == mask_id)[..., None]
+        probs_star = score_fn(x_star, rho)
+        # mu*(nu, y*): zero at positions already unmasked in the intermediate state
+        # (absorbing backward process admits no further jumps there).
+        mu_star = process.backward_rates_masked(probs_star, rho) * star_masked
+
+        if method == "theta_trapezoidal":
+            a1, a2 = trapezoidal_coefficients(theta)
+            if _FUSED_JUMP:
+                # Fused Pallas path: extrapolation + clip + thinning + draw.
+                return _unmask_update_fused(k2, x_star, mu_star, mu_n, a1, -a2,
+                                            (1.0 - theta) * dt, mask_id)
+            rate = jnp.maximum(a1 * mu_star - a2 * mu_n, 0.0)
+            # Stage 2 continues FROM the intermediate state for (1-theta) dt.
+            return _unmask_update(k2, x_star, rate, (1.0 - theta) * dt, mask_id)
+
+        c1, c2 = rk2_coefficients(theta)
+        rate = jnp.maximum(c1 * mu_n + c2 * mu_star, 0.0)
+        # Stage 2 restarts FROM y_{s_n} for the full dt (Alg. 4).  Positions that
+        # stage 1 unmasked contribute mu* = 0 there, exactly as in Prop. 4.2.
+        x_next = _unmask_update(k2, x, rate, dt, mask_id)
+        # Keep stage-1 reveals where stage 2 did not fire: Alg. 4's second line
+        # overwrites the state from y_{s_n}, so stage-1 jumps are discarded unless
+        # re-drawn; this matches the algorithm as written.
+        return x_next
+
+    raise ValueError(f"masked engine does not implement {method!r} as a step")
+
+
+def _maskgit_schedule(i: Array, n_steps: int, seq_len: Array) -> Array:
+    """arccos masking schedule: fraction still masked after step i+1."""
+    frac = jnp.arccos((i + 1.0) / n_steps) / (jnp.pi / 2.0)
+    return jnp.floor(frac * seq_len).astype(jnp.int32)
+
+
+def parallel_decoding_step(
+    key: jax.Array,
+    score_fn: ScoreFn,
+    x: Array,
+    t0: Array,
+    i: Array,
+    n_steps: int,
+    mask_id: int,
+    temperature: float,
+) -> Array:
+    """MaskGIT step: greedily commit the most confident tokens, re-mask the rest.
+
+    Confidence = log p(chosen) + temperature * (1 - (i+1)/N) * Gumbel (the "linear
+    randomization" strategy of Chang et al. / App. D.4).
+    """
+    k_tok, k_conf = jax.random.split(key)
+    b, l = x.shape
+    probs = score_fn(x, t0)
+    is_masked = x == mask_id
+    y = _categorical_from_rates(k_tok, probs)
+    chosen_p = jnp.take_along_axis(probs, y[..., None], axis=-1)[..., 0]
+    anneal = temperature * (1.0 - (i + 1.0) / n_steps)
+    conf = jnp.log(chosen_p + 1e-30) + anneal * jax.random.gumbel(k_conf, x.shape)
+    conf = jnp.where(is_masked, conf, jnp.inf)  # already-revealed stay revealed
+    n_masked_next = _maskgit_schedule(i, n_steps, is_masked.sum(-1))
+    # Keep masked the n_masked_next least-confident positions.
+    order = jnp.argsort(conf, axis=-1)  # ascending: least confident first
+    ranks = jnp.argsort(order, axis=-1)
+    keep_masked = ranks < n_masked_next[:, None]
+    x_full = jnp.where(is_masked, y, x)
+    return jnp.where(keep_masked & is_masked, mask_id, x_full).astype(x.dtype)
+
+
+def fhs_sample(
+    key: jax.Array,
+    process: DiffusionProcess,
+    score_fn: ScoreFn,
+    batch: int,
+    seq_len: int,
+    t_stop: float = 1e-3,
+    tokens_per_eval: int = 1,
+) -> Array:
+    """First-Hitting Sampler (Zheng et al. 2024): exact for masked diffusion.
+
+    Each position's unmask (first-hitting) time is sampled analytically, then
+    positions are revealed in decreasing forward time, `tokens_per_eval` per
+    score evaluation (=1 is exact; >1 is the grouped approximation).
+    NFE = ceil(seq_len / tokens_per_eval).
+    """
+    sched = process.schedule
+    if sched.alpha_inv is None:
+        raise ValueError("FHS requires schedule.alpha_inv")
+    mask_id = process.mask_id
+    k_times, k_loop = jax.random.split(key)
+    a_T = sched.alpha(jnp.asarray(sched.t_max))
+    u = jax.random.uniform(k_times, (batch, seq_len), minval=0.0, maxval=1.0)
+    # P(still masked at t | masked at T) = (1 - alpha(t)) / (1 - alpha(T));
+    # invert the CDF of the hit time.
+    alpha_hit = 1.0 - u * (1.0 - a_T)
+    t_hit = jnp.maximum(sched.alpha_inv(alpha_hit), t_stop)
+    order = jnp.argsort(-t_hit, axis=1)  # reveal later-hitting (larger t) first
+    x = jnp.full((batch, seq_len), mask_id, dtype=jnp.int32)
+    n_evals = -(-seq_len // tokens_per_eval)
+
+    def body(i, x):
+        cols = jax.lax.dynamic_slice_in_dim(order, i * tokens_per_eval,
+                                            tokens_per_eval, axis=1)
+        t_evals = jnp.take_along_axis(t_hit, cols, axis=1).max()
+        probs = score_fn(x, t_evals)
+        y = _categorical_from_rates(jax.random.fold_in(k_loop, i), probs)
+        vals = jnp.take_along_axis(y, cols, axis=1)
+        bidx = jnp.arange(x.shape[0])[:, None]
+        return x.at[bidx, cols].set(vals.astype(x.dtype))
+
+    return jax.lax.fori_loop(0, n_evals, body, x)
+
+
+def sample_masked(
+    key: jax.Array,
+    process: DiffusionProcess,
+    score_fn: ScoreFn,
+    config: SamplerConfig,
+    batch: int,
+    seq_len: int,
+) -> Array:
+    """Generate token sequences from an all-mask canvas with the chosen solver."""
+    mask_id = process.mask_id
+    if config.method == "fhs":
+        return fhs_sample(key, process, score_fn, batch, seq_len, config.t_stop)
+
+    times = time_grid(config.n_steps, process.schedule.t_max, config.t_stop, config.grid)
+    x = jnp.full((batch, seq_len), mask_id, dtype=jnp.int32)
+
+    if config.method == "parallel_decoding":
+        def body(i, x):
+            return parallel_decoding_step(
+                jax.random.fold_in(key, i), score_fn, x, times[i], i,
+                config.n_steps, mask_id, config.pd_temperature,
+            )
+        x = jax.lax.fori_loop(0, config.n_steps, body, x)
+        # Commit any stragglers with a final greedy fill.
+        probs = score_fn(x, times[-1])
+        y = jnp.argmax(probs, axis=-1)
+        return jnp.where(x == mask_id, y, x).astype(jnp.int32)
+
+    def body(i, x):
+        return masked_step(
+            jax.random.fold_in(key, i), process, score_fn, x,
+            times[i], times[i + 1], config.method, config.theta,
+        )
+
+    x = jax.lax.fori_loop(0, config.n_steps, body, x)
+    # Early stopping at t_stop can leave rare masks; greedy-fill them (standard
+    # practice, same for every method, so comparisons are unaffected).
+    probs = score_fn(x, times[-1])
+    y = jnp.argmax(probs, axis=-1)
+    return jnp.where(x == mask_id, y, x).astype(jnp.int32)
+
+
+# ============================================================================ #
+# Factorized engine — uniform-state diffusion
+# ============================================================================ #
+
+
+def _uniform_update(key: jax.Array, x: Array, rates: Array, dt: Array,
+                    exponential: bool = True) -> Array:
+    """Jump applicator for uniform diffusion: positions may jump repeatedly, but we
+    apply at most one target change per step (the standard factorized-tau-leaping
+    practice; multi-jump composition is ill-defined on categorical fibers)."""
+    k_jump, k_tok = jax.random.split(key)
+    lam = rates.sum(-1)
+    p_jump = 1.0 - jnp.exp(-lam * dt) if exponential else jnp.clip(lam * dt, 0.0, 1.0)
+    u = jax.random.uniform(k_jump, x.shape)
+    y = _categorical_from_rates(k_tok, rates)
+    return jnp.where(u < p_jump, y, x).astype(x.dtype)
+
+
+def uniform_step(
+    key: jax.Array,
+    process: DiffusionProcess,
+    score_fn: ScoreFn,
+    x: Array,
+    t0: Array,
+    t1: Array,
+    method: str,
+    theta: float,
+) -> Array:
+    """One backward step for factorized uniform-state diffusion.
+
+    score_fn returns ratio estimates s_t(x)[..., y] ~ p_t(x^{l->y}) / p_t(x);
+    the current token's own entry is zeroed (no self-jump).
+    """
+    dt = t0 - t1
+    v = process.vocab_size
+
+    def rates_at(xs: Array, t: Array) -> Array:
+        sc = score_fn(xs, t)
+        r = process.backward_rates_uniform(sc, t)
+        self_hot = jax.nn.one_hot(xs, v, dtype=r.dtype)
+        return r * (1.0 - self_hot)
+
+    if method in ("euler", "tau_leaping"):
+        return _uniform_update(key, x, rates_at(x, t0), dt,
+                               exponential=(method == "tau_leaping"))
+
+    if method in TWO_STAGE:
+        k1, k2 = jax.random.split(key)
+        rho = theta_section(t0, t1, theta)
+        mu_n = rates_at(x, t0)
+        x_star = _uniform_update(k1, x, mu_n, theta * dt)
+        mu_star = rates_at(x_star, rho)
+        if method == "theta_trapezoidal":
+            a1, a2 = trapezoidal_coefficients(theta)
+            rate = jnp.maximum(a1 * mu_star - a2 * mu_n, 0.0)
+            return _uniform_update(k2, x_star, rate, (1.0 - theta) * dt)
+        c1, c2 = rk2_coefficients(theta)
+        rate = jnp.maximum(c1 * mu_n + c2 * mu_star, 0.0)
+        return _uniform_update(k2, x, rate, dt)
+
+    raise ValueError(f"uniform engine does not implement {method!r}")
+
+
+def sample_uniform(
+    key: jax.Array,
+    process: DiffusionProcess,
+    score_fn: ScoreFn,
+    config: SamplerConfig,
+    batch: int,
+    seq_len: int,
+) -> Array:
+    times = time_grid(config.n_steps, process.schedule.t_max, config.t_stop, config.grid)
+    k_init, k_loop = jax.random.split(key)
+    x = jax.random.randint(k_init, (batch, seq_len), 0, process.vocab_size)
+
+    def body(i, x):
+        return uniform_step(
+            jax.random.fold_in(k_loop, i), process, score_fn, x,
+            times[i], times[i + 1], config.method, config.theta,
+        )
+
+    return jax.lax.fori_loop(0, config.n_steps, body, x)

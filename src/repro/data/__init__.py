@@ -1,0 +1,5 @@
+from .synthetic import MarkovText, PottsImages, frechet_distance
+from .pipeline import TokenDataset, prefetch, shard_batch
+
+__all__ = ["MarkovText", "PottsImages", "frechet_distance", "TokenDataset",
+           "prefetch", "shard_batch"]

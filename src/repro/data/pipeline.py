@@ -1,0 +1,55 @@
+"""Sharding-aware batching pipeline.
+
+A thin deterministic iterator over a token corpus (numpy array or generator)
+that yields device-ready, mesh-sharded batches.  Host-side shuffling is
+seeded and epoch-stable so multi-host launches stay in lockstep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenDataset:
+    tokens: np.ndarray  # [num_seqs, seq_len] int32
+    seed: int = 0
+
+    def __len__(self) -> int:
+        return self.tokens.shape[0]
+
+    def batches(self, batch_size: int, epochs: int = 1,
+                drop_remainder: bool = True) -> Iterator[np.ndarray]:
+        n = len(self)
+        for epoch in range(epochs):
+            rng = np.random.default_rng(self.seed + epoch)
+            order = rng.permutation(n)
+            stop = (n // batch_size) * batch_size if drop_remainder else n
+            for lo in range(0, stop, batch_size):
+                idx = order[lo:lo + batch_size]
+                yield self.tokens[idx]
+
+
+def shard_batch(batch: np.ndarray, sharding: Optional[jax.sharding.Sharding] = None):
+    """Move a host batch onto devices with the given (batch-dim) sharding."""
+    arr = jnp.asarray(batch)
+    if sharding is not None:
+        arr = jax.device_put(arr, sharding)
+    return arr
+
+
+def prefetch(iterator: Iterator, sharding=None, depth: int = 2):
+    """Simple software pipelining: keep `depth` device batches in flight."""
+    import collections
+
+    queue = collections.deque()
+    for item in iterator:
+        queue.append(shard_batch(item, sharding))
+        if len(queue) >= depth:
+            yield queue.popleft()
+    while queue:
+        yield queue.popleft()

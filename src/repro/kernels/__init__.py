@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+- fused_jump: the paper-specific sampler stage (extrapolated rate construction
+  + Poisson thinning + Gumbel categorical, fused over vocab tiles in VMEM);
+- flash_attention: blockwise online-softmax attention for the backbones.
+
+Each kernel has a jit'd wrapper in ops.py and a pure-jnp oracle in ref.py.
+"""
+from .ops import attention, fused_jump_update, on_tpu
+
+__all__ = ["attention", "fused_jump_update", "on_tpu"]

@@ -1,0 +1,121 @@
+"""Blockwise online-softmax attention Pallas TPU kernel (causal / sliding window).
+
+Standard flash-attention structure adapted to TPU tiling: grid over
+(batch*heads, Q blocks, KV blocks) with KV innermost; VMEM scratch carries the
+online-softmax state (m, l, acc) across KV blocks.  Q/K blocks are 128-aligned
+so the QK^T and PV matmuls land on the MXU.
+
+This is the TPU execution path for `repro.models.attention.attention_core`;
+`ref.flash_attention_ref` is the oracle, and the per-kernel tests sweep
+shapes/dtypes in interpret mode on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+Array = jnp.ndarray
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_acc, l_acc, acc,
+            *, scale: float, causal: bool, window: int,
+            block_q: int, block_k: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [block_q, d]
+    k = k_ref[0].astype(jnp.float32)  # [block_k, d]
+    v = v_ref[0].astype(jnp.float32)  # [block_k, dv]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < seq_k
+    if causal:
+        mask &= k_pos <= q_pos
+    if window and window > 0:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_acc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_acc[...] = l_acc[...] * corr + p.sum(axis=1)
+    acc[...] = acc[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_acc[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = (acc[...] / jnp.maximum(l_acc[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(
+    q: Array,  # [B, H, S, D]
+    k: Array,  # [B, H, T, D]
+    v: Array,  # [B, H, T, Dv]
+    *,
+    causal: bool = False,
+    window: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> Array:
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    block_q = min(block_q, max(8, s))
+    block_k = min(block_k, max(8, t))
+    n_q = -(-s // block_q)
+    n_k = -(-t // block_k)
+    pad_q = n_q * block_q - s
+    pad_k = n_k * block_k - t
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else v
+    qf = qp.reshape(b * h, n_q * block_q, d)
+    kf = kp.reshape(b * h, n_k * block_k, d)
+    vf = vp.reshape(b * h, n_k * block_k, dv)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_k=t)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_k, dv), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, n_q * block_q, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, n_q * block_q, dv)[:, :, :s]

@@ -1,0 +1,57 @@
+"""jit'd public wrappers for the Pallas kernels with automatic dispatch.
+
+On TPU the compiled kernels run natively; elsewhere (this CPU container) the
+wrappers either run the kernels in interpret mode (`force_kernel=True`, used by
+tests) or fall back to the pure-jnp oracle — identical math, XLA-fused.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .fused_jump import fused_jump
+
+Array = jnp.ndarray
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_jump_update(
+    mu_a: Array,
+    mu_b: Optional[Array],
+    gumbel: Array,
+    u: Array,
+    active: Array,
+    *,
+    coeff_a: float = 1.0,
+    coeff_b: float = 0.0,
+    dt: float = 1.0,
+    force_kernel: bool = False,
+) -> tuple[Array, Array]:
+    """Solver-stage jump update: (token, jump) per position. See fused_jump.py."""
+    if on_tpu() or force_kernel:
+        return fused_jump(mu_a, mu_b, gumbel, u, active, coeff_a=coeff_a,
+                          coeff_b=coeff_b, dt=dt, interpret=not on_tpu())
+    return ref.fused_jump_ref(mu_a, mu_b, coeff_a, coeff_b, dt, gumbel, u, active)
+
+
+def attention(
+    q: Array, k: Array, v: Array,
+    *,
+    causal: bool = False,
+    window: int = 0,
+    scale: Optional[float] = None,
+    force_kernel: bool = False,
+) -> Array:
+    """[B, H, S, D] attention via the flash kernel (TPU) or the oracle."""
+    if on_tpu() or force_kernel:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, interpret=not on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   scale=scale)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each kernel in this package has exactly one reference implementation here; the
+per-kernel tests sweep shapes/dtypes and assert_allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def fused_jump_ref(
+    mu_a: Array,  # [T, V] stage intensities (e.g. alpha1 * mu*_rho)
+    mu_b: Optional[Array],  # [T, V] or None (e.g. alpha2 * mu_{s_n})
+    coeff_a: float,
+    coeff_b: float,
+    dt: float,
+    gumbel: Array,  # [T, V]
+    u: Array,  # [T]
+    active: Array,  # [T] bool: position may jump (masked position)
+) -> tuple[Array, Array]:
+    """Reference for the fused theta-jump kernel.
+
+    rates   = relu(coeff_a * mu_a + coeff_b * mu_b)         (extrapolated rate)
+    lam     = sum_v rates
+    jump    = active & (u < 1 - exp(-lam * dt))             (exact thinning)
+    token   = argmax_v log(rates) + gumbel                  (categorical ~ rates)
+
+    Returns (token [T] int32, jump [T] bool).
+    """
+    mu = coeff_a * mu_a.astype(jnp.float32)
+    if mu_b is not None:
+        mu = mu + coeff_b * mu_b.astype(jnp.float32)
+    rates = jnp.maximum(mu, 0.0)
+    lam = rates.sum(axis=-1)
+    p_jump = 1.0 - jnp.exp(-lam * dt)
+    jump = active & (u < p_jump)
+    logr = jnp.log(jnp.maximum(rates, 1e-30))
+    token = jnp.argmax(logr + gumbel.astype(jnp.float32), axis=-1).astype(jnp.int32)
+    return token, jump
+
+
+def flash_attention_ref(
+    q: Array,  # [B, H, S, D]
+    k: Array,  # [B, H, T, D]
+    v: Array,  # [B, H, T, D]
+    causal: bool = False,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> Array:
+    """Reference softmax attention with optional causal/sliding-window mask."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    s, t = logits.shape[-2:]
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kp <= qp
+    if window and window > 0:
+        mask &= qp - kp < window
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,7 @@
+"""Launchers: mesh construction, multi-pod dry-run, roofline, train/serve CLIs.
+
+NOTE: do not import dryrun from here — it sets XLA_FLAGS at import time.
+"""
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

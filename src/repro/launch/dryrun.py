@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import: jax locks the device count at first init.
+#
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+# For each combination this script:
+#   1. builds ShapeDtypeStruct inputs and shardings (launch/specs.py),
+#   2. jits with in/out shardings against the production mesh,
+#   3. `.lower().compile()` — success proves the distribution config is coherent,
+#   4. prints `compiled.memory_analysis()` (fits-per-device evidence) and
+#      `compiled.cost_analysis()` (FLOPs/bytes for §Roofline),
+#   5. parses collective bytes from the partitioned HLO,
+#   6. appends one JSON record per combo to the artifact file.
+
+# Usage:
+#   python -m repro.launch.dryrun --arch starcoder2-7b --shape decode_32k
+#   python -m repro.launch.dryrun --all --multi-pod both --out artifacts/dryrun.jsonl
+# (no `from __future__` here: the XLA_FLAGS assignment must stay line 1.)
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze_compiled, model_flops_for
+from repro.launch.specs import SHAPES, abstract_params, build_job, shape_supported
+
+ASSIGNED = [a for a in ARCH_IDS if a not in ("radd_small", "maskgit_small")]
+
+
+def _cost_of(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    from repro.launch.roofline import parse_collectives
+
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll.total_bytes),
+        "coll_counts": coll.counts,
+        "coll_by_kind": coll.bytes_by_kind,
+    }
+
+
+def probe_costs(arch: str, shape_name: str, mesh) -> dict:
+    """Layer-exact per-device costs via unrolled 1- and 2-layer probes.
+
+    XLA's cost analysis counts while-loop (lax.scan) bodies once regardless of
+    trip count, so the full-model numbers undercount.  We lower fully-unrolled
+    probes with L=1 and L=2, take the marginal per-layer cost, and extrapolate:
+        total(L) = cost(L=1) + (L - 1) * (cost(L=2) - cost(L=1)).
+    """
+    import dataclasses as dc
+
+    base = get_config(arch)
+    costs = []
+    for n in (1, 2):
+        cfg_p = dc.replace(
+            base, n_layers=n, unroll_layers=True,
+            encoder_layers=min(base.encoder_layers, n) if base.is_encdec else 0,
+        )
+        job = build_job(cfg_p, shape_name, mesh)
+        with mesh:
+            compiled = jax.jit(
+                job.fn, in_shardings=job.in_shardings,
+                out_shardings=job.out_shardings,
+                donate_argnums=job.donate_argnums,
+            ).lower(*job.args).compile()
+        costs.append(_cost_of(compiled))
+    L = base.n_layers
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        # Tiny decode steps can show negative marginals from fusion noise.
+        marginal = max(costs[1][key] - costs[0][key], 0.0)
+        out[key] = costs[0][key] + (L - 1) * marginal
+        out[f"{key}_per_layer"] = marginal
+    out["coll_counts_2l"] = costs[1]["coll_counts"]
+    out["coll_by_kind_2l"] = costs[1]["coll_by_kind"]
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+            with_probes: bool = True) -> dict:
+    cfg = get_config(arch)
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+    }
+    ok, reason = shape_supported(cfg, shape_name)
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        return record
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        job = build_job(cfg, shape_name, mesh)
+        with mesh:
+            jitted = jax.jit(job.fn, in_shardings=job.in_shardings,
+                             out_shardings=job.out_shardings,
+                             donate_argnums=job.donate_argnums)
+            lowered = jitted.lower(*job.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_dict = {}
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    mem_dict[attr] = int(v)
+        if verbose:
+            print(f"  memory_analysis: {mem_dict}")
+
+        params_specs, _ = abstract_params(cfg)
+        mf = model_flops_for(cfg, params_specs, SHAPES[shape_name])
+        hlo = compiled.as_text()
+        raw_roof = analyze_compiled(compiled, record["n_devices"],
+                                    model_flops=mf, hlo_text=hlo)
+        if verbose:
+            print(f"  raw cost_analysis (scan bodies counted once): "
+                  f"flops={raw_roof.flops_per_device:.3e} "
+                  f"bytes={raw_roof.hbm_bytes_per_device:.3e}")
+        # Layer-exact roofline from unrolled probes.
+        probes = None
+        if with_probes:
+            try:
+                probes = probe_costs(arch, shape_name, mesh)
+            except Exception as pe:  # noqa: BLE001
+                probes = {"error": f"{type(pe).__name__}: {pe}"}
+        if probes and "error" not in probes:
+            from repro.launch.roofline import Roofline
+
+            roof = Roofline(
+                flops_per_device=probes["flops"],
+                hbm_bytes_per_device=probes["bytes"],
+                collective_bytes_per_device=probes["coll_bytes"],
+                n_devices=record["n_devices"],
+                model_flops=mf,
+            )
+        else:
+            roof = raw_roof
+        from repro.launch.roofline import parse_collectives
+
+        coll = parse_collectives(hlo)
+        record.update(
+            status="ok",
+            desc=job.static_desc,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=mem_dict,
+            roofline=roof.as_dict(),
+            roofline_raw=raw_roof.as_dict(),
+            probes=probes,
+            collectives={"counts": coll.counts, "bytes": coll.bytes_by_kind},
+            hlo_size=len(hlo),
+        )
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun.jsonl")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_ok = n_skip = n_err = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in pods:
+                    mesh_name = "2x16x16" if mp else "16x16"
+                    print(f"== {arch} x {shape} x {mesh_name}", flush=True)
+                    rec = run_one(arch, shape, mp)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    if rec["status"] == "ok":
+                        n_ok += 1
+                        r = rec["roofline"]
+                        print(f"  OK lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                              f"dominant={r['dominant']} "
+                              f"compute={r['compute_s']:.2e}s "
+                              f"memory={r['memory_s']:.2e}s "
+                              f"collective={r['collective_s']:.2e}s", flush=True)
+                    elif rec["status"] == "skipped":
+                        n_skip += 1
+                        print(f"  SKIP: {rec['reason']}", flush=True)
+                    else:
+                        n_err += 1
+                        print(f"  ERROR: {rec['error']}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

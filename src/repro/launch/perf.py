@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import (same contract as dryrun.py).
+#
+# §Perf probe: lower one (arch x shape) with a named variant and print the
+# three roofline terms + per-kind collective bytes — the measurement half of
+# the hypothesis -> change -> measure loop in EXPERIMENTS.md §Perf.
+#
+# Usage:
+#   python -m repro.launch.perf --arch starcoder2_7b --shape train_4k \
+#       --variant heads_padded --out artifacts/perf.jsonl
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline, model_flops_for, parse_collectives
+from repro.launch.specs import SHAPES, abstract_params, build_job
+
+# variant name -> (ModelConfig overrides, build_job kwargs)
+VARIANTS = {
+    "baseline": ({}, {}),
+    # H: non-divisible head counts leave attention replicated on the model
+    # axis; padded activation sharding recovers ~model_parallel/pad_waste.
+    "heads_padded": ({"shard_attn_heads": True}, {}),
+    # H: train memory term is activation-dominated; grad accumulation divides
+    # the live activation set by the microbatch count.
+    "microbatch4": ({}, {"microbatch": 4}),
+    "microbatch8": ({}, {"microbatch": 8}),
+    "heads_padded_mb4": ({"shard_attn_heads": True}, {"microbatch": 4}),
+    # H: long-context decode memory scales with the SWA window.
+    "window4k": ({"long_context_window": 4096}, {}),
+    "window16k": ({"long_context_window": 16384}, {}),
+    # H: the MoE combine all-reduce dominates the collective term; bf16 halves
+    # its bytes, and a batch-sharded combine constraint turns it into a
+    # reduce-scatter (bytes / model_parallelism).
+    "moe_bf16_combine": ({"moe_bf16_combine": True}, {}),
+    "moe_rs_combine": ({"moe_constrain_combine": True}, {}),
+    "moe_both": ({"moe_bf16_combine": True, "moe_constrain_combine": True}, {}),
+    # H (from HLO diagnosis): XLA materializes the cross-shard expert gather as
+    # a zero-padded (E, C, D) all-reduce; sharding the selection over the model
+    # axis + replicating activations makes gathers local (one all-gather).
+    "moe_shard_gather": ({"moe_shard_gather": True}, {}),
+    "moe_shard_gather_rs": ({"moe_shard_gather": True,
+                             "moe_constrain_combine": True}, {}),
+}
+
+
+def measure(arch: str, shape: str, variant: str, multi_pod: bool = False,
+            unroll_probe: bool = True) -> dict:
+    import dataclasses as dc
+
+    cfg = get_config(arch)
+    overrides, job_kw = VARIANTS[variant]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = 512 if multi_pod else 256
+
+    record = {"arch": arch, "shape": shape, "variant": variant,
+              "mesh": "2x16x16" if multi_pod else "16x16"}
+    t0 = time.time()
+
+    # Full compile: memory analysis + compile success.
+    job = build_job(cfg, shape, mesh, overrides=overrides, **job_kw)
+    with mesh:
+        compiled = jax.jit(job.fn, in_shardings=job.in_shardings,
+                           out_shardings=job.out_shardings,
+                           donate_argnums=job.donate_argnums
+                           ).lower(*job.args).compile()
+    mem = compiled.memory_analysis()
+    record["memory"] = {
+        a: int(getattr(mem, a)) for a in
+        ("argument_size_in_bytes", "output_size_in_bytes",
+         "temp_size_in_bytes", "alias_size_in_bytes") if getattr(mem, a, None)
+        is not None}
+
+    # Layer-exact cost probes (unrolled L=1, L=2).
+    costs = []
+    for n in (1, 2):
+        ov = dict(overrides, n_layers=n, unroll_layers=True)
+        if cfg.is_encdec:
+            ov["encoder_layers"] = min(cfg.encoder_layers, n)
+        jb = build_job(cfg, shape, mesh, overrides=ov, **job_kw)
+        with mesh:
+            cp = jax.jit(jb.fn, in_shardings=jb.in_shardings,
+                         out_shardings=jb.out_shardings,
+                         donate_argnums=jb.donate_argnums
+                         ).lower(*jb.args).compile()
+        c = cp.cost_analysis() or {}
+        if isinstance(c, list):
+            c = c[0] if c else {}
+        coll = parse_collectives(cp.as_text())
+        costs.append({"flops": float(c.get("flops", 0.0)),
+                      "bytes": float(c.get("bytes accessed", 0.0)),
+                      "coll": float(coll.total_bytes),
+                      "coll_by_kind": coll.bytes_by_kind,
+                      "coll_counts": coll.counts})
+    L = cfg.n_layers
+    tot = {k: costs[0][k] + (L - 1) * max(costs[1][k] - costs[0][k], 0.0)
+           for k in ("flops", "bytes", "coll")}
+    # Gradient accumulation wraps the step in a scan over microbatches; XLA
+    # cost analysis counts that body once, so scale by the trip count.
+    mb = job_kw.get("microbatch", 1)
+    if mb > 1:
+        tot = {k: v * mb for k, v in tot.items()}
+    params_specs, _ = abstract_params(cfg)
+    roof = Roofline(tot["flops"], tot["bytes"], tot["coll"], n_dev,
+                    model_flops=model_flops_for(cfg, params_specs, SHAPES[shape]))
+    record["roofline"] = roof.as_dict()
+    record["coll_by_kind_2l"] = costs[1]["coll_by_kind"]
+    record["coll_counts_2l"] = costs[1]["coll_counts"]
+    record["wall_s"] = round(time.time() - t0, 1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/perf.jsonl")
+    args = ap.parse_args()
+    rec = measure(args.arch, args.shape, args.variant, args.multi_pod)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    r = rec["roofline"]
+    print(json.dumps({
+        "variant": args.variant,
+        "dominant": r["dominant"],
+        "compute_s": r["compute_s"],
+        "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"],
+        "useful_flops": r["useful_flops_ratio"],
+        "temp_gb": rec["memory"].get("temp_size_in_bytes", 0) / 2**30,
+        "coll_by_kind_2l": rec["coll_by_kind_2l"],
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

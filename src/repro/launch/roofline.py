@@ -1,0 +1,202 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Per (arch x shape x mesh) we derive the three-term roofline of EXPERIMENTS.md
+§Roofline from the *partitioned, optimized* HLO:
+
+    compute    = flops_per_device / PEAK_FLOPS        [s]
+    memory     = hbm_bytes_per_device / HBM_BW        [s]
+    collective = collective_bytes_per_device / ICI_BW [s]
+
+`compiled.cost_analysis()` supplies per-device flops / bytes accessed;
+collective bytes are parsed from `compiled.as_text()` by summing the result
+shapes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (cost_analysis does not expose them).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shape literal, e.g. bf16[16,4096,4608]{2,1,0} or f32[] or u32[2]
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in partitioned HLO."""
+    counts: dict = {k: 0 for k in _COLLECTIVES}
+    byts: dict = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # e.g.  %all-reduce.5 = f32[128]{0} all-reduce(...), replica_groups=...
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.rstrip("-start").rstrip("-done") not in _COLLECTIVES and \
+                op not in _COLLECTIVES:
+            # async forms: all-gather-start etc.
+            base = op
+            for suffix in ("-start", "-done", "-update"):
+                if base.endswith(suffix):
+                    base = base[: -len(suffix)]
+            if base not in _COLLECTIVES:
+                continue
+            op = base
+        else:
+            for suffix in ("-start", "-done", "-update"):
+                if op.endswith(suffix):
+                    op = op[: -len(suffix)]
+        if op.endswith("-done"):
+            continue  # counted at -start
+        result = m.group(1)
+        total = sum(shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(result))
+        counts[op] += 1
+        byts[op] += total
+    return CollectiveStats(counts=counts, bytes_by_kind=byts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    n_devices: int
+    model_flops: float = 0.0  # 6 * N_active * D (useful flops, global)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "n_devices": self.n_devices,
+        }
+
+
+def analyze_compiled(compiled, n_devices: int, model_flops: float = 0.0,
+                     hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+    return Roofline(
+        flops_per_device=flops,
+        hbm_bytes_per_device=byts,
+        collective_bytes_per_device=float(coll.total_bytes),
+        n_devices=n_devices,
+        model_flops=model_flops,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# MODEL_FLOPS = 6 * N_active * D (paper-standard accounting)
+# --------------------------------------------------------------------------- #
+def active_param_count(cfg, params_specs) -> int:
+    """Active parameters per token: MoE counts shared + top-k of routed."""
+    import jax
+
+    total = sum(int(_size(p)) for p in jax.tree_util.tree_leaves(params_specs))
+    if not cfg.uses_moe:
+        return total
+    # Remove the routed-expert mass and add back only the activated fraction.
+    routed = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_specs)[0]
+    for path, leaf in flat:
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        if "moe" in keys and any(k in ("w_gate", "w_up", "w_down") for k in keys):
+            routed += int(_size(leaf))
+    active_routed = routed * cfg.experts_per_tok / max(cfg.n_experts, 1)
+    return int(total - routed + active_routed)
+
+
+def _size(leaf) -> int:
+    n = 1
+    for d in leaf.shape:
+        n *= d
+    return n
+
+
+def model_flops_for(cfg, params_specs, shape_info: dict) -> float:
+    """6 * N_active * tokens for train; 2 * N_active * tokens for inference."""
+    n_active = active_param_count(cfg, params_specs)
+    kind = shape_info["kind"]
+    if kind == "train":
+        tokens = shape_info["seq_len"] * shape_info["global_batch"]
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape_info["seq_len"] * shape_info["global_batch"]
+        # theta-trapezoidal sampler step = 2 score evaluations.
+        return 2.0 * n_active * tokens * 2
+    # decode: one token per sequence.
+    return 2.0 * n_active * shape_info["global_batch"]

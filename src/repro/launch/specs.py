@@ -1,0 +1,236 @@
+"""Input specs and lowered-step builders for every (architecture x input shape).
+
+The four assigned input shapes:
+
+    train_4k     seq 4,096   global_batch 256   -> train_step
+    prefill_32k  seq 32,768  global_batch 32    -> sampler_step (one
+                 theta-trapezoidal step = 2 score evals + fused jump updates;
+                 the paper's technique is the serving workload)
+    decode_32k   seq 32,768  global_batch 128   -> serve_step (1 token, KV cache)
+    long_500k    seq 524,288 global_batch 1     -> serve_step, sub-quadratic
+                 (SSM/hybrid native; dense archs via the sliding-window variant;
+                 whisper skipped -- DESIGN.md §Skips)
+
+Everything here returns ShapeDtypeStructs (weak-type-correct, shardable, no
+allocation) plus matching NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import DiffusionProcess, loglinear_schedule, masked_process, masked_step
+from repro.models import decode_step, denoise_logits, init_decode_state, init_params
+from repro.models.config import ModelConfig
+from repro.models.frontends import frontend_specs, text_seq_len
+from repro.serve import make_score_fn
+from repro.sharding.rules import (
+    batch_spec,
+    logical_to_spec,
+    param_shardings,
+    rules_for,
+)
+from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+Params = Any
+
+SHAPES = {
+    "train_4k": dict(seq_len=4_096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32_768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32_768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524_288, global_batch=1, kind="decode",
+                      long_context=True),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(supported, reason). See DESIGN.md §Skips."""
+    if shape_name == "long_500k" and cfg.is_encdec:
+        return False, ("enc-dec over <=30s audio has no 500k-token decode; "
+                       "no SWA variant in the source model")
+    return True, ""
+
+
+def _param_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct params tree, logical axes tree) without allocation.
+
+    eval_shape cannot carry the string-tuple axes tree, so specs come from the
+    full config abstractly while the (structurally identical) axes tree is built
+    by actually initializing the reduced config — the tree structure depends
+    only on the family flags, which `reduced()` preserves.
+    """
+    specs = jax.eval_shape(
+        lambda k: init_params(k, cfg)[0], jax.ShapeDtypeStruct((2,), jnp.uint32))
+    _, axes = init_params(jax.random.PRNGKey(0), cfg.reduced())
+    return specs, axes
+
+
+def _maybe(spec_dim: Optional[str], size: int, mesh: Mesh):
+    """Shard a dim only when divisible by the mesh-axis extent."""
+    if spec_dim is None:
+        return None
+    ways = 1
+    for ax in (spec_dim if isinstance(spec_dim, tuple) else (spec_dim,)):
+        ways *= mesh.shape[ax]
+    return spec_dim if size % ways == 0 else None
+
+
+def decode_state_shardings(cfg: ModelConfig, state, mesh: Mesh, batch: int):
+    """Shardings for the decode caches: batch over (pod,data), heads over model.
+
+    Structure-aware: attn KV caches shard the kv-head dim (when divisible) over
+    "model"; SSM states shard the ssm-head dim; position ring buffers replicate.
+    """
+    bspec = batch_spec(mesh, batch)
+    b_axes = bspec[0] if len(bspec) else None
+    bax = _maybe(b_axes, batch, mesh) if b_axes else None
+
+    out = {}
+    if "attn" in state:
+        def attn_spec(leaf):
+            shape = leaf.shape
+            if len(shape) == 5:  # (L, B, S, K, hd)
+                return P(None, bax, None, _maybe("model", shape[3], mesh), None)
+            if len(shape) == 4:  # MLA latents (L, B, S, R)
+                return P(None, bax, None, None)
+            return P(*([None] * len(shape)))  # pos buffers (L, S)
+
+        out["attn"] = jax.tree.map(
+            lambda l: NamedSharding(mesh, attn_spec(l)), state["attn"])
+    if "ssm" in state:
+        shape = state["ssm"].shape  # (L, B, H, N, P)
+        out["ssm"] = NamedSharding(
+            mesh, P(None, bax, _maybe("model", shape[2], mesh), None, None))
+    return out
+
+
+@dataclasses.dataclass
+class LoweringJob:
+    """Everything `.lower(...)` needs for one (arch x shape x mesh) combo."""
+    fn: Callable
+    args: tuple  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    static_desc: str
+    donate_argnums: tuple = ()
+
+
+def build_job(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+              sampler_theta: float = 0.5, overrides: Optional[dict] = None,
+              microbatch: int = 1) -> LoweringJob:
+    """`overrides` replaces ModelConfig fields (perf-iteration variants);
+    `microbatch` enables gradient accumulation on the train step."""
+    ok, reason = shape_supported(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape_name} skipped: {reason}")
+    info = SHAPES[shape_name]
+    seq, batch = info["seq_len"], info["global_batch"]
+    long_ctx = info.get("long_context", False)
+    kind = info["kind"]
+    if kind == "train":
+        # Production training uses activation checkpointing over the layer scan.
+        cfg = dataclasses.replace(cfg, remat=True)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    # Activation sharding anchors: batch over (pod, data) when divisible, vocab
+    # (logits) over the model axis.  Without these GSPMD loses batch parallelism
+    # at the embedding gather / RNG boundaries (measured 15x flops inflation).
+    bspec_axes = batch_spec(mesh, batch)
+    act_axes = ()
+    if len(bspec_axes) and bspec_axes[0] is not None:
+        first = bspec_axes[0]
+        act_axes = tuple(first) if isinstance(first, tuple) else (first,)
+    cfg = dataclasses.replace(cfg, act_batch_axes=act_axes, act_model_axis="model")
+    multi_pod = "pod" in mesh.axis_names
+    rules = rules_for("train" if kind == "train" else "serve", multi_pod)
+
+    params_s, axes = abstract_params(cfg)
+    p_shard = param_shardings(axes, params_s, mesh, rules)
+    pdt = _param_dtype(cfg)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    rep = NamedSharding(mesh, P())
+    bshard = NamedSharding(mesh, P(*batch_spec(mesh, batch)))
+    bshard2 = NamedSharding(
+        mesh, P(*(list(batch_spec(mesh, batch)) + [None])))
+
+    process = masked_process(cfg.vocab_size, loglinear_schedule())
+
+    extra_names = []
+    extra_specs = []
+    extra_shards = []
+    fe = frontend_specs(cfg, batch, pdt)
+    for name, spec in fe.items():
+        extra_names.append(name)
+        extra_specs.append(spec)
+        extra_shards.append(NamedSharding(
+            mesh, P(*(list(batch_spec(mesh, batch)) + [None, None]))))
+
+    if kind == "train":
+        tseq = text_seq_len(cfg, seq)
+        opt_cfg = OptimizerConfig()
+        opt_s = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params_s)
+        opt_shard = type(opt_s)(
+            step=rep,
+            mu=jax.tree.map(lambda _, s: s, opt_s.mu, p_shard),
+            nu=jax.tree.map(lambda _, s: s, opt_s.nu, p_shard),
+        )
+        step_fn = make_train_step(cfg, process, opt_cfg,
+                                  extra_input_names=tuple(extra_names),
+                                  microbatch=microbatch)
+        batch_s = jax.ShapeDtypeStruct((batch, tseq), jnp.int32)
+        args = (params_s, opt_s, batch_s, key_spec, *extra_specs)
+        in_sh = (p_shard, opt_shard, bshard2, rep, *extra_shards)
+        out_sh = (p_shard, opt_shard, None)
+        return LoweringJob(step_fn, args, in_sh, out_sh,
+                           f"train_step[{cfg.name}/{shape_name}]",
+                           donate_argnums=(0, 1))
+
+    if kind == "prefill":
+        tseq = text_seq_len(cfg, seq)
+        extra = dict(zip(extra_names, extra_specs))
+
+        def sampler_step(params, tokens, t0, t1, key, *extra_vals):
+            ev = dict(zip(extra_names, extra_vals))
+            score_fn = make_score_fn(params, cfg, ev)
+            return masked_step(key, process, score_fn, tokens, t0, t1,
+                               "theta_trapezoidal", sampler_theta)
+
+        tok_s = jax.ShapeDtypeStruct((batch, tseq), jnp.int32)
+        t_s = jax.ShapeDtypeStruct((), jnp.float32)
+        args = (params_s, tok_s, t_s, t_s, key_spec, *extra_specs)
+        in_sh = (p_shard, bshard2, rep, rep, rep, *extra_shards)
+        return LoweringJob(sampler_step, args, in_sh, None,
+                           f"sampler_step[{cfg.name}/{shape_name}]")
+
+    # decode
+    state_s = jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, seq, long_context=long_ctx))
+    s_shard = decode_state_shardings(cfg, state_s, mesh, batch)
+    tok_s = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+    enc_specs = []
+    enc_shards = []
+    if cfg.is_encdec:
+        enc_specs.append(jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), pdt))
+        enc_shards.append(NamedSharding(
+            mesh, P(*(list(batch_spec(mesh, batch)) + [None, None]))))
+
+    def serve_step(params, state, token, pos, *enc):
+        enc_out = enc[0] if enc else None
+        return decode_step(params, cfg, state, token, pos,
+                           encoder_out=enc_out, long_context=long_ctx)
+
+    args = (params_s, state_s, tok_s, pos_s, *enc_specs)
+    in_sh = (p_shard, s_shard, bshard2, rep, *enc_shards)
+    out_sh = (None, s_shard)
+    return LoweringJob(serve_step, args, in_sh, out_sh,
+                       f"serve_step[{cfg.name}/{shape_name}]",
+                       donate_argnums=(1,))

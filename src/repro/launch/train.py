@@ -1,0 +1,66 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch radd_small --reduced \
+        --steps 200 --batch 32 --seq-len 128
+
+Uses the host mesh (all local devices) with the train sharding rules; on a real
+TPU slice the same flags drive the production mesh via --production-mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import loglinear_schedule, masked_process
+from repro.data import MarkovText, TokenDataset
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.specs import abstract_params
+from repro.sharding.rules import param_shardings, rules_for
+from repro.train import OptimizerConfig, TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="radd_small")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=0, help="override vocab (synthetic data)")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if args.vocab:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, vocab_size=args.vocab)
+    mesh = (make_production_mesh() if args.production_mesh else make_host_mesh())
+
+    corpus = MarkovText(vocab_size=cfg.vocab_size, seed=args.seed)
+    data = corpus.sample(max(args.batch * 16, 512), args.seq_len, seed=args.seed + 1)
+    ds = TokenDataset(data, seed=args.seed)
+
+    process = masked_process(cfg.vocab_size, loglinear_schedule())
+    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 10),
+                              total_steps=args.steps)
+    train_cfg = TrainConfig(batch_size=args.batch, steps=args.steps,
+                            log_every=max(args.steps // 10, 1),
+                            ckpt_dir=args.ckpt_dir,
+                            ckpt_every=args.steps // 2 if args.ckpt_dir else 0)
+    trainer = Trainer(cfg, process, opt_cfg, train_cfg)
+    with mesh:
+        params, opt = trainer.init(jax.random.PRNGKey(args.seed))
+        params, opt, hist = trainer.fit(params, opt, ds.batches(args.batch, epochs=10_000))
+    print(f"final loss: {hist[-1]['loss']:.4f}  (ppl bound {np.exp(hist[-1]['elbo']):.2f})")
+
+
+if __name__ == "__main__":
+    main()

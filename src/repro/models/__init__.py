@@ -1,0 +1,17 @@
+"""Score-network backbones for all assigned architectures."""
+from .config import ModelConfig
+from .backbone import (
+    decode_step,
+    denoise_logits,
+    encode,
+    forward,
+    init_decode_state,
+    init_params,
+    lm_logits,
+    param_count,
+)
+
+__all__ = [
+    "ModelConfig", "decode_step", "denoise_logits", "encode", "forward",
+    "init_decode_state", "init_params", "lm_logits", "param_count",
+]

@@ -1,0 +1,337 @@
+"""Attention variants: GQA (full / causal / sliding-window), MLA (DeepSeek-V3),
+cross-attention (enc-dec), and single-token decode steps with KV caches.
+
+Memory discipline: sequence-level attention uses an online-softmax scan over KV
+chunks whenever the naive [S, T] score matrix would be large, so the 32k-prefill
+and 500k-decode shapes lower with bounded intermediates (the Pallas flash kernel
+in `repro.kernels` is the TPU execution path for the same computation).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, apply_rope, rms_norm
+
+Array = jnp.ndarray
+
+_CHUNK = 1024
+_NAIVE_MAX_T = 2048
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# Shared online-softmax core
+# --------------------------------------------------------------------------- #
+def _mask_block(q_pos: Array, k_pos: Array, causal: bool, window,
+                k_len: Optional[Array]) -> Array:
+    """[S, T] boolean mask from absolute positions.
+
+    `window` may be a traced int32 scalar (per-layer value threaded through a
+    lax.scan); window <= 0 means full attention.
+    """
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    m = kp >= 0  # empty ring-buffer slots carry pos = -1 (and chunk padding < 0)
+    if causal:
+        m &= kp <= qp
+    window = jnp.asarray(window)
+    m &= (window <= 0) | (qp - kp < window)
+    if k_len is not None:
+        m &= kp < k_len
+    return m
+
+
+def attention_core(
+    q: Array,  # [B, S, K, G, D]
+    k: Array,  # [B, T, K, D]
+    v: Array,  # [B, T, K, Dv]
+    q_pos: Array,  # [S]
+    k_pos: Array,  # [T]
+    causal: bool,
+    window: int = 0,
+    k_len: Optional[Array] = None,  # scalar valid length of the cache
+    scale: Optional[float] = None,
+) -> Array:
+    """Grouped-query attention with online softmax over KV chunks. -> [B,S,K,G,Dv]."""
+    b, s, kh, g, d = q.shape
+    t = k.shape[1]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    if t <= _NAIVE_MAX_T:
+        logits = jnp.einsum("bskgd,btkd->bkgst", qf, kf)
+        mask = _mask_block(q_pos, k_pos, causal, window, k_len)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgst,btkd->bskgd", w, vf)
+        return out.astype(q.dtype)
+
+    # Chunked online softmax (flash-style) over the T axis.
+    n_chunks = -(-t // _CHUNK)
+    pad = n_chunks * _CHUNK - t
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-(10**9))
+    kf = kf.reshape(b, n_chunks, _CHUNK, kh, d).transpose(1, 0, 2, 3, 4)
+    vf = vf.reshape(b, n_chunks, _CHUNK, kh, dv).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(n_chunks, _CHUNK)
+    valid_len = k_len if k_len is not None else jnp.asarray(t)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, kpb = blk
+        logits = jnp.einsum("bskgd,btkd->bkgst", qf, kb)
+        mask = _mask_block(q_pos, kpb, causal, window, valid_len) & (kpb >= 0)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bkgst,btkd->bkgsd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, s, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kf, vf, kp))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # [B,S,K,G,Dv]
+
+
+# --------------------------------------------------------------------------- #
+# GQA
+# --------------------------------------------------------------------------- #
+def init_gqa(key: jax.Array, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             dtype) -> Tuple[dict, dict]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": _dense_init(k1, (d_model, n_heads, head_dim), dtype),
+        "wk": _dense_init(k2, (d_model, n_kv, head_dim), dtype),
+        "wv": _dense_init(k3, (d_model, n_kv, head_dim), dtype),
+        "wo": _dense_init(k4, (n_heads, head_dim, d_model), dtype),
+    }
+    axes = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    return params, axes
+
+
+def apply_gqa(
+    params: dict,
+    x: Array,  # [B, S, D]
+    positions: Array,  # [S]
+    causal: bool,
+    window: int,
+    rope_theta: float,
+    kv_override: Optional[Tuple[Array, Array, Array]] = None,  # (k, v, k_pos) cross
+    qkv_constrain=None,  # optional callable: shard head-dim activations (§Perf)
+) -> Array:
+    b, s, _ = x.shape
+    n_heads = params["wq"].shape[1]
+    n_kv = params["wk"].shape[1]
+    g = n_heads // n_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if qkv_constrain is not None:
+        q = qkv_constrain(q)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if rope_theta > 0:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+        k_pos = positions
+    else:
+        k, v, k_pos = kv_override
+        if rope_theta > 0:
+            q = apply_rope(q, positions, rope_theta)
+    qg = q.reshape(b, s, n_kv, g, q.shape[-1])
+    out = attention_core(qg, k, v, positions, k_pos, causal, window)
+    out = out.reshape(b, s, n_heads, -1)
+    if qkv_constrain is not None:
+        out = qkv_constrain(out)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def make_cross_kv(params: dict, enc: Array, enc_pos: Array):
+    """Precompute encoder K/V for cross-attention (reused across decode steps)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, params["wv"])
+    return k, v, enc_pos
+
+
+def init_gqa_cache(batch: int, cache_len: int, n_kv: int, head_dim: int, dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        # Absolute position held at each ring slot; -1 = empty.
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def gqa_decode_step(
+    params: dict,
+    cache: dict,
+    x: Array,  # [B, 1, D]
+    pos: Array,  # scalar int32 absolute position
+    causal: bool,
+    window: int,
+    rope_theta: float,
+) -> Tuple[Array, dict]:
+    """One-token decode: ring-buffer cache update + attention over the cache."""
+    b = x.shape[0]
+    n_heads = params["wq"].shape[1]
+    n_kv = params["wk"].shape[1]
+    g = n_heads // n_kv
+    cache_len = cache["k"].shape[1]
+    # Ring-buffer slot; for a full cache (cache_len >= max positions) this is
+    # just `pos`, under sliding window it wraps.
+    slot = pos % cache_len
+    posb = jnp.full((1,), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if rope_theta > 0:
+        q = apply_rope(q, posb, rope_theta)
+        k_new = apply_rope(k_new, posb, rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
+    pos_cache = jax.lax.dynamic_update_slice_in_dim(cache["pos"], posb, slot, 0)
+    qg = q.reshape(b, 1, n_kv, g, -1)
+    out = attention_core(
+        qg, k_cache, v_cache, posb, pos_cache, causal, window,
+        k_len=None,  # validity via pos_cache >= 0 handled by causal mask (pos>=0)
+    )
+    out = out.reshape(b, 1, n_heads, -1)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k_cache, "v": v_cache, "pos": pos_cache}
+
+
+# --------------------------------------------------------------------------- #
+# MLA (Multi-head Latent Attention, DeepSeek-V3) — arXiv:2412.19437
+# --------------------------------------------------------------------------- #
+def init_mla(key: jax.Array, d_model: int, n_heads: int, q_lora: int, kv_lora: int,
+             nope: int, rope: int, v_dim: int, dtype) -> Tuple[dict, dict]:
+    ks = jax.random.split(key, 6)
+    params = {
+        "wq_a": _dense_init(ks[0], (d_model, q_lora), dtype),
+        "q_norm": jnp.ones((q_lora,), dtype),
+        "wq_b": _dense_init(ks[1], (q_lora, n_heads, nope + rope), dtype),
+        "wkv_a": _dense_init(ks[2], (d_model, kv_lora + rope), dtype),
+        "kv_norm": jnp.ones((kv_lora,), dtype),
+        "wkv_b": _dense_init(ks[3], (kv_lora, n_heads, nope + v_dim), dtype),
+        "wo": _dense_init(ks[4], (n_heads, v_dim, d_model), dtype),
+    }
+    axes = {
+        "wq_a": ("embed", "lora"),
+        "q_norm": ("lora",),
+        "wq_b": ("lora", "heads", "head_dim"),
+        "wkv_a": ("embed", "lora"),
+        "kv_norm": ("lora",),
+        "wkv_b": ("lora", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    return params, axes
+
+
+def _mla_qkv(params: dict, x: Array, positions: Array, nope: int, rope: int,
+             theta: float, eps: float):
+    b, s, _ = x.shape
+    kv_lora = params["kv_norm"].shape[0]
+    cq = rms_norm(x @ params["wq_a"], params["q_norm"], eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    kv_a = x @ params["wkv_a"]
+    c_kv = rms_norm(kv_a[..., :kv_lora], params["kv_norm"], eps)
+    k_rope = kv_a[..., kv_lora:][:, :, None, :]  # [B, S, 1, rope]
+    q_rope = apply_rope(q_rope, positions, theta)
+    k_rope = apply_rope(k_rope, positions, theta)
+    return q_nope, q_rope, c_kv, k_rope[:, :, 0, :]
+
+
+def apply_mla(params: dict, x: Array, positions: Array, causal: bool, window: int,
+              nope: int, rope: int, v_dim: int, rope_theta: float, eps: float) -> Array:
+    """Full-sequence MLA (train / denoise / prefill): expand latents per head."""
+    b, s, _ = x.shape
+    n_heads = params["wq_b"].shape[1]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, nope, rope,
+                                            rope_theta, eps)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, params["wkv_b"])
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, n_heads, rope))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    scale = (nope + rope) ** -0.5
+    qg = q_full[:, :, :, None, :]  # G = 1: MLA has per-head K
+    out = attention_core(qg, k_full, v, positions, positions, causal, window,
+                         scale=scale)
+    out = out.reshape(b, s, n_heads, v_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def init_mla_cache(batch: int, cache_len: int, kv_lora: int, rope: int, dtype) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, rope), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def mla_decode_step(
+    params: dict,
+    cache: dict,
+    x: Array,  # [B, 1, D]
+    pos: Array,
+    nope: int,
+    rope: int,
+    v_dim: int,
+    rope_theta: float,
+    eps: float,
+    window: int = 0,
+) -> Tuple[Array, dict]:
+    """Absorbed MLA decode: attention scores in the compressed-latent space.
+
+    The cache stores only (c_kv, k_rope) — the paper-faithful MLA memory saving:
+    scores = (q_nope W_kb) . c_kv + q_rope . k_rope.
+    """
+    b = x.shape[0]
+    n_heads = params["wq_b"].shape[1]
+    kv_lora = params["kv_norm"].shape[0]
+    cache_len = cache["c_kv"].shape[1]
+    posb = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, x, posb, nope, rope,
+                                                    rope_theta, eps)
+    slot = pos % cache_len
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), slot, 1)
+    k_rope_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new[:, None, :].reshape(b, 1, rope).astype(
+            cache["k_rope"].dtype), slot, 1)
+    pos_cache = jax.lax.dynamic_update_slice_in_dim(cache["pos"], posb, slot, 0)
+
+    wkb = params["wkv_b"][..., :nope]  # [lora, H, nope]
+    wvb = params["wkv_b"][..., nope:]  # [lora, H, v]
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, wkb)  # [B,1,H,lora]
+    scale = (nope + rope) ** -0.5
+    logits = (jnp.einsum("bshr,btr->bhst", q_abs.astype(jnp.float32),
+                         c_kv.astype(jnp.float32))
+              + jnp.einsum("bshn,btn->bhst", q_rope.astype(jnp.float32),
+                           k_rope_c.astype(jnp.float32))) * scale
+    mask = (pos_cache <= pos) & (pos_cache >= 0)  # [T]
+    window = jnp.asarray(window)
+    mask &= (window <= 0) | (pos - pos_cache < window)
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", w, c_kv.astype(jnp.float32))  # latent ctx
+    out = jnp.einsum("bshr,rhk->bshk", ctx, wvb.astype(jnp.float32))  # [B,1,H,v]
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope_c, "pos": pos_cache}

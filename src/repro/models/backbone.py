@@ -1,0 +1,420 @@
+"""Unified transformer backbone covering all assigned architecture families.
+
+One parameter tree + three entry points:
+
+* `denoise_logits`  — bidirectional full-sequence forward (the masked-diffusion
+  score network; exercised by train_4k / prefill_32k and by every solver NFE);
+* `lm_logits`       — causal forward (AR training / prefill for AR serving);
+* `decode_step`     — one-token AR decode with per-layer caches (decode_32k /
+  long_500k shapes; SSM layers carry recurrent state instead of KV).
+
+The layer stack is a single `lax.scan` over stacked parameters so that 61-layer
+MoE graphs lower to compact HLO.  Per-layer heterogeneity (Hymba's global-vs-
+sliding-window attention) is threaded through the scan as a per-layer window
+array rather than by unrolling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import apply_mlp, init_embedding, init_mlp, init_rms_norm, init_unembed, rms_norm
+
+Array = jnp.ndarray
+Params = Any
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+def _init_attn(key, cfg: ModelConfig):
+    if cfg.attention == "mla":
+        return attn.init_mla(
+            key, cfg.d_model, cfg.n_heads, cfg.q_lora_rank, cfg.kv_lora_rank,
+            cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim,
+            _dtype(cfg))
+    return attn.init_gqa(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.resolved_head_dim, _dtype(cfg))
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _constrain(cfg: ModelConfig, x: Array, trailing=None) -> Array:
+    """Anchor activation sharding: batch over cfg.act_batch_axes (no-op if unset).
+
+    `trailing` optionally shards the LAST dim (e.g. vocab over the model axis).
+    Must be traced under a mesh context (`with mesh:`) to take effect.
+    """
+    if not cfg.act_batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    parts = [tuple(cfg.act_batch_axes)] + [None] * (x.ndim - 1)
+    if trailing is not None:
+        parts[-1] = trailing
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def init_layer(key: jax.Array, cfg: ModelConfig, cross_attention: bool = False):
+    """One (un-stacked) decoder/encoder layer."""
+    ks = iter(jax.random.split(key, 8))
+    params: dict = {}
+    axes: dict = {}
+    dt = _dtype(cfg)
+
+    if cfg.uses_attention:
+        params["ln_attn"], axes["ln_attn"] = init_rms_norm(cfg.d_model, dt)
+        params["attn"], axes["attn"] = _init_attn(next(ks), cfg)
+    if cfg.uses_ssm:
+        params["ln_ssm"], axes["ln_ssm"] = init_rms_norm(cfg.d_model, dt)
+        params["ssm"], axes["ssm"] = ssm_mod.init_ssm(
+            next(ks), cfg.d_model, cfg.d_inner_ssm, cfg.n_ssm_heads,
+            cfg.ssm_head_dim, cfg.ssm_state, dt)
+    if cross_attention:
+        params["ln_cross"], axes["ln_cross"] = init_rms_norm(cfg.d_model, dt)
+        params["cross"], axes["cross"] = attn.init_gqa(
+            next(ks), cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, dt)
+    if cfg.uses_moe:
+        params["ln_mlp"], axes["ln_mlp"] = init_rms_norm(cfg.d_model, dt)
+        params["moe"], axes["moe"] = moe_mod.init_moe(
+            next(ks), cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts,
+            cfg.n_shared_experts, dt)
+    elif cfg.d_ff:
+        params["ln_mlp"], axes["ln_mlp"] = init_rms_norm(cfg.d_model, dt)
+        params["mlp"], axes["mlp"] = init_mlp(next(ks), cfg.d_model, cfg.d_ff, dt,
+                                              kind=cfg.mlp_kind)
+    return params, axes
+
+
+def _stack_init(key: jax.Array, n: int, fn):
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: fn(k)[0])(keys)
+    _, axes = fn(keys[0])
+    axes = jax.tree.map(lambda a: ("layers",) + a, axes,
+                        is_leaf=lambda a: isinstance(a, tuple))
+    return params, axes
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, Params]:
+    """Full parameter tree + matching logical-axes tree."""
+    cfg.validate()
+    dt = _dtype(cfg)
+    k_emb, k_layers, k_enc, k_out, k_fr = jax.random.split(key, 5)
+    params: dict = {}
+    axes: dict = {}
+    params["embed"], axes["embed"] = init_embedding(k_emb, cfg.embed_rows,
+                                                    cfg.d_model, dt)
+    params["layers"], axes["layers"] = _stack_init(
+        k_layers, cfg.n_layers,
+        lambda k: init_layer(k, cfg, cross_attention=cfg.is_encdec))
+    if cfg.is_encdec:
+        params["enc_layers"], axes["enc_layers"] = _stack_init(
+            k_enc, cfg.encoder_layers, lambda k: init_layer(k, cfg, False))
+        params["ln_enc"], axes["ln_enc"] = init_rms_norm(cfg.d_model, dt)
+    if cfg.frontend == "vision":
+        # Stub projector from frontend embedding space to d_model.
+        from .layers import _dense_init
+        params["frontend_proj"] = _dense_init(k_fr, (cfg.d_model, cfg.d_model), dt)
+        axes["frontend_proj"] = ("embed", "embed2")
+    params["ln_f"], axes["ln_f"] = init_rms_norm(cfg.d_model, dt)
+    params["unembed"], axes["unembed"] = init_unembed(k_out, cfg.d_model,
+                                                      cfg.vocab_size, dt)
+    return params, axes
+
+
+def param_count(params: Params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------------- #
+# Per-layer apply (shared by scan bodies)
+# --------------------------------------------------------------------------- #
+def _layer_windows(cfg: ModelConfig, long_context: bool) -> jnp.ndarray:
+    """Per-layer sliding-window sizes (0 = full attention)."""
+    w = jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+    if cfg.hybrid_global_every:
+        idx = jnp.arange(cfg.n_layers)
+        is_global = (idx % cfg.hybrid_global_every == 0) | (idx == cfg.n_layers - 1)
+        w = jnp.where(is_global, 0, jnp.maximum(w, 1024))
+    if long_context:
+        # Documented long-context VARIANT: cap every layer's receptive field.
+        cap = cfg.long_context_window
+        w = jnp.where(w == 0, cap, jnp.minimum(w, cap))
+    return w
+
+
+def _qkv_constrain_fn(cfg: ModelConfig):
+    """§Perf knob: padded head-axis sharding for q/k/v/out activations."""
+    if not (cfg.shard_attn_heads and cfg.act_model_axis):
+        return None
+    from jax.sharding import PartitionSpec as P
+
+    batch = tuple(cfg.act_batch_axes) if cfg.act_batch_axes else None
+
+    def con(t):  # [B, S, H, hd]
+        return jax.lax.with_sharding_constraint(
+            t, P(batch, None, cfg.act_model_axis, None))
+
+    return con
+
+
+def _apply_layer_seq(lp: dict, x: Array, cfg: ModelConfig, positions: Array,
+                     causal: bool, window: Array,
+                     cross_kv: Optional[tuple]) -> Tuple[Array, Array]:
+    """Full-sequence layer body; returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    qkv_con = _qkv_constrain_fn(cfg)
+    if cfg.uses_attention and cfg.uses_ssm:  # hybrid: parallel branches
+        h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        a_out = attn.apply_gqa(lp["attn"], h, positions, causal, window,
+                               cfg.rope_theta, qkv_constrain=qkv_con)
+        h2 = rms_norm(x, lp["ln_ssm"], cfg.norm_eps)
+        s_out = ssm_mod.apply_ssm(lp["ssm"], h2, cfg.d_inner_ssm, cfg.ssm_state,
+                                  cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_chunk)
+        x = x + 0.5 * (a_out + s_out)
+    elif cfg.uses_attention:
+        h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        if cfg.attention == "mla":
+            a_out = attn.apply_mla(
+                lp["attn"], h, positions, causal, window, cfg.qk_nope_head_dim,
+                cfg.qk_rope_head_dim, cfg.v_head_dim, cfg.rope_theta, cfg.norm_eps)
+        else:
+            a_out = attn.apply_gqa(lp["attn"], h, positions, causal, window,
+                                   cfg.rope_theta, qkv_constrain=qkv_con)
+        x = x + a_out
+    elif cfg.uses_ssm:
+        h = rms_norm(x, lp["ln_ssm"], cfg.norm_eps)
+        x = x + ssm_mod.apply_ssm(lp["ssm"], h, cfg.d_inner_ssm, cfg.ssm_state,
+                                  cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_chunk)
+
+    if cross_kv is not None and "cross" in lp:
+        h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        x = x + attn.apply_gqa(lp["cross"], h, positions, False, 0, -1.0,
+                               kv_override=cross_kv)
+
+    if cfg.uses_moe:
+        h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+        out, aux = moe_mod.apply_moe(
+            lp["moe"], h, cfg.experts_per_tok, cfg.capacity_factor,
+            combine_dtype=jnp.bfloat16 if cfg.moe_bf16_combine else None,
+            shard_gather_axis=(cfg.act_model_axis
+                               if cfg.moe_shard_gather else None))
+        if cfg.moe_constrain_combine:
+            out = _constrain(cfg, out)  # -> reduce-scatter over the expert axis
+        x = x + out
+    elif cfg.d_ff:
+        h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+        x = x + apply_mlp(lp["mlp"], h)
+    return x, aux
+
+
+def _run_stack(stacked: dict, x: Array, cfg: ModelConfig, positions: Array,
+               causal: bool, windows: Array,
+               cross_kv: Optional[tuple]) -> Tuple[Array, Array]:
+    def body(carry, scanned):
+        xc, aux_sum = carry
+        lp, w = scanned
+        fn = _apply_layer_seq
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=(2, 4))
+        xn, aux = fn(lp, xc, cfg, positions, causal, w, cross_kv)
+        xn = _constrain(cfg, xn)
+        return (xn, aux_sum + aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (stacked, windows),
+                               unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    return x, aux
+
+
+# --------------------------------------------------------------------------- #
+# Entry points
+# --------------------------------------------------------------------------- #
+def encode(params: Params, cfg: ModelConfig, enc_embeds: Array) -> Array:
+    """Whisper-style encoder over stub frame embeddings [B, T_enc, D]."""
+    t_enc = enc_embeds.shape[1]
+    positions = jnp.arange(t_enc)
+    windows = jnp.zeros((cfg.encoder_layers,), jnp.int32)
+    x, _ = _run_stack(params["enc_layers"], enc_embeds, cfg, positions,
+                      causal=False, windows=windows, cross_kv=None)
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _embed_tokens(params: Params, cfg: ModelConfig, tokens: Array) -> Array:
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _prepend_frontend(params: Params, cfg: ModelConfig, x: Array,
+                      frontend_embeds: Optional[Array]):
+    if cfg.frontend == "vision" and frontend_embeds is not None:
+        fe = frontend_embeds @ params["frontend_proj"]
+        return jnp.concatenate([fe.astype(x.dtype), x], axis=1), fe.shape[1]
+    return x, 0
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Array,  # [B, L]
+    causal: bool,
+    frontend_embeds: Optional[Array] = None,  # vision [B, T_img, D] (stub)
+    encoder_embeds: Optional[Array] = None,  # audio [B, T_enc, D] (stub)
+    long_context: bool = False,
+) -> Tuple[Array, Array]:
+    """Sequence forward -> (logits [B, L, vocab], moe_aux)."""
+    x = _embed_tokens(params, cfg, tokens)
+    x, n_front = _prepend_frontend(params, cfg, x, frontend_embeds)
+    x = _constrain(cfg, x)
+    positions = jnp.arange(x.shape[1])
+    cross_kv = None
+    if cfg.is_encdec:
+        if encoder_embeds is None:
+            raise ValueError("enc-dec model requires encoder_embeds")
+        enc_out = encode(params, cfg, encoder_embeds)
+        # Cross K/V computed per layer inside the scan would replicate enc_out
+        # projections; instead share one projection using layer-0 weights is
+        # incorrect — so we pass enc_out and let each layer project it.
+        cross_kv = (enc_out, jnp.arange(enc_out.shape[1]))
+    windows = _layer_windows(cfg, long_context)
+
+    if cross_kv is None:
+        x, aux = _run_stack(params["layers"], x, cfg, positions, causal, windows,
+                            None)
+    else:
+        enc_out, enc_pos = cross_kv
+
+        def body(carry, scanned):
+            xc, aux_sum = carry
+            lp, w = scanned
+            ckv = attn.make_cross_kv(lp["cross"], enc_out, enc_pos)
+            xn, aux = _apply_layer_seq(lp, xc, cfg, positions, causal, w, ckv)
+            xn = _constrain(cfg, xn)
+            return (xn, aux_sum + aux), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   (params["layers"], windows),
+                                   unroll=cfg.n_layers if cfg.unroll_layers else 1)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    logits = _constrain(cfg, logits, trailing=cfg.act_model_axis)
+    if n_front:
+        logits = logits[:, n_front:]
+    return logits.astype(jnp.float32), aux
+
+
+def denoise_logits(params, cfg, tokens, **kw) -> Tuple[Array, Array]:
+    """Masked-diffusion score network forward (bidirectional)."""
+    return forward(params, cfg, tokens, causal=False, **kw)
+
+
+def lm_logits(params, cfg, tokens, **kw) -> Tuple[Array, Array]:
+    return forward(params, cfg, tokens, causal=True, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Decode (one token, caches)
+# --------------------------------------------------------------------------- #
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      long_context: bool = False) -> dict:
+    """Per-layer stacked caches sized for `cache_len` (ring-buffered under SWA)."""
+    dt = _dtype(cfg)
+    state: dict = {}
+    eff_len = cache_len
+    if long_context:
+        eff_len = min(cache_len, cfg.long_context_window)
+    if cfg.uses_attention:
+        if cfg.attention == "mla":
+            one = attn.init_mla_cache(batch, eff_len, cfg.kv_lora_rank,
+                                      cfg.qk_rope_head_dim, dt)
+        else:
+            one = attn.init_gqa_cache(batch, eff_len, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, dt)
+        state["attn"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+    if cfg.uses_ssm:
+        one = ssm_mod.init_ssm_state(batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                                     cfg.ssm_state)
+        state["ssm"] = jnp.broadcast_to(one[None],
+                                        (cfg.n_layers,) + one.shape)
+    return state
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    state: dict,
+    token: Array,  # [B, 1]
+    pos: Array,  # scalar int32
+    encoder_out: Optional[Array] = None,  # [B, T_enc, D] pre-encoded
+    long_context: bool = False,
+) -> Tuple[Array, dict]:
+    """One AR decode step -> (logits [B, 1, vocab], new state)."""
+    x = _constrain(cfg, _embed_tokens(params, cfg, token))
+    windows = _layer_windows(cfg, long_context)
+    enc_pos = None if encoder_out is None else jnp.arange(encoder_out.shape[1])
+
+    def body(x, scanned):
+        lp, w, layer_state = scanned["p"], scanned["w"], scanned["s"]
+        new_state = dict(layer_state)
+        if cfg.uses_attention and cfg.uses_ssm:
+            h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+            a_out, new_state["attn"] = attn.gqa_decode_step(
+                lp["attn"], layer_state["attn"], h, pos, True, w, cfg.rope_theta)
+            h2 = rms_norm(x, lp["ln_ssm"], cfg.norm_eps)
+            s_out, new_state["ssm"] = ssm_mod.ssm_decode_step(
+                lp["ssm"], layer_state["ssm"], h2, cfg.d_inner_ssm, cfg.ssm_state,
+                cfg.n_ssm_heads, cfg.ssm_head_dim)
+            x = x + 0.5 * (a_out + s_out)
+        elif cfg.uses_attention:
+            h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+            if cfg.attention == "mla":
+                a_out, new_state["attn"] = attn.mla_decode_step(
+                    lp["attn"], layer_state["attn"], h, pos,
+                    cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim,
+                    cfg.rope_theta, cfg.norm_eps, w)
+            else:
+                a_out, new_state["attn"] = attn.gqa_decode_step(
+                    lp["attn"], layer_state["attn"], h, pos, True, w,
+                    cfg.rope_theta)
+            x = x + a_out
+        elif cfg.uses_ssm:
+            h = rms_norm(x, lp["ln_ssm"], cfg.norm_eps)
+            s_out, new_state["ssm"] = ssm_mod.ssm_decode_step(
+                lp["ssm"], layer_state["ssm"], h, cfg.d_inner_ssm, cfg.ssm_state,
+                cfg.n_ssm_heads, cfg.ssm_head_dim)
+            x = x + s_out
+
+        if encoder_out is not None and "cross" in lp:
+            h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+            ckv = attn.make_cross_kv(lp["cross"], encoder_out, enc_pos)
+            x = x + attn.apply_gqa(lp["cross"], h, jnp.full((1,), pos), False, 0,
+                                   -1.0, kv_override=ckv)
+
+        if cfg.uses_moe:
+            h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+            out, _ = moe_mod.apply_moe(lp["moe"], h, cfg.experts_per_tok,
+                                       cfg.capacity_factor)
+            x = x + out
+        elif cfg.d_ff:
+            h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+            x = x + apply_mlp(lp["mlp"], h)
+        return _constrain(cfg, x), new_state
+
+    scanned = {"p": params["layers"], "w": windows, "s": state}
+    x, new_state = jax.lax.scan(body, x, scanned,
+                                unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    logits = _constrain(cfg, logits, trailing=cfg.act_model_axis)
+    return logits.astype(jnp.float32), new_state

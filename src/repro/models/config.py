@@ -1,0 +1,182 @@
+"""Unified model configuration for all assigned score-network architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config type spans dense / MoE / SSM / hybrid / enc-dec / VLM / audio.
+
+    All assigned architectures reduce to settings of this dataclass; unknown
+    combinations fail loudly in `validate()`.
+    """
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    mlp_kind: str = "swiglu"  # swiglu | gelu | relu2
+
+    # --- attention ---
+    attention: str = "gqa"  # gqa | mla | none
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0  # 0 = full attention
+    # Dense archs can opt into a documented sliding-window VARIANT for the
+    # long-context decode shape (see DESIGN.md §Skips).
+    long_context_window: int = 8192
+
+    # --- MLA (DeepSeek-V3) ---
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_tok: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # --- SSM (Mamba-2 SSD) ---
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+
+    # --- hybrid (Hymba) ---
+    hybrid_global_every: int = 0  # every k-th layer uses global attn; others SWA
+
+    # --- encoder-decoder (Whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500  # fixed 30s audio frame count
+
+    # --- stub modality frontend ---
+    frontend: str = "none"  # none | audio | vision
+    frontend_tokens: int = 0  # vision tokens prepended to the text sequence
+
+    # --- diffusion / misc ---
+    mask_token: bool = True  # reserve an extra embedding row for MASK
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    remat: bool = False
+    # Fully unroll the layer scan (dry-run cost probes only: XLA cost_analysis
+    # does not multiply while-loop bodies by trip count).
+    unroll_layers: bool = False
+    # Activation sharding anchors (set by the launcher; empty = no constraints).
+    # act_batch_axes shards activation batch dims, act_model_axis shards the
+    # vocab dim of logits — required for GSPMD to keep batch parallelism through
+    # gathers/RNG ops when weights are FSDP-sharded.
+    act_batch_axes: tuple = ()
+    act_model_axis: Optional[str] = None
+    # §Perf knob: force q/k/v activation sharding over act_model_axis even when
+    # the head count is not divisible (GSPMD pads, e.g. 36 heads -> 48 slots).
+    # Recovers tensor parallelism for attention that weight-sharding rules must
+    # decline (pjit argument shardings require exact divisibility).
+    shard_attn_heads: bool = False
+    # §Perf knobs for the MoE combine (the measured collective hot-spot):
+    # bf16 scatter-add buffer halves all-reduce bytes; constraining the combined
+    # output to the batch sharding lets GSPMD emit reduce-scatter instead of
+    # all-reduce over the expert (model) axis.
+    moe_bf16_combine: bool = False
+    moe_constrain_combine: bool = False
+    # Shard the expert-choice selection over the model axis and replicate the
+    # token activations for local gathers (kills the (E,C,D) gather all-reduce).
+    moe_shard_gather: bool = False
+    source: str = ""  # citation for the assigned config
+
+    # ------------------------------------------------------------------ derived
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def embed_rows(self) -> int:
+        return self.vocab_size + (1 if self.mask_token else 0)
+
+    @property
+    def d_inner_ssm(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        if self.ssm_heads:
+            return self.ssm_heads
+        return self.d_inner_ssm // self.ssm_head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.attention != "none"
+
+    @property
+    def uses_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def uses_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def validate(self) -> None:
+        if self.family not in ("dense", "moe", "ssm", "hybrid", "vlm", "audio"):
+            raise ValueError(f"unknown family {self.family}")
+        if self.attention == "mla" and not (self.kv_lora_rank and self.qk_rope_head_dim):
+            raise ValueError("MLA requires kv_lora_rank and qk_rope_head_dim")
+        if self.family == "ssm" and self.attention != "none":
+            raise ValueError("ssm family is attention-free")
+        if self.uses_moe and not self.experts_per_tok:
+            raise ValueError("MoE config needs experts_per_tok")
+        if self.uses_attention and self.attention == "gqa":
+            if self.n_heads % max(self.n_kv_heads, 1):
+                raise ValueError("n_heads must be divisible by n_kv_heads")
+
+    # ------------------------------------------------------------------ reduced
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: <=2 layers, d_model<=256, <=4 experts, small vocab."""
+        d = min(self.d_model, 256)
+        heads = max(min(self.n_heads, 4), 0)
+        kv = max(min(self.n_kv_heads, 2), 0) if self.n_kv_heads else 0
+        if heads and kv:
+            heads = (heads // kv) * kv or kv
+        return dataclasses.replace(
+            self,
+            n_layers=2,
+            d_model=d,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=64 if self.uses_attention else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 251),
+            q_lora_rank=min(self.q_lora_rank, 64),
+            kv_lora_rank=min(self.kv_lora_rank, 32),
+            qk_nope_head_dim=min(self.qk_nope_head_dim, 32),
+            qk_rope_head_dim=min(self.qk_rope_head_dim, 16),
+            v_head_dim=min(self.v_head_dim, 32),
+            n_experts=min(self.n_experts, 4),
+            experts_per_tok=min(self.experts_per_tok, 2),
+            moe_d_ff=min(self.moe_d_ff, 128) if self.moe_d_ff else 0,
+            ssm_state=min(self.ssm_state, 16),
+            ssm_heads=0,
+            ssm_head_dim=32,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 32),
+            frontend_tokens=min(self.frontend_tokens, 8),
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            dtype="float32",
+            remat=False,
+        )

@@ -1,0 +1,48 @@
+"""STUB modality frontends (the one allowed carve-out, see DESIGN.md §4).
+
+For `vlm` archs the ViT/projector and for `audio` archs the mel+conv stem are
+not implemented; instead these helpers produce (or spec) the pre-computed
+patch/frame embeddings the backbone consumes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def frontend_shapes(cfg: ModelConfig, batch: int) -> dict:
+    """Shapes of the stub-frontend inputs required by `forward` for this config."""
+    out = {}
+    if cfg.frontend == "vision":
+        out["frontend_embeds"] = (batch, cfg.frontend_tokens, cfg.d_model)
+    if cfg.is_encdec:
+        out["encoder_embeds"] = (batch, cfg.encoder_seq, cfg.d_model)
+    return out
+
+
+def frontend_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        k: jax.ShapeDtypeStruct(shape, dtype)
+        for k, shape in frontend_shapes(cfg, batch).items()
+    }
+
+
+def sample_frontend(key: jax.Array, cfg: ModelConfig, batch: int,
+                    dtype=jnp.float32) -> dict:
+    """Random stand-in embeddings for tests / smoke runs."""
+    out = {}
+    for name, shape in frontend_shapes(cfg, batch).items():
+        key, sub = jax.random.split(key)
+        out[name] = (jax.random.normal(sub, shape, jnp.float32) * 0.02).astype(dtype)
+    return out
+
+
+def text_seq_len(cfg: ModelConfig, total_seq: int) -> int:
+    """Text positions available once frontend tokens claim their share."""
+    if cfg.frontend == "vision":
+        return max(total_seq - cfg.frontend_tokens, 1)
+    return total_seq

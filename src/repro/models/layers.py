@@ -1,0 +1,99 @@
+"""Primitive layers shared by all backbones: norms, RoPE, SwiGLU, embeddings.
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every initializer
+returns (params, logical_axes) where logical_axes mirrors the params tree with
+tuples of logical axis names consumed by `repro.sharding.rules`.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+Params = Any
+
+
+def _dense_init(key: jax.Array, shape: Tuple[int, ...], dtype, scale: float = 1.0) -> Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def make_dense(key, shape, dtype, axes, scale: float = 1.0):
+    return _dense_init(key, shape, dtype, scale), axes
+
+
+def rms_norm(x: Array, weight: Array, eps: float) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype) -> Tuple[Array, Tuple[str, ...]]:
+    return jnp.ones((d,), dtype), ("embed",)
+
+
+# ------------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: [B, S, H, D]; positions: [B, S] or [S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------- MLP (swiglu/gelu/relu2)
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_up": _dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": _dense_init(k3, (d_ff, d_model), dtype),
+    }
+    axes = {
+        "w_up": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"),
+    }
+    if kind == "swiglu":
+        params["w_gate"] = _dense_init(k1, (d_model, d_ff), dtype)
+        axes["w_gate"] = ("embed", "mlp")
+    elif kind == "relu2":
+        params["_relu2"] = jnp.zeros((1,), dtype)  # marker leaf (kind tag)
+        axes["_relu2"] = (None,)
+    elif kind != "gelu":
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    return params, axes
+
+
+def apply_mlp(params: Params, x: Array) -> Array:
+    up = x @ params["w_up"]
+    if "w_gate" in params:  # SwiGLU
+        h = jax.nn.silu(x @ params["w_gate"]) * up
+    elif "_relu2" in params:  # squared ReLU (Nemotron/Minitron)
+        h = jnp.square(jax.nn.relu(up))
+    else:  # GELU (StarCoder2, Whisper)
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"]
+
+
+# ------------------------------------------------------------------ embeddings
+def init_embedding(key: jax.Array, rows: int, d_model: int, dtype):
+    emb = (jax.random.normal(key, (rows, d_model), jnp.float32) * 0.02).astype(dtype)
+    return emb, ("vocab", "embed")
+
+
+def init_unembed(key: jax.Array, d_model: int, vocab: int, dtype):
+    return _dense_init(key, (d_model, vocab), dtype), ("embed", "vocab")

@@ -1,0 +1,152 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Implements the chunked SSD algorithm in pure JAX:
+
+  h_t = exp(a_t) h_{t-1} + B_t (x_t * dt_t),    y_t = C_t^T h_t + D x_t
+
+with scalar-per-head decay a_t = -softplus(A_log) * dt_t.  Sequences are split
+into chunks; within-chunk interactions use the quadratic (attention-like) dual
+form, cross-chunk state is carried by a `lax.scan` — the standard TPU-friendly
+adaptation (the GPU kernel's warp-level scan has no analogue; the chunk scan is
+the idiomatic equivalent, see DESIGN.md §3).
+
+Decode is a constant-memory recurrent update of the state [B, H, P, N].
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+Array = jnp.ndarray
+
+
+def init_ssm(key: jax.Array, d_model: int, d_inner: int, n_heads: int,
+             head_dim: int, d_state: int, dtype) -> Tuple[dict, dict]:
+    ks = jax.random.split(key, 5)
+    # in_proj emits [x (d_inner), B (state), C (state), dt (heads)].
+    d_in_proj = d_inner + 2 * d_state + n_heads
+    params = {
+        "in_proj": _dense_init(ks[0], (d_model, d_in_proj), dtype),
+        "out_proj": _dense_init(ks[1], (d_inner, d_model), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+    }
+    axes = {
+        "in_proj": ("embed", "mlp"),
+        "out_proj": ("mlp", "embed"),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm_w": ("mlp",),
+    }
+    return params, axes
+
+
+def _split_proj(params: dict, x: Array, d_inner: int, d_state: int, n_heads: int):
+    proj = x @ params["in_proj"]
+    xs = proj[..., :d_inner]
+    b_mat = proj[..., d_inner:d_inner + d_state]
+    c_mat = proj[..., d_inner + d_state:d_inner + 2 * d_state]
+    dt = jax.nn.softplus(
+        proj[..., d_inner + 2 * d_state:].astype(jnp.float32)
+        + params["dt_bias"])
+    return xs, b_mat, c_mat, dt
+
+
+def apply_ssm(params: dict, x: Array, d_inner: int, d_state: int, n_heads: int,
+              head_dim: int, chunk: int = 64) -> Array:
+    """Full-sequence SSD forward. x: [B, L, D] -> [B, L, D]."""
+    b, l, _ = x.shape
+    xs, b_mat, c_mat, dt = _split_proj(params, x, d_inner, d_state, n_heads)
+    xs = jax.nn.silu(xs)
+    xh = xs.reshape(b, l, n_heads, head_dim).astype(jnp.float32)
+    a = -jnp.exp(params["A_log"])  # [H] negative decay rates
+    # Per-step log decay and input scaling.
+    da = dt * a[None, None, :]  # [B, L, H] (negative)
+    xdt = xh * dt[..., None]  # [B, L, H, P]
+    bf = b_mat.astype(jnp.float32)  # [B, L, N] (single group)
+    cf = c_mat.astype(jnp.float32)
+
+    n_chunks = -(-l // chunk)
+    pad = n_chunks * chunk - l
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        bf = jnp.pad(bf, ((0, 0), (0, pad), (0, 0)))
+        cf = jnp.pad(cf, ((0, 0), (0, pad), (0, 0)))
+    lc = n_chunks * chunk
+    xdt = xdt.reshape(b, n_chunks, chunk, n_heads, head_dim)
+    da = da.reshape(b, n_chunks, chunk, n_heads)
+    bf = bf.reshape(b, n_chunks, chunk, d_state)
+    cf = cf.reshape(b, n_chunks, chunk, d_state)
+
+    cum = jnp.cumsum(da, axis=2)  # [B, K, C, H] within-chunk cumulative log decay
+    total = cum[:, :, -1, :]  # [B, K, H]
+
+    # Within-chunk (dual quadratic form): y_intra[t] = sum_{s<=t} C_t.B_s
+    #   * exp(cum_t - cum_s) * xdt_s.
+    scores = jnp.einsum("bkin,bkjn->bkij", cf, bf)  # [B, K, C, C]
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,K,C,C,H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bkij,bkijh,bkjhp->bkihp", scores, w, xdt)
+
+    # Chunk-final states: S_k = sum_s exp(total - cum_s) B_s xdt_s^T.
+    state_in = jnp.einsum(
+        "bkjn,bkjh,bkjhp->bkhnp", bf, jnp.exp(total[:, :, None, :] - cum), xdt)
+
+    def carry_fn(h, inputs):
+        s_in, tot = inputs  # [B,H,N,P], [B,H]
+        h_new = h * jnp.exp(tot)[:, :, None, None] + s_in
+        return h_new, h
+
+    h0 = jnp.zeros((b, n_heads, d_state, head_dim), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        carry_fn,
+        h0,
+        (state_in.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # [B, K, H, N, P] state entering chunk
+
+    # Inter-chunk contribution: y_inter[t] = C_t^T exp(cum_t) h_prev.
+    y_inter = jnp.einsum("bkin,bkih,bkhnp->bkihp", cf, jnp.exp(cum), h_prev)
+
+    y = (y_intra + y_inter).reshape(b, lc, n_heads, head_dim)[:, :l]
+    y = y + xh * params["D"][None, None, :, None]
+    y = y.reshape(b, l, d_inner)
+    # Gated RMS norm (Mamba-2 norm-before-out_proj).
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * params["norm_w"].astype(jnp.float32)
+    return (y.astype(x.dtype)) @ params["out_proj"]
+
+
+def init_ssm_state(batch: int, n_heads: int, head_dim: int, d_state: int) -> Array:
+    return jnp.zeros((batch, n_heads, d_state, head_dim), jnp.float32)
+
+
+def ssm_decode_step(params: dict, state: Array, x: Array, d_inner: int,
+                    d_state: int, n_heads: int, head_dim: int
+                    ) -> Tuple[Array, Array]:
+    """Single-token recurrence. x: [B, 1, D]; state: [B, H, N, P]."""
+    b = x.shape[0]
+    xs, b_mat, c_mat, dt = _split_proj(params, x, d_inner, d_state, n_heads)
+    xs = jax.nn.silu(xs)
+    xh = xs.reshape(b, n_heads, head_dim).astype(jnp.float32)
+    dt = dt.reshape(b, n_heads)
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a[None, :])  # [B, H]
+    bf = b_mat.reshape(b, d_state).astype(jnp.float32)
+    cf = c_mat.reshape(b, d_state).astype(jnp.float32)
+    xdt = xh * dt[..., None]  # [B, H, P]
+    state_new = state * decay[:, :, None, None] + jnp.einsum("bn,bhp->bhnp", bf, xdt)
+    y = jnp.einsum("bn,bhnp->bhp", cf, state_new) + xh * params["D"][None, :, None]
+    y = y.reshape(b, 1, d_inner)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * params["norm_w"].astype(jnp.float32)
+    return (y.astype(x.dtype)) @ params["out_proj"], state_new

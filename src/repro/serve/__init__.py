@@ -1,0 +1,3 @@
+from .engine import Request, Result, ServingEngine, ar_generate, make_score_fn
+
+__all__ = ["Request", "Result", "ServingEngine", "ar_generate", "make_score_fn"]

@@ -1,0 +1,16 @@
+from .rules import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    TRAIN_RULES_MULTIPOD,
+    batch_sharding,
+    batch_spec,
+    constrain_batch,
+    logical_to_spec,
+    param_shardings,
+    replicated,
+    rules_for,
+)
+
+__all__ = ["SERVE_RULES", "TRAIN_RULES", "TRAIN_RULES_MULTIPOD", "batch_sharding",
+           "batch_spec", "constrain_batch", "logical_to_spec", "param_shardings",
+           "replicated", "rules_for"]

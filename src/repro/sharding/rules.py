@@ -1,0 +1,143 @@
+"""Logical-axis sharding rules (MaxText-style) mapping parameter/activation
+logical axes onto mesh axes.
+
+Meshes (launch/mesh.py):
+  single-pod: ("data", "model") = (16, 16)      -> 256 chips
+  multi-pod:  ("pod", "data", "model") = (2, 16, 16) -> 512 chips
+
+Train rules: FSDP along "data" (embed dim of weights), tensor/expert/vocab
+parallel along "model"; batch along ("pod", "data").  Multi-pod additionally
+FSDPs weights along "pod" (so the 671B MoE optimizer state fits).
+Serve rules: weights replicated along "data" (latency path), model-parallel
+along "model"; batch along ("pod", "data").
+
+GSPMD handles non-divisible dimensions by padding (e.g. 36 heads over 16-way
+"model"), which is recorded as a roofline caveat rather than hidden.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: N817
+
+Params = Any
+
+# logical axis -> mesh axes (None = replicate).
+TRAIN_RULES = {
+    "layers": None,
+    "vocab": "model",
+    "embed": "data",      # FSDP
+    "embed2": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": "model",
+    "lora": None,
+}
+
+# Multi-pod training: FSDP over ("pod", "data") for the embed dim.
+TRAIN_RULES_MULTIPOD = dict(TRAIN_RULES, embed=("pod", "data"))
+
+SERVE_RULES = {
+    "layers": None,
+    "vocab": "model",
+    "embed": None,
+    "embed2": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": "model",
+    "lora": None,
+}
+
+
+def rules_for(mode: str, multi_pod: bool) -> dict:
+    if mode == "train":
+        return TRAIN_RULES_MULTIPOD if multi_pod else TRAIN_RULES
+    return SERVE_RULES
+
+
+def _mesh_ways(mesh: Mesh, tgt) -> int:
+    ways = 1
+    for ax in (tgt if isinstance(tgt, tuple) else (tgt,)):
+        ways *= mesh.shape[ax]
+    return ways
+
+
+def logical_to_spec(axes: tuple, rules: dict, mesh: Optional[Mesh] = None,
+                    shape: Optional[tuple] = None) -> P:
+    """Translate a logical-axes tuple into a PartitionSpec via the rules table.
+
+    When `shape` is given, dims not divisible by the target mesh extent fall
+    back to replication (pjit argument shardings require exact divisibility;
+    e.g. 36 heads cannot shard 16-way — recorded as a roofline caveat).
+    """
+    parts = []
+    used = set()
+    for i, ax in enumerate(axes):
+        if ax is None:
+            parts.append(None)
+            continue
+        tgt = rules.get(ax, None)
+        flat = tgt if isinstance(tgt, tuple) else ((tgt,) if tgt else ())
+        if not flat or any(m in used for m in flat):
+            parts.append(None)
+            continue
+        if mesh is not None and shape is not None:
+            if shape[i] % _mesh_ways(mesh, tgt) != 0:
+                parts.append(None)
+                continue
+        used.update(flat)
+        parts.append(tgt)
+    return P(*parts)
+
+
+def param_shardings(axes_tree: Params, specs_tree: Params, mesh: Mesh,
+                    rules: dict) -> Params:
+    """NamedSharding tree matching the params tree (divisibility-checked)."""
+    return jax.tree.map(
+        lambda axes, spec: NamedSharding(
+            mesh, logical_to_spec(axes, rules, mesh, tuple(spec.shape))),
+        axes_tree,
+        specs_tree,
+        is_leaf=lambda a: isinstance(a, tuple) and all(
+            isinstance(x, (str, type(None))) for x in a),
+    )
+
+
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    """Shard the batch dim over ("pod","data") when divisible, else replicate.
+
+    long_500k has global_batch=1: replication is the documented fallback.
+    """
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    ways = 1
+    for a in axes:
+        ways *= mesh.shape[a]
+    if batch_size % ways == 0 and batch_size >= ways:
+        return P(tuple(axes))
+    # Try data-only.
+    if "data" in mesh.axis_names and batch_size % mesh.shape["data"] == 0 \
+            and batch_size >= mesh.shape["data"]:
+        return P("data")
+    return P(None)
+
+
+def batch_sharding(mesh: Mesh, batch_size: int, ndim: int = 2) -> NamedSharding:
+    spec = batch_spec(mesh, batch_size)
+    return NamedSharding(mesh, P(*(list(spec) + [None] * (ndim - 1))))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def constrain_batch(x: jnp.ndarray, mesh: Mesh) -> jnp.ndarray:
+    """Activation constraint: batch over (pod, data), rest unconstrained."""
+    spec = batch_spec(mesh, x.shape[0])
+    full = P(*(list(spec) + [None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, full))

@@ -1,0 +1,8 @@
+from .optimizer import OptimizerConfig, OptState, adamw_update, init_opt_state, lr_at
+from .trainer import TrainConfig, Trainer, diffusion_loss_fn, make_train_step
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = ["OptimizerConfig", "OptState", "adamw_update", "init_opt_state",
+           "lr_at", "TrainConfig", "Trainer", "diffusion_loss_fn",
+           "make_train_step", "latest_step", "restore_checkpoint",
+           "save_checkpoint"]

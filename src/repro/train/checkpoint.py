@@ -1,0 +1,68 @@
+"""Checkpointing: pytree <-> directory of .npy leaves + msgpack manifest.
+
+No orbax dependency; format is deliberately dumb and greppable:
+
+    <dir>/step_<n>/manifest.msgpack   {treedef repr, leaf paths, shapes, dtypes}
+    <dir>/step_<n>/leaf_<i>.npy
+
+Restores to host numpy; callers re-shard with device_put as needed.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+Params = Any
+
+
+def _leaf_paths(tree) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) for path, _ in flat]
+
+
+def save_checkpoint(base_dir: str, step: int, tree: Params) -> str:
+    out = os.path.join(base_dir, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    manifest = {
+        "n_leaves": len(leaves),
+        "paths": _leaf_paths(tree),
+        "step": step,
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(out, f"leaf_{i}.npy"), arr)
+    with open(os.path.join(out, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return out
+
+
+def latest_step(base_dir: str) -> int | None:
+    if not os.path.isdir(base_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(base_dir)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(base_dir: str, step: int, like: Params) -> Params:
+    """Restore into the structure of `like` (shape/dtype verified)."""
+    src = os.path.join(base_dir, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if manifest["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves)}")
+    restored = []
+    for i, ref in enumerate(leaves):
+        arr = np.load(os.path.join(src, f"leaf_{i}.npy"))
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {ref.shape}")
+        restored.append(arr.astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, restored)

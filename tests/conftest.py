@@ -1,0 +1,20 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run is the only consumer of
+# the 512-device flag, and it sets XLA_FLAGS itself in a fresh process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def np_rng():
+    return np.random.default_rng(0)

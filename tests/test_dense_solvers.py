@@ -1,0 +1,124 @@
+"""Dense-engine solver correctness: exact marginals, exact samplers, ordering.
+
+The heavyweight order-of-convergence measurement lives in benchmarks/; here we
+verify the machinery (exact tweedie at the sampling-noise floor, trapezoidal
+beating tau-leaping at equal steps, uniformization unbiasedness).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DenseCTMC,
+    SamplerConfig,
+    sample_dense,
+    trapezoidal_coefficients,
+    rk2_coefficients,
+    uniform_rate_matrix,
+    uniformization_sample,
+)
+
+
+@pytest.fixture(scope="module")
+def toy():
+    rng = np.random.default_rng(0)
+    p0 = rng.dirichlet(np.ones(8) * 2.0)
+    return DenseCTMC(q=uniform_rate_matrix(8), p0=p0, t_max=8.0)
+
+
+def kl(p, q):
+    q = np.maximum(q, 1e-12)
+    return float((p * np.log(p / q)).sum())
+
+
+def empirical(xs, s):
+    return np.bincount(np.asarray(xs), minlength=s) / len(xs)
+
+
+def test_marginals_analytic(toy):
+    # closed form for Q = (1/S) E - I: p_t = (1 - e^-t)/S + e^-t p0
+    for t in (0.0, 0.5, 3.0):
+        pt = toy.marginal_np(t)
+        closed = (1 - np.exp(-t)) / 8 + np.exp(-t) * toy.p0
+        np.testing.assert_allclose(pt, closed, atol=1e-10)
+        jt = np.array(toy.marginal(jnp.asarray(t, jnp.float32)))
+        np.testing.assert_allclose(jt, closed, atol=1e-5)
+
+
+def test_backward_rates_match_reversal(toy):
+    t = 1.3
+    pt = toy.marginal_np(t)
+    rates = np.array(toy.backward_rates(jnp.asarray([2, 5]), jnp.asarray(t, jnp.float32)))
+    for row, x in zip(rates, (2, 5)):
+        expected = toy.q[x, :] * pt / pt[x]
+        expected[x] = 0.0
+        np.testing.assert_allclose(row, expected, rtol=1e-4)
+    assert (rates >= 0).all()
+
+
+def test_coefficients():
+    a1, a2 = trapezoidal_coefficients(0.5)
+    assert a1 == pytest.approx(2.0)
+    assert a2 == pytest.approx(1.0)
+    assert a1 - a2 == pytest.approx(1.0)
+    for th in (0.2, 0.35, 0.7):
+        a1, a2 = trapezoidal_coefficients(th)
+        assert a1 - a2 == pytest.approx(1.0)
+    c1, c2 = rk2_coefficients(0.5)
+    assert (c1, c2) == (0.0, 1.0)
+
+
+def test_tweedie_is_exact(toy, rng_key):
+    cfg = SamplerConfig(method="tweedie", n_steps=3, t_stop=1e-3)
+    xs = jax.jit(lambda k: sample_dense(k, toy, cfg, 120_000))(rng_key)
+    q = empirical(xs, 8)
+    assert kl(toy.p0, q) < 5e-4  # sampling noise floor ~ (S-1)/2N = 3e-5
+
+
+def test_trapezoidal_beats_tau_leaping(toy, rng_key):
+    n = 60_000
+    kls = {}
+    for method in ("tau_leaping", "theta_trapezoidal"):
+        cfg = SamplerConfig(method=method, n_steps=8, theta=0.5, t_stop=1e-3)
+        xs = jax.jit(lambda k: sample_dense(k, toy, cfg, n))(rng_key)
+        kls[method] = kl(toy.p0, empirical(xs, 8))
+    assert kls["theta_trapezoidal"] < kls["tau_leaping"]
+
+
+def test_error_decreases_with_steps(toy, rng_key):
+    n = 60_000
+    errs = []
+    for steps in (4, 16):
+        cfg = SamplerConfig(method="theta_trapezoidal", n_steps=steps, theta=0.5)
+        xs = jax.jit(lambda k: sample_dense(k, toy, cfg, n))(rng_key)
+        errs.append(kl(toy.p0, empirical(xs, 8)))
+    assert errs[1] < errs[0]
+
+
+def test_uniformization_unbiased(toy, rng_key):
+    xs, nfe, _ = uniformization_sample(rng_key, toy, batch=60_000, t_stop=1e-2)
+    q = empirical(xs, 8)
+    assert kl(toy.p0, q) < 5e-3
+    assert int(np.asarray(nfe).min()) >= 0
+    # NFE is random and dimension-dependent (the paper's Sec. 3.1 critique).
+    assert float(np.asarray(nfe).std()) > 0.0
+
+
+def test_reverse_kernel_rows_normalized(toy):
+    k = toy.reverse_kernel(2.0, 1.0)
+    np.testing.assert_allclose(k.sum(axis=1), 1.0, atol=1e-8)
+    assert (k >= 0).all()
+
+
+def test_adaptive_uniformization_exact_with_fewer_nfe(toy, rng_key):
+    """BEYOND-PAPER: piecewise rate bounds keep exactness, slash NFE."""
+    from repro.core import adaptive_uniformization_sample, uniformization_sample
+
+    xs_p, nfe_p, _ = uniformization_sample(rng_key, toy, 30_000, t_stop=3e-2)
+    xs_a, nfe_a, _ = adaptive_uniformization_sample(rng_key, toy, 30_000,
+                                                    t_stop=3e-2, n_intervals=6)
+    kl_p = kl(toy.p0, empirical(xs_p, 8))
+    kl_a = kl(toy.p0, empirical(xs_a, 8))
+    assert kl_a < max(2 * kl_p, 5e-3)  # same exactness up to noise
+    assert float(np.mean(np.asarray(nfe_a))) < 0.5 * float(np.mean(np.asarray(nfe_p)))

@@ -1,0 +1,43 @@
+"""Dry-run integration: one real (arch x shape x mesh) lowering in a fresh
+process (the 512-device XLA flag must be set before jax init).  Slow (~1 min);
+the full 78-combo sweep is the launch deliverable, not a unit test."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_single_combo_lowers_and_compiles(tmp_path):
+    out = tmp_path / "dry.jsonl"
+    code = (
+        "from repro.launch.dryrun import run_one\n"
+        "import json\n"
+        "rec = run_one('whisper_tiny', 'decode_32k', multi_pod=False,"
+        " verbose=False, with_probes=False)\n"
+        f"open(r'{out}', 'w').write(json.dumps(rec))\n"
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:]
+    rec = json.loads(out.read_text())
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["n_devices"] == 256
+    assert rec["memory"]["temp_size_in_bytes"] > 0
+    assert rec["roofline"]["flops_per_device"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_skip_matrix_is_honest():
+    from repro.launch.dryrun import run_one
+
+    rec = run_one("whisper_tiny", "long_500k", multi_pod=False, verbose=False,
+                  with_probes=False)
+    assert rec["status"] == "skipped"
+    assert "500k" in rec["reason"] or "audio" in rec["reason"]

@@ -1,0 +1,106 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs the ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_jump import fused_jump
+from repro.kernels import ops, ref
+
+
+# --------------------------------------------------------------------------- #
+# fused_jump
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("t,v", [(5, 64), (32, 200), (100, 513), (256, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_jump_matches_ref(t, v, dtype, rng_key):
+    ks = jax.random.split(rng_key, 5)
+    mu_a = (jax.nn.softmax(jax.random.normal(ks[0], (t, v)), -1) * 2.0).astype(dtype)
+    mu_b = (jax.nn.softmax(jax.random.normal(ks[1], (t, v)), -1) * 2.0).astype(dtype)
+    g = jax.random.gumbel(ks[2], (t, v))
+    u = jax.random.uniform(ks[3], (t,))
+    act = jax.random.bernoulli(ks[4], 0.6, (t,))
+    a1, a2, dt = 2.2222, 1.2222, 0.07
+    tok_r, jmp_r = ref.fused_jump_ref(mu_a, mu_b, a1, -a2, dt, g, u, act)
+    tok_k, jmp_k = fused_jump(mu_a, mu_b, g, u, act, coeff_a=a1, coeff_b=-a2,
+                              dt=dt, block_t=64, block_v=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(tok_r), np.asarray(tok_k))
+    np.testing.assert_array_equal(np.asarray(jmp_r), np.asarray(jmp_k))
+
+
+def test_fused_jump_single_intensity(rng_key):
+    """mu_b = None path (tau-leaping stage: a single intensity tensor)."""
+    t, v = 48, 300
+    ks = jax.random.split(rng_key, 4)
+    mu = jax.nn.softmax(jax.random.normal(ks[0], (t, v)), -1)
+    g = jax.random.gumbel(ks[1], (t, v))
+    u = jax.random.uniform(ks[2], (t,))
+    act = jnp.ones((t,), bool)
+    tok_r, jmp_r = ref.fused_jump_ref(mu, None, 1.0, 0.0, 0.3, g, u, act)
+    tok_k, jmp_k = fused_jump(mu, None, g, u, act, coeff_a=1.0, dt=0.3,
+                              block_t=32, block_v=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(tok_r), np.asarray(tok_k))
+    np.testing.assert_array_equal(np.asarray(jmp_r), np.asarray(jmp_k))
+
+
+@given(theta=st.floats(0.2, 0.8), dt=st.floats(0.01, 0.5))
+@settings(max_examples=8, deadline=None)
+def test_fused_jump_extrapolation_clip_property(theta, dt):
+    """Kernel honors the (a1 mu* - a2 mu)_+ clip: with mu* = 0 nothing jumps."""
+    from repro.core import trapezoidal_coefficients
+
+    a1, a2 = trapezoidal_coefficients(theta)
+    t, v = 16, 128
+    key = jax.random.PRNGKey(int(theta * 1e6))
+    mu = jax.nn.softmax(jax.random.normal(key, (t, v)), -1)
+    zeros = jnp.zeros((t, v))
+    g = jax.random.gumbel(jax.random.fold_in(key, 1), (t, v))
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (t,))
+    act = jnp.ones((t,), bool)
+    _, jmp = fused_jump(zeros, mu, g, u, act, coeff_a=a1, coeff_b=-a2, dt=dt,
+                        interpret=True)
+    assert not bool(jmp.any())
+
+
+# --------------------------------------------------------------------------- #
+# flash_attention
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,h,s,t,d", [(1, 1, 32, 32, 32), (2, 3, 65, 65, 64),
+                                       (1, 2, 64, 128, 32)])
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, h, s, t, d, causal, dtype, rng_key):
+    if causal and s != t:
+        pytest.skip("causal requires square here")
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, h, t, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, h, t, d)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32,
+                          interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_sliding_window(rng_key):
+    b, h, s, d, w = 1, 2, 96, 32, 17
+    ks = jax.random.split(rng_key, 3)
+    q, k, v = (jax.random.normal(kk, (b, h, s, d)) for kk in ks)
+    out = flash_attention(q, k, v, causal=True, window=w, block_q=32,
+                          block_k=32, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_ops_dispatch_cpu_fallback(rng_key):
+    """On CPU, ops.* uses the oracle unless force_kernel; both agree."""
+    assert not ops.on_tpu()
+    ks = jax.random.split(rng_key, 3)
+    q, k, v = (jax.random.normal(kk, (1, 2, 40, 32)) for kk in ks)
+    a = ops.attention(q, k, v, causal=True)
+    b = ops.attention(q, k, v, causal=True, force_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,62 @@
+"""Forward-process correctness: corruption marginals match analytic laws."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import loglinear_schedule, masked_process, uniform_process
+
+
+def test_masked_corruption_marginal(rng_key):
+    proc = masked_process(vocab_size=11, schedule=loglinear_schedule())
+    x0 = jnp.zeros((4000, 8), jnp.int32)
+    t = 0.55
+    x_t = proc.corrupt(rng_key, x0, jnp.asarray(t))
+    frac = float((x_t == proc.mask_id).mean())
+    expected = float(proc.schedule.mask_prob(jnp.asarray(t)))
+    assert frac == pytest.approx(expected, abs=0.01)
+    # unmasked entries keep their value
+    keep = x_t != proc.mask_id
+    assert bool((jnp.where(keep, x_t, 0) == 0).all())
+
+
+def test_uniform_corruption_marginal(rng_key):
+    v = 7
+    proc = uniform_process(vocab_size=v, schedule=loglinear_schedule())
+    x0 = jnp.full((4000, 8), 3, jnp.int32)
+    t = 0.7
+    x_t = proc.corrupt(rng_key, x0, jnp.asarray(t))
+    alpha = float(proc.schedule.alpha(jnp.asarray(t)))
+    # P(x_t = 3) = alpha + (1-alpha)/v ; P(other) = (1-alpha)/v
+    p3 = float((x_t == 3).mean())
+    p0 = float((x_t == 0).mean())
+    assert p3 == pytest.approx(alpha + (1 - alpha) / v, abs=0.015)
+    assert p0 == pytest.approx((1 - alpha) / v, abs=0.015)
+
+
+def test_per_row_times(rng_key):
+    proc = masked_process(vocab_size=5, schedule=loglinear_schedule())
+    x0 = jnp.zeros((2, 4000), jnp.int32)
+    t = jnp.asarray([0.1, 0.9])
+    x_t = proc.corrupt(rng_key, x0, t)
+    m = np.array((x_t == proc.mask_id).mean(axis=1))
+    e = np.array(proc.schedule.mask_prob(t))
+    np.testing.assert_allclose(m, e, atol=0.02)
+
+
+def test_backward_rates_masked_sum(rng_key):
+    proc = masked_process(vocab_size=9, schedule=loglinear_schedule())
+    probs = jax.nn.softmax(jax.random.normal(rng_key, (3, 5, 9)), -1)
+    t = jnp.asarray(0.4)
+    rates = proc.backward_rates_masked(probs, t)
+    lam = float(proc.schedule.unmask_rate(t))
+    np.testing.assert_allclose(np.array(rates.sum(-1)), lam, rtol=1e-4)
+
+
+def test_transition_prob_consistency():
+    proc = masked_process(vocab_size=4, schedule=loglinear_schedule())
+    # survival from 0.2 to 0.6 * survival 0.6 to 0.9 == survival 0.2 to 0.9
+    a = float(proc.transition_prob(jnp.asarray(0.2), jnp.asarray(0.6)))
+    b = float(proc.transition_prob(jnp.asarray(0.6), jnp.asarray(0.9)))
+    c = float(proc.transition_prob(jnp.asarray(0.2), jnp.asarray(0.9)))
+    assert a * b == pytest.approx(c, rel=1e-5)

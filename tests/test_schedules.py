@@ -1,0 +1,75 @@
+"""Schedule invariants — property-based where it matters."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import constant_schedule, cosine_schedule, get_schedule, loglinear_schedule, time_grid, theta_section
+
+SCHEDULES = [loglinear_schedule(), constant_schedule(), cosine_schedule()]
+
+
+@pytest.mark.parametrize("sched", SCHEDULES, ids=lambda s: s.name)
+def test_sigma_bar_zero_at_origin(sched):
+    assert float(sched.sigma_bar(jnp.asarray(0.0))) == pytest.approx(0.0, abs=1e-6)
+
+
+@pytest.mark.parametrize("sched", SCHEDULES, ids=lambda s: s.name)
+@given(t=st.floats(1e-4, 0.999))
+@settings(max_examples=25, deadline=None)
+def test_alpha_in_unit_interval_and_monotone(sched, t):
+    tt = t * sched.t_max
+    a = float(sched.alpha(jnp.asarray(tt)))
+    a2 = float(sched.alpha(jnp.asarray(tt * 0.5)))
+    assert 0.0 < a <= 1.0
+    assert a2 >= a - 1e-6  # alpha decreasing in t
+
+
+@pytest.mark.parametrize("sched", SCHEDULES, ids=lambda s: s.name)
+def test_sigma_is_derivative_of_sigma_bar(sched):
+    ts = np.linspace(0.05, 0.9 * sched.t_max, 17)
+    h = 1e-4
+    num = (np.array(sched.sigma_bar(jnp.asarray(ts + h)))
+           - np.array(sched.sigma_bar(jnp.asarray(ts - h)))) / (2 * h)
+    ana = np.array(sched.sigma(jnp.asarray(ts)))
+    np.testing.assert_allclose(num, ana, rtol=2e-3)
+
+
+@pytest.mark.parametrize("sched", [loglinear_schedule(), constant_schedule()])
+@given(a=st.floats(0.05, 0.95))
+@settings(max_examples=25, deadline=None)
+def test_alpha_inv_roundtrip(sched, a):
+    t = float(sched.alpha_inv(jnp.asarray(a)))
+    back = float(sched.alpha(jnp.asarray(t)))
+    assert back == pytest.approx(a, rel=1e-4)
+
+
+def test_score_scale_matches_formula():
+    s = loglinear_schedule(eps=1e-3)
+    t = jnp.asarray(0.3)
+    sb = s.sigma_bar(t)
+    expected = jnp.exp(-sb) / (1 - jnp.exp(-sb))
+    assert float(s.score_scale(t)) == pytest.approx(float(expected), rel=1e-5)
+
+
+def test_time_grid_monotone_decreasing():
+    g = np.array(time_grid(16, 1.0, 1e-3, "uniform"))
+    assert g[0] == pytest.approx(1.0)
+    assert g[-1] == pytest.approx(1e-3)
+    assert (np.diff(g) < 0).all()
+    q = np.array(time_grid(16, 1.0, 1e-3, "quadratic"))
+    assert (np.diff(q) < 0).all()
+
+
+@given(theta=st.floats(0.05, 0.95))
+@settings(max_examples=25, deadline=None)
+def test_theta_section_between(theta):
+    t0, t1 = 0.8, 0.5
+    rho = float(theta_section(jnp.asarray(t0), jnp.asarray(t1), theta))
+    assert t1 <= rho <= t0
+
+
+def test_registry():
+    assert get_schedule("loglinear").name == "loglinear"
+    with pytest.raises(ValueError):
+        get_schedule("nope")
