@@ -15,7 +15,7 @@ import numpy as np
 
 from .common import csv_row
 
-from repro.core import SamplerConfig, cosine_schedule, masked_process, sample_masked
+from repro.core import MaskedEngine, SamplerConfig, cosine_schedule, masked_process, sample
 from repro.data import PottsImages, TokenDataset, frechet_distance
 from repro.models.config import ModelConfig
 from repro.serve import make_score_fn
@@ -47,15 +47,15 @@ def run(side: int = 8, n_colors: int = 16, train_steps: int = 300,
                                   log_fn=lambda *_: None)
     rows = [csv_row("image_nfe/train", 0.0,
                     f"final_elbo={hist[-1]['elbo']:.3f}")]
-    score_fn = make_score_fn(params, cfg)
+    engine = MaskedEngine(process=proc, score_fn=make_score_fn(params, cfg))
     key = jax.random.PRNGKey(11)
     for method in ("euler", "tau_leaping", "theta_trapezoidal",
                    "parallel_decoding"):
         for nfe in nfe_grid:
             sampler = SamplerConfig.for_nfe(method, nfe, theta=theta)
             t0 = time.time()
-            toks = jax.jit(lambda k: sample_masked(
-                k, proc, score_fn, sampler, eval_batch, seq))(key)
+            toks = jax.jit(lambda k: sample(
+                k, engine, sampler, batch=eval_batch, seq_len=seq).tokens)(key)
             toks.block_until_ready()
             dt = time.time() - t0
             fd = frechet_distance(f_val, potts.features(np.asarray(toks)))

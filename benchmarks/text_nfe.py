@@ -18,7 +18,7 @@ import numpy as np
 
 from .common import csv_row
 
-from repro.core import SamplerConfig, loglinear_schedule, masked_process, sample_masked
+from repro.core import MaskedEngine, SamplerConfig, loglinear_schedule, masked_process, sample
 from repro.data import MarkovText, TokenDataset
 from repro.models.config import ModelConfig
 from repro.serve import make_score_fn
@@ -58,7 +58,7 @@ def get_model(train_steps: int = 300):
 def run(nfe_grid=(8, 16, 32), eval_batch: int = 128, train_steps: int = 300,
         theta: float = 0.4) -> list[str]:
     params, cfg, proc, corpus, origin = get_model(train_steps)
-    score_fn = make_score_fn(params, cfg)
+    engine = MaskedEngine(process=proc, score_fn=make_score_fn(params, cfg))
     key = jax.random.PRNGKey(7)
     rows = [csv_row(f"text_nfe/model:{origin}", 0.0,
                     f"data_ppl={corpus.perplexity(corpus.sample(256, SEQ, seed=5)):.2f}")]
@@ -67,8 +67,8 @@ def run(nfe_grid=(8, 16, 32), eval_batch: int = 128, train_steps: int = 300,
         for nfe in nfe_grid:
             sampler = SamplerConfig.for_nfe(method, nfe, theta=theta)
             t0 = time.time()
-            toks = jax.jit(lambda k: sample_masked(
-                k, proc, score_fn, sampler, eval_batch, SEQ))(key)
+            toks = jax.jit(lambda k: sample(
+                k, engine, sampler, batch=eval_batch, seq_len=SEQ).tokens)(key)
             toks.block_until_ready()
             dt = time.time() - t0
             ppl = corpus.perplexity(np.asarray(toks))

@@ -13,7 +13,7 @@ import numpy as np
 
 from .common import csv_row, empirical, kl_divergence
 
-from repro.core import DenseCTMC, SamplerConfig, sample_dense, uniform_rate_matrix
+from repro.core import DenseCTMC, DenseEngine, SamplerConfig, sample, uniform_rate_matrix
 
 
 def run(n_samples: int = 30_000, steps: int = 8, n_states: int = 15,
@@ -21,7 +21,8 @@ def run(n_samples: int = 30_000, steps: int = 8, n_states: int = 15,
         seed: int = 0) -> list[str]:
     rng = np.random.default_rng(seed)
     p0 = rng.dirichlet(np.ones(n_states))
-    ctmc = DenseCTMC(q=uniform_rate_matrix(n_states), p0=p0, t_max=12.0)
+    engine = DenseEngine(DenseCTMC(q=uniform_rate_matrix(n_states), p0=p0,
+                                   t_max=12.0))
     key = jax.random.PRNGKey(seed)
     rows = []
     for method in ("theta_trapezoidal", "theta_rk2"):
@@ -31,7 +32,8 @@ def run(n_samples: int = 30_000, steps: int = 8, n_states: int = 15,
                 continue
             cfg = SamplerConfig(method=method, n_steps=steps, theta=theta)
             t0 = time.time()
-            xs = jax.jit(lambda k: sample_dense(k, ctmc, cfg, n_samples))(key)
+            xs = jax.jit(
+                lambda k: sample(k, engine, cfg, batch=n_samples).tokens)(key)
             xs.block_until_ready()
             dt = time.time() - t0
             kl = kl_divergence(p0, empirical(np.asarray(xs), n_states))

@@ -13,7 +13,7 @@ import numpy as np
 
 from .common import csv_row, empirical, fit_loglog_slope, kl_divergence
 
-from repro.core import DenseCTMC, SamplerConfig, sample_dense, uniform_rate_matrix
+from repro.core import DenseCTMC, DenseEngine, SamplerConfig, sample, uniform_rate_matrix
 
 
 def run(n_samples: int = 30_000, steps_grid=(4, 8, 16), theta: float = 0.5,
@@ -21,7 +21,8 @@ def run(n_samples: int = 30_000, steps_grid=(4, 8, 16), theta: float = 0.5,
         methods=("tau_leaping", "theta_rk2", "theta_trapezoidal")) -> list[str]:
     rng = np.random.default_rng(seed)
     p0 = rng.dirichlet(np.ones(n_states))  # uniform on the simplex (Sec. 6.1)
-    ctmc = DenseCTMC(q=uniform_rate_matrix(n_states), p0=p0, t_max=t_max)
+    engine = DenseEngine(DenseCTMC(q=uniform_rate_matrix(n_states), p0=p0,
+                                   t_max=t_max))
     key = jax.random.PRNGKey(seed)
     rows = []
     for method in methods:
@@ -30,7 +31,8 @@ def run(n_samples: int = 30_000, steps_grid=(4, 8, 16), theta: float = 0.5,
             cfg = SamplerConfig(method=method, n_steps=steps, theta=theta,
                                 t_stop=1e-3)
             t0 = time.time()
-            xs = jax.jit(lambda k: sample_dense(k, ctmc, cfg, n_samples))(key)
+            xs = jax.jit(
+                lambda k: sample(k, engine, cfg, batch=n_samples).tokens)(key)
             xs.block_until_ready()
             dt = time.time() - t0
             kls.append(kl_divergence(p0, empirical(np.asarray(xs), n_states)))

@@ -16,8 +16,9 @@ import numpy as np
 
 from repro.core import (
     DenseCTMC,
+    DenseEngine,
     SamplerConfig,
-    sample_dense,
+    sample,
     uniform_rate_matrix,
 )
 
@@ -26,12 +27,13 @@ def main() -> None:
     n_states, t_max, n_samples, steps = 15, 12.0, 100_000, 8
     rng = np.random.default_rng(0)
     p0 = rng.dirichlet(np.ones(n_states))  # target distribution on the simplex
-    ctmc = DenseCTMC(q=uniform_rate_matrix(n_states), p0=p0, t_max=t_max)
+    engine = DenseEngine(DenseCTMC(q=uniform_rate_matrix(n_states), p0=p0,
+                                   t_max=t_max))
     key = jax.random.PRNGKey(0)
 
     def kl_of(method: str, theta: float = 0.5) -> float:
         cfg = SamplerConfig(method=method, n_steps=steps, theta=theta)
-        xs = jax.jit(lambda k: sample_dense(k, ctmc, cfg, n_samples))(key)
+        xs = jax.jit(lambda k: sample(k, engine, cfg, batch=n_samples).tokens)(key)
         q = np.bincount(np.asarray(xs), minlength=n_states) / n_samples
         return float((p0 * np.log(p0 / np.maximum(q, 1e-12))).sum())
 

@@ -19,7 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import SamplerConfig, loglinear_schedule, masked_process
+from repro.core import SamplerConfig, list_solvers, loglinear_schedule, masked_process
 from repro.models import init_params
 from repro.serve import Request, ServingEngine
 
@@ -33,11 +33,13 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--nfe", type=int, default=16)
     ap.add_argument("--theta", type=float, default=0.4)
+    ap.add_argument("--method", default="theta_trapezoidal",
+                    choices=list_solvers())
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     process = masked_process(cfg.vocab_size, loglinear_schedule())
-    sampler = SamplerConfig.for_nfe("theta_trapezoidal", args.nfe,
+    sampler = SamplerConfig.for_nfe(args.method, args.nfe,
                                     theta=args.theta)
     params, _ = init_params(jax.random.PRNGKey(0), cfg)
 
@@ -50,7 +52,7 @@ def main() -> None:
     wall = time.time() - t0
 
     tok_total = sum(r.tokens.size for r in results)
-    print(f"arch={cfg.name} (reduced) | sampler=theta-trapezoidal "
+    print(f"arch={cfg.name} (reduced) | sampler={args.method} "
           f"NFE={sampler.nfe} theta={args.theta}")
     print(f"served {len(results)} requests / {tok_total} tokens "
           f"in {wall:.2f}s  ({tok_total / wall:.0f} tok/s incl. compile)")

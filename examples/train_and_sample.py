@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SamplerConfig, loglinear_schedule, masked_process, sample_masked
+from repro.core import MaskedEngine, SamplerConfig, loglinear_schedule, masked_process, sample
 from repro.data import MarkovText, TokenDataset
 from repro.models.config import ModelConfig
 from repro.serve import make_score_fn
@@ -84,7 +84,7 @@ def main() -> None:
             print(f"saved checkpoint to {path}")
 
     # ---- sample with every solver at matched NFE; score under the true law.
-    score_fn = make_score_fn(params, cfg)
+    engine = MaskedEngine(process=proc, score_fn=make_score_fn(params, cfg))
     key = jax.random.PRNGKey(42)
     print(f"\n== generative perplexity under the TRUE Markov law "
           f"(NFE={args.nfe}; data ppl="
@@ -92,11 +92,11 @@ def main() -> None:
     for method in ("euler", "tweedie", "tau_leaping", "theta_rk2",
                    "theta_trapezoidal", "parallel_decoding"):
         sampler = SamplerConfig.for_nfe(method, args.nfe, theta=0.4)
-        toks = jax.jit(
-            lambda k: sample_masked(k, proc, score_fn, sampler,
-                                    args.eval_batch, args.seq_len))(key)
-        ppl = corpus.perplexity(np.asarray(toks))
-        print(f"{method:20s} steps={sampler.n_steps:3d} NFE={sampler.nfe:3d} "
+        result = jax.jit(
+            lambda k: sample(k, engine, sampler, batch=args.eval_batch,
+                             seq_len=args.seq_len))(key)
+        ppl = corpus.perplexity(np.asarray(result.tokens))
+        print(f"{method:20s} steps={sampler.n_steps:3d} NFE={result.nfe:3d} "
               f"ppl={ppl:9.2f}")
 
 

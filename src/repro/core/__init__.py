@@ -18,11 +18,21 @@ from .dense import (
 from .solvers import (
     METHODS,
     TWO_STAGE,
+    DenseEngine,
+    Engine,
+    MaskedEngine,
+    SampleResult,
     SamplerConfig,
+    Solver,
+    UniformEngine,
     dense_step,
     fhs_sample,
+    get_solver,
+    list_solvers,
     masked_step,
+    register_solver,
     rk2_coefficients,
+    sample,
     sample_dense,
     sample_masked,
     sample_uniform,
@@ -38,6 +48,11 @@ __all__ = [
     "DiffusionProcess", "masked_process", "uniform_process",
     "DenseCTMC", "adaptive_uniformization_sample", "uniform_rate_matrix",
     "uniformization_sample",
+    # solver/engine API
+    "Engine", "DenseEngine", "MaskedEngine", "UniformEngine",
+    "Solver", "register_solver", "get_solver", "list_solvers",
+    "sample", "SampleResult",
+    # legacy solver API (kept: bit-identical wrappers over the new entrypoint)
     "METHODS", "TWO_STAGE", "SamplerConfig", "dense_step", "fhs_sample",
     "masked_step", "rk2_coefficients", "sample_dense", "sample_masked",
     "sample_uniform", "set_fused_jump", "trapezoidal_coefficients", "uniform_step",

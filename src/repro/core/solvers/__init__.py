@@ -1,0 +1,85 @@
+"""Inference solvers for discrete diffusion models — registry-backed API.
+
+Layout:
+
+* ``registry``  — ``@register_solver`` / ``get_solver`` / ``list_solvers``;
+* ``config``    — ``SamplerConfig`` (with the ``fused`` execution-path field)
+  and the theta-scheme coefficient formulas;
+* ``base``      — the ``Solver`` base class (step loop, tracing, NFE);
+* ``engines``   — the ``Engine`` protocol and the ``DenseEngine`` /
+  ``MaskedEngine`` / ``UniformEngine`` state-space implementations;
+* ``schemes``   — the seven registered solver classes (Euler, tau-leaping,
+  Tweedie, theta-RK-2, theta-trapezoidal, parallel decoding, FHS);
+* ``sampling``  — the single ``sample(key, engine, config, ...)`` entrypoint;
+* ``compat``    — bit-identical legacy wrappers (``sample_dense`` /
+  ``sample_masked`` / ``sample_uniform``, ``*_step``, ``METHODS``).
+
+Quickstart::
+
+    from repro.core import DenseEngine, SamplerConfig, sample
+    result = sample(key, DenseEngine(ctmc),
+                    SamplerConfig(method="theta_trapezoidal", n_steps=16),
+                    batch=4096)
+    result.tokens, result.nfe
+
+Registering a custom scheme::
+
+    from repro.core import Solver, register_solver
+
+    @register_solver("my_scheme")
+    class MySolver(Solver):
+        def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+            mu = engine.rates(x, t0)
+            return engine.apply_jump(key, x, mu, t0 - t1)
+"""
+from .registry import get_solver, list_solvers, register_solver
+from .config import (
+    SamplerConfig,
+    ScoreFn,
+    rk2_coefficients,
+    set_fused_jump,
+    trapezoidal_coefficients,
+)
+from .base import Solver
+from .engines import DenseEngine, Engine, MaskedEngine, UniformEngine
+from .schemes import (
+    EulerSolver,
+    FHSSolver,
+    ParallelDecodingSolver,
+    TauLeapingSolver,
+    ThetaRK2Solver,
+    ThetaTrapezoidalSolver,
+    TweedieSolver,
+    fhs_sample,
+    parallel_decoding_step,
+)
+from .sampling import SampleResult, sample
+from .compat import (
+    METHODS,
+    TWO_STAGE,
+    dense_step,
+    masked_step,
+    sample_dense,
+    sample_masked,
+    sample_uniform,
+    uniform_step,
+)
+
+__all__ = [
+    # registry
+    "register_solver", "get_solver", "list_solvers",
+    # config
+    "SamplerConfig", "ScoreFn", "set_fused_jump",
+    "trapezoidal_coefficients", "rk2_coefficients",
+    # base + engines
+    "Solver", "Engine", "DenseEngine", "MaskedEngine", "UniformEngine",
+    # solver classes
+    "EulerSolver", "TauLeapingSolver", "TweedieSolver", "ThetaRK2Solver",
+    "ThetaTrapezoidalSolver", "ParallelDecodingSolver", "FHSSolver",
+    "fhs_sample", "parallel_decoding_step",
+    # entrypoint
+    "sample", "SampleResult",
+    # legacy wrappers
+    "METHODS", "TWO_STAGE", "sample_dense", "sample_masked", "sample_uniform",
+    "dense_step", "masked_step", "uniform_step",
+]

@@ -1,0 +1,76 @@
+"""Solver base class: one scheme definition shared by every engine.
+
+A :class:`Solver` says *what a scheme computes* per backward step — stage
+structure, intensity combinations, PRNG splits — strictly in terms of the
+engine primitives (``rates`` / ``apply_jump``; see ``engines.py``), so the
+two-stage theta-schemes are written once instead of per state space.  The
+default :meth:`run` owns the time grid loop, the per-step key folding
+(``fold_in(loop_key, i)``), the optional trace callback, and the engine's
+finalize pass; whole-trajectory samplers (FHS) override it.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# trace_fn(step_index, x_after_step, t_next) -> pytree collected across steps.
+TraceFn = Callable[[Array, Array, Array], Any]
+
+
+class Solver:
+    """Base class for inference schemes; subclasses register via @register_solver."""
+
+    name: str = ""
+    #: score-network evaluations per step (2 for the two-stage theta-schemes).
+    nfe_per_step: int = 1
+
+    @classmethod
+    def validate(cls, config) -> None:
+        """Raise ValueError for config values this scheme cannot run with."""
+        if not (0.0 < config.theta <= 1.0):
+            raise ValueError("theta must lie in (0, 1]")
+
+    # ------------------------------------------------------------------ hooks
+    def prepare(self, engine, config) -> Any:
+        """Host-side per-run setup (e.g. analytic kernels); result is fed to step."""
+        return None
+
+    def step(self, key: jax.Array, engine, x: Array, t0: Array, t1: Array,
+             config, *, i: Optional[Array] = None, aux: Any = None) -> Array:
+        """One backward step t0 -> t1 (t1 < t0) on the given engine."""
+        raise NotImplementedError
+
+    # -------------------------------------------------------------- execution
+    def run_nfe(self, config, *, seq_len: Optional[int] = None) -> int:
+        """Score-network evaluations a full run consumes (finalize excluded)."""
+        return config.n_steps * self.nfe_per_step
+
+    def run(self, key: jax.Array, engine, config, batch: int,
+            seq_len: Optional[int] = None, trace_fn: Optional[TraceFn] = None):
+        """Integrate the backward process over the engine's time grid.
+
+        Returns ``(tokens, trace)`` where ``trace`` is None without a trace_fn,
+        else the stacked per-step outputs of ``trace_fn(i, x, t_next)``.
+        """
+        times = engine.time_grid(config)
+        x0, k_loop = engine.prior(key, batch, seq_len)
+        aux = self.prepare(engine, config)
+
+        def body(i, x):
+            return self.step(jax.random.fold_in(k_loop, i), engine, x,
+                             times[i], times[i + 1], config, i=i, aux=aux)
+
+        if trace_fn is None:
+            x = jax.lax.fori_loop(0, config.n_steps, body, x0)
+            return engine.finalize(x, times[-1]), None
+
+        def scan_body(x, i):
+            x = body(i, x)
+            return x, trace_fn(i, x, times[i + 1])
+
+        x, trace = jax.lax.scan(scan_body, x0, jnp.arange(config.n_steps))
+        return engine.finalize(x, times[-1]), trace

@@ -1,0 +1,133 @@
+"""Backward-compatible wrappers over the class-based Solver/Engine API.
+
+The pre-registry API — ``sample_dense`` / ``sample_masked`` / ``sample_uniform``
+drivers, the per-engine ``*_step`` functions, and the ``METHODS`` /
+``TWO_STAGE`` tuples — is preserved here as thin shims.  Outputs are
+bit-identical to the new ``sample(key, engine, config, ...)`` entrypoint for
+the same key and config (the engines reproduce the legacy PRNG-key and
+time-grid conventions exactly).  New code should construct an engine and call
+:func:`repro.core.sample` directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dense import DenseCTMC
+from ..process import DiffusionProcess
+from .config import SamplerConfig, ScoreFn, fused_jump_default
+from .engines import DenseEngine, MaskedEngine, UniformEngine
+from .registry import get_solver, list_solvers
+from .sampling import sample
+
+Array = jnp.ndarray
+
+# Derived from the registry (registration order); list_solvers() is live, this
+# tuple is the import-time snapshot kept for backward compatibility.
+METHODS = tuple(list_solvers())
+
+# Methods that evaluate the score network twice per step.
+TWO_STAGE = tuple(n for n in METHODS if get_solver(n).nfe_per_step == 2)
+
+
+def sample_dense(
+    key: jax.Array,
+    ctmc: DenseCTMC,
+    config: SamplerConfig,
+    batch: int,
+) -> Array:
+    """Draw `batch` samples by integrating the backward CTMC with the given scheme."""
+    return sample(key, DenseEngine(ctmc), config, batch=batch).tokens
+
+
+def sample_masked(
+    key: jax.Array,
+    process: DiffusionProcess,
+    score_fn: ScoreFn,
+    config: SamplerConfig,
+    batch: int,
+    seq_len: int,
+) -> Array:
+    """Generate token sequences from an all-mask canvas with the chosen solver."""
+    return sample(key, MaskedEngine(process=process, score_fn=score_fn), config,
+                  batch=batch, seq_len=seq_len).tokens
+
+
+def sample_uniform(
+    key: jax.Array,
+    process: DiffusionProcess,
+    score_fn: ScoreFn,
+    config: SamplerConfig,
+    batch: int,
+    seq_len: int,
+) -> Array:
+    return sample(key, UniformEngine(process=process, score_fn=score_fn), config,
+                  batch=batch, seq_len=seq_len).tokens
+
+
+_STEPPABLE = ("euler", "tau_leaping", "theta_rk2", "theta_trapezoidal")
+
+
+def _step_config(method: str, theta: float) -> SamplerConfig:
+    """Config for a single legacy step call.
+
+    The old *_step functions read theta only inside the two-stage branches, so
+    callers could pass any placeholder for single-stage methods; preserve that
+    by only forwarding theta where it is meaningful.
+    """
+    if get_solver(method).nfe_per_step == 2:
+        return SamplerConfig(method=method, theta=theta)
+    return SamplerConfig(method=method)
+
+
+def dense_step(
+    key: jax.Array,
+    ctmc: DenseCTMC,
+    x: Array,
+    t0: Array,
+    t1: Array,
+    method: str,
+    theta: float,
+) -> Array:
+    """One backward step t0 -> t1 (t1 < t0) of the chosen scheme on the dense engine."""
+    if method not in _STEPPABLE:
+        raise ValueError(f"dense engine does not implement {method!r}")
+    cfg = _step_config(method, theta)
+    return get_solver(method)().step(key, DenseEngine(ctmc), x, t0, t1, cfg)
+
+
+def masked_step(
+    key: jax.Array,
+    process: DiffusionProcess,
+    score_fn: ScoreFn,
+    x: Array,
+    t0: Array,
+    t1: Array,
+    method: str,
+    theta: float,
+) -> Array:
+    """One backward step t0 -> t1 for masked diffusion with a neural score net."""
+    if method not in _STEPPABLE + ("tweedie",):
+        raise ValueError(f"masked engine does not implement {method!r} as a step")
+    engine = MaskedEngine(process=process, score_fn=score_fn,
+                          fused=fused_jump_default())
+    cfg = _step_config(method, theta)
+    return get_solver(method)().step(key, engine, x, t0, t1, cfg)
+
+
+def uniform_step(
+    key: jax.Array,
+    process: DiffusionProcess,
+    score_fn: ScoreFn,
+    x: Array,
+    t0: Array,
+    t1: Array,
+    method: str,
+    theta: float,
+) -> Array:
+    """One backward step for factorized uniform-state diffusion."""
+    if method not in _STEPPABLE:
+        raise ValueError(f"uniform engine does not implement {method!r}")
+    engine = UniformEngine(process=process, score_fn=score_fn)
+    cfg = _step_config(method, theta)
+    return get_solver(method)().step(key, engine, x, t0, t1, cfg)

@@ -1,0 +1,90 @@
+"""Sampler configuration and the theta-scheme coefficient formulas.
+
+``SamplerConfig`` is a frozen value object shared by every engine; per-method
+validation and NFE accounting are delegated to the registered solver class, so
+the config stays method-agnostic while the registry remains the single source
+of truth for what exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .registry import get_solver
+
+Array = jnp.ndarray
+
+# score_fn(tokens [B, L], t scalar) -> probs/scores [B, L, V] over the data vocab.
+ScoreFn = Callable[[Array, Array], Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    method: str = "theta_trapezoidal"
+    n_steps: int = 64
+    theta: float = 0.5
+    t_stop: float = 1e-3
+    grid: str = "uniform"
+    # parallel decoding only:
+    pd_temperature: float = 1.0
+    # Route two-intensity jump updates through the fused Pallas kernel
+    # (repro.kernels.fused_jump) on engines that support it.  Replaces the old
+    # module-global toggled by the (deprecated) set_fused_jump().
+    fused: bool = False
+
+    def __post_init__(self):
+        get_solver(self.method).validate(self)  # unknown method raises here
+
+    @property
+    def nfe_per_step(self) -> int:
+        return get_solver(self.method).nfe_per_step
+
+    @property
+    def nfe(self) -> int:
+        return self.n_steps * self.nfe_per_step
+
+    @staticmethod
+    def for_nfe(method: str, nfe: int, **kw) -> "SamplerConfig":
+        """Build a config with an *equalized* NFE budget (paper's comparison basis)."""
+        per = get_solver(method).nfe_per_step
+        return SamplerConfig(method=method, n_steps=max(nfe // per, 1), **kw)
+
+
+def trapezoidal_coefficients(theta: float) -> tuple[float, float]:
+    """alpha_1 = 1/(2 th (1-th)), alpha_2 = (th^2 + (1-th)^2)/(2 th (1-th))."""
+    a1 = 1.0 / (2.0 * theta * (1.0 - theta))
+    a2 = ((1.0 - theta) ** 2 + theta**2) / (2.0 * theta * (1.0 - theta))
+    return a1, a2
+
+
+def rk2_coefficients(theta: float) -> tuple[float, float]:
+    """(1 - 1/(2 theta), 1/(2 theta)) — interpolation for th > 1/2, extrapolation below."""
+    return 1.0 - 1.0 / (2.0 * theta), 1.0 / (2.0 * theta)
+
+
+# --------------------------------------------------------------------------- #
+# Deprecated process-global fused-jump toggle.
+# --------------------------------------------------------------------------- #
+
+_FUSED_JUMP_DEFAULT = False
+
+
+def set_fused_jump(enabled: bool) -> None:
+    """Deprecated: set ``SamplerConfig(fused=True)`` / ``MaskedEngine(fused=True)``.
+
+    Kept as a process-global *default* so legacy call sites keep working: the
+    flag is OR-ed into the engine's fused setting when a sample run starts.
+    """
+    warnings.warn(
+        "set_fused_jump() is deprecated; use SamplerConfig(fused=True) or "
+        "MaskedEngine(fused=True) instead",
+        DeprecationWarning, stacklevel=2)
+    global _FUSED_JUMP_DEFAULT
+    _FUSED_JUMP_DEFAULT = bool(enabled)
+
+
+def fused_jump_default() -> bool:
+    return _FUSED_JUMP_DEFAULT

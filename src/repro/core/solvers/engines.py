@@ -1,0 +1,359 @@
+"""State-space engines: how jumps are represented and applied per state space.
+
+An :class:`Engine` supplies the primitives every scheme is written against:
+
+* ``time_grid(config)`` — the backward discretization (the dense engine keeps a
+  host-side numpy grid so analytic per-step kernels stay buildable under jit);
+* ``prior(key, batch, seq_len) -> (x0, loop_key)`` — the t=T canvas plus the
+  key the step loop folds per iteration.  Engines that consume no entropy for
+  the prior (masked: all-mask canvas) return the key unchanged, which keeps the
+  legacy PRNG streams bit-identical;
+* ``rates(x, t)`` — backward intensities in the engine's canonical layout
+  (dense: per jump magnitude nu, [B, 2S-1]; factorized: per target token,
+  [B, L, V] with inactive positions zeroed);
+* ``apply_jump(key, x, rates, dt, ...)`` — apply one jump update.  The default
+  is the engine's exact tau-leap law (Poisson counts / Bernoulli thinning);
+  ``linear=True`` selects the linearized single-jump Euler kernel.  Passing
+  ``rates_b``/``coeff_a``/``coeff_b`` applies the clipped combination
+  ``(coeff_a * rates + coeff_b * rates_b)_+`` — the theta-scheme stage-2 form —
+  which the masked engine can route through the fused Pallas kernel;
+* ``finalize(x, t_last)`` — post-loop cleanup (masked: greedy-fill stragglers).
+
+Engine-specific exact steps (``tweedie_*``) live on the engines that admit
+them; the dense engine precomputes analytic reverse kernels, the masked engine
+uses the closed-form unmask probability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from ..dense import DenseCTMC
+from ..process import DiffusionProcess
+from ..schedules import time_grid as _schedule_time_grid
+from .config import ScoreFn, fused_jump_default
+
+Array = jnp.ndarray
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """Structural protocol every state-space engine implements."""
+
+    def time_grid(self, config) -> Array: ...
+
+    def prior(self, key: jax.Array, batch: int,
+              seq_len: Optional[int] = None) -> tuple[Array, jax.Array]: ...
+
+    def rates(self, x: Array, t: Array) -> Array: ...
+
+    def apply_jump(self, key: jax.Array, x: Array, rates: Array, dt: Array, *,
+                   linear: bool = False, rates_b: Optional[Array] = None,
+                   coeff_a: float = 1.0, coeff_b: float = 0.0) -> Array: ...
+
+    def finalize(self, x: Array, t_last: Array) -> Array: ...
+
+
+def _combine(rates: Array, rates_b: Optional[Array],
+             coeff_a: float, coeff_b: float) -> Array:
+    """Clipped stage-2 combination (coeff_a * rates + coeff_b * rates_b)_+."""
+    if rates_b is None:
+        return rates
+    return jnp.maximum(coeff_a * rates + coeff_b * rates_b, 0.0)
+
+
+# ============================================================================ #
+# Dense engine
+# ============================================================================ #
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseEngine:
+    """Small state space X = {0..S-1}; exact intensity vectors from a DenseCTMC.
+
+    Jump magnitudes nu in D = {-(S-1)..S-1} minus {0} are enumerated, and
+    tau-leaps apply Poisson jump counts per magnitude with clipping to X (the
+    usual tau-leaping caveat, cf. Cao et al. 2005b).
+    """
+
+    ctmc: DenseCTMC
+
+    @property
+    def n_states(self) -> int:
+        return self.ctmc.n_states
+
+    def _host_grid(self, config):
+        """Host-side static grid: remains a concrete numpy array even when the
+        sample loop is traced under jit — needed to build analytic tweedie
+        kernels."""
+        import numpy as np
+
+        if config.grid == "uniform":
+            return np.linspace(self.ctmc.t_max, config.t_stop, config.n_steps + 1)
+        u = np.linspace(0.0, 1.0, config.n_steps + 1) ** 2
+        return self.ctmc.t_max - (self.ctmc.t_max - config.t_stop) * u
+
+    def time_grid(self, config) -> Array:
+        return jnp.asarray(self._host_grid(config), jnp.float32)
+
+    def prior(self, key, batch, seq_len=None):
+        k_init, k_loop = jax.random.split(key)
+        return self.ctmc.sample_prior(k_init, batch), k_loop
+
+    def rates(self, x: Array, t: Array) -> Array:
+        """Backward intensities indexed by jump magnitude nu.
+
+        Returns mu [B, 2S-1] where column j corresponds to nu = j - (S-1); the
+        nu = 0 column is zero.  Entries with x + nu outside X are zero.
+        """
+        s = self.n_states
+        rates_y = self.ctmc.backward_rates(x, t)  # [B, S] over target states
+        nu = jnp.arange(-(s - 1), s)  # [2S-1]
+        tgt = x[:, None] + nu[None, :]
+        valid = (tgt >= 0) & (tgt < s) & (nu[None, :] != 0)
+        tgt_c = jnp.clip(tgt, 0, s - 1)
+        mu = jnp.take_along_axis(rates_y, tgt_c, axis=1)
+        return jnp.where(valid, mu, 0.0)
+
+    def apply_jump(self, key, x, rates, dt, *, linear=False, rates_b=None,
+                   coeff_a=1.0, coeff_b=0.0):
+        s = self.n_states
+        rates = _combine(rates, rates_b, coeff_a, coeff_b)
+        if linear:
+            # Linearized single-jump kernel: jump to y w.p. mu_y dt (clipped),
+            # else stay.  Gather the nu-indexed intensities back to target
+            # order: target_rates[b, y] = rates[b, y - x_b + (S-1)].
+            tgt = jnp.arange(s)[None, :] - x[:, None] + (s - 1)
+            p = jnp.take_along_axis(rates, tgt, axis=1) * dt
+            p_stay = jnp.maximum(1.0 - p.sum(-1), 0.0)
+            p_full = jnp.concatenate([p, p_stay[:, None]], axis=1)
+            y = jax.random.categorical(key, jnp.log(p_full + 1e-30))
+            return jnp.where(y == s, x, y).astype(x.dtype)
+        # tau-leap update x + sum_nu K_nu * nu with K_nu ~ Poisson(mu_nu dt).
+        nu = jnp.arange(-(s - 1), s)
+        k = jax.random.poisson(key, jnp.maximum(rates * dt, 0.0))
+        delta = (k * nu[None, :]).sum(axis=1)
+        return jnp.clip(x + delta, 0, s - 1).astype(x.dtype)
+
+    def finalize(self, x, t_last):
+        return x
+
+    # ------------------------------------------------ exact reverse transition
+    def tweedie_prepare(self, config) -> Array:
+        """Stack the exact per-step reverse transition kernels (analytic)."""
+        import numpy as np
+
+        times_np = self._host_grid(config)
+        kerns = np.stack(
+            [self.ctmc.reverse_kernel(float(times_np[i]), float(times_np[i + 1]))
+             for i in range(config.n_steps)]
+        )
+        return jnp.asarray(kerns, jnp.float32)
+
+    def tweedie_step(self, key, x, t0, t1, *, i, aux):
+        logits = jnp.log(aux[i][x] + 1e-30)
+        return jax.random.categorical(key, logits).astype(x.dtype)
+
+
+# ============================================================================ #
+# Factorized engines — shared jump applicators
+# ============================================================================ #
+
+
+def _categorical_from_rates(key: jax.Array, rates: Array) -> Array:
+    """Sample argmax_y (log rates_y + Gumbel) — categorical proportional to rates."""
+    g = jax.random.gumbel(key, rates.shape)
+    return jnp.argmax(jnp.log(jnp.maximum(rates, 1e-30)) + g, axis=-1)
+
+
+def _unmask_update_fused(
+    key: jax.Array,
+    x: Array,
+    mu_a: Array,
+    mu_b: Optional[Array],
+    coeff_a: float,
+    coeff_b: float,
+    dt: Array,
+    mask_id: int,
+) -> Array:
+    """Fused-kernel path for rates = (coeff_a mu_a + coeff_b mu_b)_+ updates.
+
+    dt is traced (a time-grid element), and the kernel's dt is static — so dt is
+    folded into the intensities: rates*dt = ca*(mu_a*dt) + cb*(mu_b*dt).
+    """
+    from repro.kernels import ops  # local import: kernels are optional at core
+
+    b, l, v = mu_a.shape
+    k_g, k_u = jax.random.split(key)
+    gumbel = jax.random.gumbel(k_g, (b * l, v))
+    u = jax.random.uniform(k_u, (b * l,))
+    active = (x == mask_id).reshape(-1)
+    token, jump = ops.fused_jump_update(
+        (mu_a * dt).reshape(b * l, v),
+        None if mu_b is None else (mu_b * dt).reshape(b * l, v),
+        gumbel, u, active,
+        coeff_a=coeff_a, coeff_b=coeff_b, dt=1.0,
+    )
+    return jnp.where(jump.reshape(b, l), token.reshape(b, l), x).astype(x.dtype)
+
+
+def _unmask_update(
+    key: jax.Array,
+    x: Array,
+    rates: Array,
+    dt: Array,
+    mask_id: int,
+    exponential: bool = True,
+) -> Array:
+    """Shared jump applicator for masked diffusion.
+
+    rates: [B, L, V] per-target intensities (zero where position not masked);
+    a masked position unmasks with prob 1 - exp(-sum_y rates dt) (or the
+    linearized `sum_y rates * dt` when exponential=False, i.e. the Euler kernel),
+    revealing y ~ Categorical(rates).
+    """
+    k_jump, k_tok = jax.random.split(key)
+    lam = rates.sum(-1)
+    p_jump = 1.0 - jnp.exp(-lam * dt) if exponential else jnp.clip(lam * dt, 0.0, 1.0)
+    is_masked = x == mask_id
+    u = jax.random.uniform(k_jump, x.shape)
+    do_jump = is_masked & (u < p_jump)
+    y = _categorical_from_rates(k_tok, rates)
+    return jnp.where(do_jump, y, x).astype(x.dtype)
+
+
+def _uniform_update(key: jax.Array, x: Array, rates: Array, dt: Array,
+                    exponential: bool = True) -> Array:
+    """Jump applicator for uniform diffusion: positions may jump repeatedly, but we
+    apply at most one target change per step (the standard factorized-tau-leaping
+    practice; multi-jump composition is ill-defined on categorical fibers)."""
+    k_jump, k_tok = jax.random.split(key)
+    lam = rates.sum(-1)
+    p_jump = 1.0 - jnp.exp(-lam * dt) if exponential else jnp.clip(lam * dt, 0.0, 1.0)
+    u = jax.random.uniform(k_jump, x.shape)
+    y = _categorical_from_rates(k_tok, rates)
+    return jnp.where(u < p_jump, y, x).astype(x.dtype)
+
+
+# ============================================================================ #
+# Factorized engine — masked (absorbing) diffusion
+# ============================================================================ #
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskedEngine:
+    """X = [vocab]^d absorbing diffusion driven by a neural score network.
+
+    A position jumps at most once (mask -> token), so
+    ``P(K >= 1) = 1 - exp(-lam * dt)`` Bernoulli thinning is the *exact* law of
+    the Poisson jump decision.  With ``fused=True`` exponential jump updates
+    route through the fused Pallas kernel (one VMEM pass builds the combined
+    rate, Poisson-thins, and draws the categorical); the CPU fallback is
+    mathematically identical, so this is purely an execution-path switch.
+    """
+
+    process: DiffusionProcess
+    score_fn: ScoreFn
+    fused: bool = False
+
+    @property
+    def mask_id(self) -> int:
+        return self.process.mask_id
+
+    def configure(self, config) -> "MaskedEngine":
+        """Fold the config's (or the deprecated global) fused flag into the engine."""
+        fused = self.fused or config.fused or fused_jump_default()
+        if fused == self.fused:
+            return self
+        return dataclasses.replace(self, fused=fused)
+
+    def time_grid(self, config) -> Array:
+        return _schedule_time_grid(config.n_steps, self.process.schedule.t_max,
+                                   config.t_stop, config.grid)
+
+    def prior(self, key, batch, seq_len=None):
+        # All-mask canvas consumes no entropy; the loop key is the caller's key
+        # unchanged (keeps legacy per-step streams bit-identical).
+        x = jnp.full((batch, seq_len), self.mask_id, dtype=jnp.int32)
+        return x, key
+
+    def rates(self, x: Array, t: Array) -> Array:
+        """Per-target intensities [B, L, V], zero at already-unmasked positions
+        (the absorbing backward process admits no further jumps there)."""
+        probs = self.score_fn(x, t)
+        is_masked = (x == self.mask_id)[..., None]
+        return self.process.backward_rates_masked(probs, t) * is_masked
+
+    def apply_jump(self, key, x, rates, dt, *, linear=False, rates_b=None,
+                   coeff_a=1.0, coeff_b=0.0):
+        if self.fused and not linear:
+            return _unmask_update_fused(key, x, rates, rates_b, coeff_a, coeff_b,
+                                        dt, self.mask_id)
+        rates = _combine(rates, rates_b, coeff_a, coeff_b)
+        return _unmask_update(key, x, rates, dt, self.mask_id,
+                              exponential=not linear)
+
+    def finalize(self, x, t_last):
+        # Early stopping at t_stop can leave rare masks; greedy-fill them
+        # (standard practice, same for every method, so comparisons are
+        # unaffected).
+        probs = self.score_fn(x, t_last)
+        y = jnp.argmax(probs, axis=-1)
+        return jnp.where(x == self.mask_id, y, x).astype(jnp.int32)
+
+    # ------------------------------------------------------------ exact steps
+    def tweedie_step(self, key, x, t0, t1, *, i=None, aux=None):
+        # Exact per-position conditional: P(unmask on [t1, t0] | masked at t0)
+        #   = (alpha(t1) - alpha(t0)) / (1 - alpha(t0)).
+        probs = self.score_fn(x, t0)
+        is_masked = (x == self.mask_id)[..., None]
+        a0, a1_ = self.process.schedule.alpha(t0), self.process.schedule.alpha(t1)
+        p_unmask = jnp.clip((a1_ - a0) / (1.0 - a0), 0.0, 1.0)
+        k_jump, k_tok = jax.random.split(key)
+        u = jax.random.uniform(k_jump, x.shape)
+        do_jump = (x == self.mask_id) & (u < p_unmask)
+        y = _categorical_from_rates(k_tok, probs * is_masked + 1e-30)
+        return jnp.where(do_jump, y, x).astype(x.dtype)
+
+
+# ============================================================================ #
+# Factorized engine — uniform-state diffusion
+# ============================================================================ #
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformEngine:
+    """X = [vocab]^d uniform-state diffusion driven by a neural ratio network.
+
+    score_fn returns ratio estimates s_t(x)[..., y] ~ p_t(x^{l->y}) / p_t(x);
+    the current token's own entry is zeroed (no self-jump).
+    """
+
+    process: DiffusionProcess
+    score_fn: ScoreFn
+
+    def time_grid(self, config) -> Array:
+        return _schedule_time_grid(config.n_steps, self.process.schedule.t_max,
+                                   config.t_stop, config.grid)
+
+    def prior(self, key, batch, seq_len=None):
+        k_init, k_loop = jax.random.split(key)
+        x = jax.random.randint(k_init, (batch, seq_len), 0, self.process.vocab_size)
+        return x, k_loop
+
+    def rates(self, x: Array, t: Array) -> Array:
+        sc = self.score_fn(x, t)
+        r = self.process.backward_rates_uniform(sc, t)
+        self_hot = jax.nn.one_hot(x, self.process.vocab_size, dtype=r.dtype)
+        return r * (1.0 - self_hot)
+
+    def apply_jump(self, key, x, rates, dt, *, linear=False, rates_b=None,
+                   coeff_a=1.0, coeff_b=0.0):
+        rates = _combine(rates, rates_b, coeff_a, coeff_b)
+        return _uniform_update(key, x, rates, dt, exponential=not linear)
+
+    def finalize(self, x, t_last):
+        return x

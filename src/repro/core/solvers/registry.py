@@ -1,0 +1,46 @@
+"""Solver registry: name -> Solver class.
+
+Solvers self-register at import time via ``@register_solver("name")`` (see
+``schemes.py``); downstream code looks them up with :func:`get_solver` and
+enumerates them with :func:`list_solvers`.  The legacy ``METHODS`` tuple is
+derived from this registry (``compat.py``), so adding a solver class is the
+single step needed to make it reachable from ``SamplerConfig``, the CLI
+launchers, and the benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple, Type, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .base import Solver
+
+_REGISTRY: Dict[str, "Type[Solver]"] = {}
+
+
+def register_solver(name: str, *, override: bool = False) -> Callable:
+    """Class decorator registering a :class:`Solver` subclass under ``name``."""
+
+    def decorate(cls):
+        if name in _REGISTRY and not override:
+            raise ValueError(
+                f"solver {name!r} already registered to "
+                f"{_REGISTRY[name].__name__}; pass override=True to replace")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return decorate
+
+
+def get_solver(name: str) -> "Type[Solver]":
+    """Look up a registered solver class; raises ValueError for unknown names."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver {name!r}; registered: {tuple(_REGISTRY)}") from None
+
+
+def list_solvers() -> Tuple[str, ...]:
+    """Registered solver names, in registration order."""
+    return tuple(_REGISTRY)

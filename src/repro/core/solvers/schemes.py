@@ -1,0 +1,236 @@
+"""The paper's inference schemes as registered Solver classes.
+
+Implements the paper's contribution — the theta-RK-2 method (Alg. 1 / practical
+Alg. 4) and the theta-trapezoidal method (Alg. 2) — alongside the baselines it
+is compared against: the Euler method (Ou et al.), tau-leaping (Alg. 3,
+Campbell et al.), Tweedie tau-leaping (Lou et al.), MaskGIT-style parallel
+decoding (Chang et al.), and the exact first-hitting sampler (Zheng et al.).
+
+Each scheme is written ONCE against the engine primitives; the engines
+(dense / masked / uniform) supply the state-space-specific jump mechanics.
+Both theta-schemes share stage 1 (tau-leap of theta * dt with mu_{s_n}); they
+differ in stage 2 exactly as the paper specifies:
+
+  theta-RK-2 (Alg. 4):   from y_{s_n}, full dt, rate ((1-1/2th) mu_n + 1/2th mu*)_+
+  theta-trap (Alg. 2):   from y*_rho, (1-theta) dt, rate (a1 mu* - a2 mu_n)_+
+                         with a1 = 1/(2th(1-th)), a2 = (th^2+(1-th)^2)/(2th(1-th)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..process import DiffusionProcess
+from ..schedules import theta_section
+from .base import Solver
+from .config import ScoreFn, rk2_coefficients, trapezoidal_coefficients
+from .engines import _categorical_from_rates
+from .registry import register_solver
+
+Array = jnp.ndarray
+
+
+@register_solver("euler")
+class EulerSolver(Solver):
+    """Linearized single-jump kernel: jump w.p. mu dt (clipped), else stay."""
+
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+        mu = engine.rates(x, t0)
+        return engine.apply_jump(key, x, mu, t0 - t1, linear=True)
+
+
+@register_solver("tau_leaping")
+class TauLeapingSolver(Solver):
+    """First-order tau-leap: the engine's exact Poisson/Bernoulli jump law."""
+
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+        mu = engine.rates(x, t0)
+        return engine.apply_jump(key, x, mu, t0 - t1)
+
+
+@register_solver("tweedie")
+class TweedieSolver(Solver):
+    """Exact per-step reverse conditional, on engines that admit one."""
+
+    def prepare(self, engine, config):
+        prep = getattr(engine, "tweedie_prepare", None)
+        return prep(config) if prep is not None else None
+
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+        fn = getattr(engine, "tweedie_step", None)
+        if fn is None:
+            raise ValueError(
+                f"{type(engine).__name__} does not implement 'tweedie'")
+        return fn(key, x, t0, t1, i=i, aux=aux)
+
+
+class _TwoStageSolver(Solver):
+    """Shared stage 1 of the theta-schemes: tau-leap of theta*dt with mu_{s_n}."""
+
+    nfe_per_step = 2
+
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+        k1, k2 = jax.random.split(key)
+        dt = t0 - t1
+        rho = theta_section(t0, t1, config.theta)
+        mu_n = engine.rates(x, t0)
+        x_star = engine.apply_jump(k1, x, mu_n, config.theta * dt)
+        # mu*(nu, y*): engines zero intensities at states that admit no further
+        # jumps in the intermediate state (e.g. positions already unmasked).
+        mu_star = engine.rates(x_star, rho)
+        return self._stage2(k2, engine, x, x_star, mu_n, mu_star, dt, config)
+
+    def _stage2(self, key, engine, x, x_star, mu_n, mu_star, dt, config):
+        raise NotImplementedError
+
+
+@register_solver("theta_rk2")
+class ThetaRK2Solver(_TwoStageSolver):
+    def _stage2(self, key, engine, x, x_star, mu_n, mu_star, dt, config):
+        c1, c2 = rk2_coefficients(config.theta)
+        # Stage 2 restarts FROM y_{s_n} for the full dt (Alg. 4) with the
+        # clipped rate (c1 mu_n + c2 mu*)_+ (practical Alg. 4 clip).  Stage-1
+        # jumps are discarded unless re-drawn; this matches the algorithm as
+        # written (Prop. 4.2).
+        return engine.apply_jump(key, x, mu_n, dt,
+                                 rates_b=mu_star, coeff_a=c1, coeff_b=c2)
+
+
+@register_solver("theta_trapezoidal")
+class ThetaTrapezoidalSolver(_TwoStageSolver):
+    @classmethod
+    def validate(cls, config):
+        super().validate(config)
+        if config.theta >= 1.0:
+            raise ValueError("theta-trapezoidal requires theta in (0, 1)")
+
+    def _stage2(self, key, engine, x, x_star, mu_n, mu_star, dt, config):
+        a1, a2 = trapezoidal_coefficients(config.theta)
+        # Stage 2 continues FROM the intermediate state y*_rho for (1-theta) dt
+        # with the extrapolated rate (a1 mu* - a2 mu_n)_+ (Alg. 2).
+        return engine.apply_jump(key, x_star, mu_star, (1.0 - config.theta) * dt,
+                                 rates_b=mu_n, coeff_a=a1, coeff_b=-a2)
+
+
+# ============================================================================ #
+# Masked-engine specials: MaskGIT parallel decoding, first-hitting sampler
+# ============================================================================ #
+
+
+def _maskgit_schedule(i: Array, n_steps: int, seq_len: Array) -> Array:
+    """arccos masking schedule: fraction still masked after step i+1."""
+    frac = jnp.arccos((i + 1.0) / n_steps) / (jnp.pi / 2.0)
+    return jnp.floor(frac * seq_len).astype(jnp.int32)
+
+
+def parallel_decoding_step(
+    key: jax.Array,
+    score_fn: ScoreFn,
+    x: Array,
+    t0: Array,
+    i: Array,
+    n_steps: int,
+    mask_id: int,
+    temperature: float,
+) -> Array:
+    """MaskGIT step: greedily commit the most confident tokens, re-mask the rest.
+
+    Confidence = log p(chosen) + temperature * (1 - (i+1)/N) * Gumbel (the "linear
+    randomization" strategy of Chang et al. / App. D.4).
+    """
+    k_tok, k_conf = jax.random.split(key)
+    b, l = x.shape
+    probs = score_fn(x, t0)
+    is_masked = x == mask_id
+    y = _categorical_from_rates(k_tok, probs)
+    chosen_p = jnp.take_along_axis(probs, y[..., None], axis=-1)[..., 0]
+    anneal = temperature * (1.0 - (i + 1.0) / n_steps)
+    conf = jnp.log(chosen_p + 1e-30) + anneal * jax.random.gumbel(k_conf, x.shape)
+    conf = jnp.where(is_masked, conf, jnp.inf)  # already-revealed stay revealed
+    n_masked_next = _maskgit_schedule(i, n_steps, is_masked.sum(-1))
+    # Keep masked the n_masked_next least-confident positions.
+    order = jnp.argsort(conf, axis=-1)  # ascending: least confident first
+    ranks = jnp.argsort(order, axis=-1)
+    keep_masked = ranks < n_masked_next[:, None]
+    x_full = jnp.where(is_masked, y, x)
+    return jnp.where(keep_masked & is_masked, mask_id, x_full).astype(x.dtype)
+
+
+@register_solver("parallel_decoding")
+class ParallelDecodingSolver(Solver):
+    """MaskGIT-style confidence decoding (a biased sampler; see Fig. 3)."""
+
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+        mask_id = getattr(engine, "mask_id", None)
+        score_fn = getattr(engine, "score_fn", None)
+        if mask_id is None or score_fn is None:
+            raise ValueError(f"{type(engine).__name__} does not implement "
+                             "'parallel_decoding'")
+        return parallel_decoding_step(key, score_fn, x, t0, i, config.n_steps,
+                                      mask_id, config.pd_temperature)
+
+
+def fhs_sample(
+    key: jax.Array,
+    process: DiffusionProcess,
+    score_fn: ScoreFn,
+    batch: int,
+    seq_len: int,
+    t_stop: float = 1e-3,
+    tokens_per_eval: int = 1,
+) -> Array:
+    """First-Hitting Sampler (Zheng et al. 2024): exact for masked diffusion.
+
+    Each position's unmask (first-hitting) time is sampled analytically, then
+    positions are revealed in decreasing forward time, `tokens_per_eval` per
+    score evaluation (=1 is exact; >1 is the grouped approximation).
+    NFE = ceil(seq_len / tokens_per_eval).
+    """
+    sched = process.schedule
+    if sched.alpha_inv is None:
+        raise ValueError("FHS requires schedule.alpha_inv")
+    mask_id = process.mask_id
+    k_times, k_loop = jax.random.split(key)
+    a_T = sched.alpha(jnp.asarray(sched.t_max))
+    u = jax.random.uniform(k_times, (batch, seq_len), minval=0.0, maxval=1.0)
+    # P(still masked at t | masked at T) = (1 - alpha(t)) / (1 - alpha(T));
+    # invert the CDF of the hit time.
+    alpha_hit = 1.0 - u * (1.0 - a_T)
+    t_hit = jnp.maximum(sched.alpha_inv(alpha_hit), t_stop)
+    order = jnp.argsort(-t_hit, axis=1)  # reveal later-hitting (larger t) first
+    x = jnp.full((batch, seq_len), mask_id, dtype=jnp.int32)
+    n_evals = -(-seq_len // tokens_per_eval)
+
+    def body(i, x):
+        cols = jax.lax.dynamic_slice_in_dim(order, i * tokens_per_eval,
+                                            tokens_per_eval, axis=1)
+        t_evals = jnp.take_along_axis(t_hit, cols, axis=1).max()
+        probs = score_fn(x, t_evals)
+        y = _categorical_from_rates(jax.random.fold_in(k_loop, i), probs)
+        vals = jnp.take_along_axis(y, cols, axis=1)
+        bidx = jnp.arange(x.shape[0])[:, None]
+        return x.at[bidx, cols].set(vals.astype(x.dtype))
+
+    return jax.lax.fori_loop(0, n_evals, body, x)
+
+
+@register_solver("fhs")
+class FHSSolver(Solver):
+    """Whole-trajectory exact sampler for masked diffusion; overrides run()."""
+
+    def run(self, key, engine, config, batch, seq_len=None, trace_fn=None):
+        if trace_fn is not None:
+            raise ValueError("fhs is a whole-trajectory sampler and does not "
+                             "support per-step tracing")
+        process = getattr(engine, "process", None)
+        score_fn = getattr(engine, "score_fn", None)
+        if process is None or getattr(process, "kind", None) != "masked":
+            raise ValueError(f"{type(engine).__name__} does not implement 'fhs'")
+        return fhs_sample(key, process, score_fn, batch, seq_len,
+                          config.t_stop), None
+
+    def run_nfe(self, config, *, seq_len=None):
+        return int(seq_len) if seq_len else 0
+
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+        raise ValueError("fhs has no per-step form; use sample()/run()")

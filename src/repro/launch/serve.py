@@ -12,7 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import SamplerConfig, loglinear_schedule, masked_process
+from repro.core import SamplerConfig, list_solvers, loglinear_schedule, masked_process
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params
 from repro.serve import Request, ServingEngine
@@ -22,7 +22,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="radd_small")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--method", default="theta_trapezoidal")
+    ap.add_argument("--method", default="theta_trapezoidal",
+                    choices=list_solvers())
     ap.add_argument("--nfe", type=int, default=32)
     ap.add_argument("--theta", type=float, default=0.4)
     ap.add_argument("--requests", type=int, default=8)
@@ -47,7 +48,7 @@ def main() -> None:
     dt = time.time() - t0
     toks = np.stack([r.tokens for r in results])
     print(f"served {len(results)} requests in {dt:.2f}s "
-          f"({args.method}, NFE={sampler.nfe}, shape={toks.shape})")
+          f"({args.method}, NFE={results[0].nfe}, shape={toks.shape})")
     print("first sample head:", toks[0, :24].tolist())
 
 

@@ -23,7 +23,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import DiffusionProcess, loglinear_schedule, masked_process, masked_step
+from repro.core import (
+    DiffusionProcess,
+    MaskedEngine,
+    SamplerConfig,
+    get_solver,
+    loglinear_schedule,
+    masked_process,
+)
 from repro.models import decode_step, denoise_logits, init_decode_state, init_params
 from repro.models.config import ModelConfig
 from repro.models.frontends import frontend_specs, text_seq_len
@@ -196,12 +203,15 @@ def build_job(cfg: ModelConfig, shape_name: str, mesh: Mesh,
     if kind == "prefill":
         tseq = text_seq_len(cfg, seq)
         extra = dict(zip(extra_names, extra_specs))
+        sampler_cfg = SamplerConfig(method="theta_trapezoidal",
+                                    theta=sampler_theta)
+        solver = get_solver(sampler_cfg.method)()
 
         def sampler_step(params, tokens, t0, t1, key, *extra_vals):
             ev = dict(zip(extra_names, extra_vals))
-            score_fn = make_score_fn(params, cfg, ev)
-            return masked_step(key, process, score_fn, tokens, t0, t1,
-                               "theta_trapezoidal", sampler_theta)
+            engine = MaskedEngine(process=process,
+                                  score_fn=make_score_fn(params, cfg, ev))
+            return solver.step(key, engine, tokens, t0, t1, sampler_cfg)
 
         tok_s = jax.ShapeDtypeStruct((batch, tseq), jnp.int32)
         t_s = jax.ShapeDtypeStruct((), jnp.float32)

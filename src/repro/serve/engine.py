@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DiffusionProcess, SamplerConfig, sample_masked
+from repro.core import DiffusionProcess, MaskedEngine, SamplerConfig, sample
 from repro.models import decode_step, denoise_logits, init_decode_state
 from repro.models.config import ModelConfig
 
@@ -65,9 +65,12 @@ class ServingEngine:
         self.seq_len = seq_len
         self._queue: List[Request] = []
         score_fn = make_score_fn(params, cfg, extra_inputs)
+        solver_engine = MaskedEngine(process=process, score_fn=score_fn)
+        # SampleResult is a pytree (nfe is static), so the jitted call returns
+        # solver-accurate NFE accounting (e.g. fhs: one eval per position).
         self._sample = jax.jit(
-            lambda key: sample_masked(key, process, score_fn, sampler,
-                                      max_batch, seq_len))
+            lambda key: sample(key, solver_engine, sampler,
+                               batch=max_batch, seq_len=seq_len))
 
     def submit(self, req: Request) -> None:
         if req.seq_len > self.seq_len:
@@ -82,14 +85,15 @@ class ServingEngine:
         self._queue = self._queue[self.max_batch:]
         key = jax.random.PRNGKey(batch[0].seed ^ (batch[0].request_id * 2654435761))
         t0 = time.time()
-        tokens = jax.device_get(self._sample(key))
+        result = self._sample(key)
+        tokens = jax.device_get(result.tokens)
         dt = time.time() - t0
         out = []
         for i, req in enumerate(batch):
             out.append(Result(
                 request_id=req.request_id,
                 tokens=np.asarray(tokens[i, : req.seq_len]),
-                nfe=self.sampler.nfe,
+                nfe=result.nfe,
                 latency_s=dt,
             ))
         return out

@@ -1,0 +1,50 @@
+"""No-op stand-ins for hypothesis so property tests SKIP when it is absent.
+
+Usage (at the top of a test module)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from hypothesis_stub import given, settings, st
+
+The stub ``given`` marks the test skipped and parametrizes the given-supplied
+argument names with placeholder values, so collection succeeds with the
+original function signature (including outer ``pytest.mark.parametrize``
+fixtures) instead of erroring the whole module at import time.
+"""
+import pytest
+
+
+def given(*args, **kwargs):
+    def decorate(fn):
+        names = sorted(kwargs)
+        if args:
+            # Positional strategies map to the function's LAST parameters
+            # (hypothesis semantics).
+            import inspect
+
+            params = list(inspect.signature(fn).parameters)
+            names = params[len(params) - len(args):] + names
+        argnames = ",".join(names)
+        argvalues = [tuple(None for _ in names)] if len(names) > 1 else [None]
+        fn = pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return pytest.mark.parametrize(argnames, argvalues)(fn)
+
+    return decorate
+
+
+def settings(*args, **kwargs):
+    def decorate(fn):
+        return fn
+
+    return decorate
+
+
+class _Strategies:
+    """Any strategy constructor (st.floats, st.sampled_from, ...) -> None."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()

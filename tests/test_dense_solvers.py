@@ -2,7 +2,8 @@
 
 The heavyweight order-of-convergence measurement lives in benchmarks/; here we
 verify the machinery (exact tweedie at the sampling-noise floor, trapezoidal
-beating tau-leaping at equal steps, uniformization unbiasedness).
+beating tau-leaping at equal steps, uniformization unbiasedness) on the
+class-based Solver/Engine API (DenseEngine + sample()).
 """
 import jax
 import jax.numpy as jnp
@@ -11,8 +12,9 @@ import pytest
 
 from repro.core import (
     DenseCTMC,
+    DenseEngine,
     SamplerConfig,
-    sample_dense,
+    sample,
     trapezoidal_coefficients,
     rk2_coefficients,
     uniform_rate_matrix,
@@ -25,6 +27,11 @@ def toy():
     rng = np.random.default_rng(0)
     p0 = rng.dirichlet(np.ones(8) * 2.0)
     return DenseCTMC(q=uniform_rate_matrix(8), p0=p0, t_max=8.0)
+
+
+@pytest.fixture(scope="module")
+def engine(toy):
+    return DenseEngine(toy)
 
 
 def kl(p, q):
@@ -69,31 +76,43 @@ def test_coefficients():
     assert (c1, c2) == (0.0, 1.0)
 
 
-def test_tweedie_is_exact(toy, rng_key):
+def test_tweedie_is_exact(engine, toy, rng_key):
     cfg = SamplerConfig(method="tweedie", n_steps=3, t_stop=1e-3)
-    xs = jax.jit(lambda k: sample_dense(k, toy, cfg, 120_000))(rng_key)
+    xs = jax.jit(lambda k: sample(k, engine, cfg, batch=120_000).tokens)(rng_key)
     q = empirical(xs, 8)
     assert kl(toy.p0, q) < 5e-4  # sampling noise floor ~ (S-1)/2N = 3e-5
 
 
-def test_trapezoidal_beats_tau_leaping(toy, rng_key):
+def test_trapezoidal_beats_tau_leaping(engine, toy, rng_key):
     n = 60_000
     kls = {}
     for method in ("tau_leaping", "theta_trapezoidal"):
         cfg = SamplerConfig(method=method, n_steps=8, theta=0.5, t_stop=1e-3)
-        xs = jax.jit(lambda k: sample_dense(k, toy, cfg, n))(rng_key)
+        xs = jax.jit(lambda k: sample(k, engine, cfg, batch=n).tokens)(rng_key)
         kls[method] = kl(toy.p0, empirical(xs, 8))
     assert kls["theta_trapezoidal"] < kls["tau_leaping"]
 
 
-def test_error_decreases_with_steps(toy, rng_key):
+def test_error_decreases_with_steps(engine, toy, rng_key):
     n = 60_000
     errs = []
     for steps in (4, 16):
         cfg = SamplerConfig(method="theta_trapezoidal", n_steps=steps, theta=0.5)
-        xs = jax.jit(lambda k: sample_dense(k, toy, cfg, n))(rng_key)
+        xs = jax.jit(lambda k: sample(k, engine, cfg, batch=n).tokens)(rng_key)
         errs.append(kl(toy.p0, empirical(xs, 8)))
     assert errs[1] < errs[0]
+
+
+def test_trace_callback_collects_per_step(engine, rng_key):
+    cfg = SamplerConfig(method="theta_trapezoidal", n_steps=5, theta=0.5)
+    plain = sample(rng_key, engine, cfg, batch=256)
+    traced = sample(rng_key, engine, cfg, batch=256,
+                    trace_fn=lambda i, x, t: (x.mean(), t))
+    means, ts = traced.trace
+    assert means.shape == (5,) and ts.shape == (5,)
+    assert (np.asarray(np.diff(np.asarray(ts))) < 0).all()  # backward in time
+    # tracing must not change the sampled trajectory
+    assert (np.asarray(traced.tokens) == np.asarray(plain.tokens)).all()
 
 
 def test_uniformization_unbiased(toy, rng_key):

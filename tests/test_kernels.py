@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip instead of breaking collection
+    from hypothesis_stub import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.fused_jump import fused_jump

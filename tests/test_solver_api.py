@@ -1,0 +1,225 @@
+"""Unified Solver/Engine API: registry round-trip and wrapper parity.
+
+The backward-compat wrappers (sample_dense / sample_masked / sample_uniform)
+must produce BIT-IDENTICAL samples to the new sample(key, engine, config, ...)
+entrypoint for the same PRNG key on all three engines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    METHODS,
+    TWO_STAGE,
+    DenseCTMC,
+    DenseEngine,
+    MaskedEngine,
+    SamplerConfig,
+    Solver,
+    UniformEngine,
+    get_solver,
+    list_solvers,
+    loglinear_schedule,
+    masked_process,
+    register_solver,
+    sample,
+    sample_dense,
+    sample_masked,
+    sample_uniform,
+    uniform_process,
+    uniform_rate_matrix,
+)
+
+V = 10
+
+
+@pytest.fixture(scope="module")
+def toy():
+    rng = np.random.default_rng(1)
+    p0 = rng.dirichlet(np.ones(8) * 2.0)
+    # 8 states: np.linalg.eig returns a real eigenbasis here (some sizes, e.g.
+    # 6, yield a complex basis for the degenerate eigenvalue, which the jittable
+    # DenseCTMC.marginal cannot use).
+    return DenseCTMC(q=uniform_rate_matrix(8), p0=p0, t_max=6.0)
+
+
+@pytest.fixture(scope="module")
+def pi():
+    rng = np.random.default_rng(4)
+    return jnp.asarray(rng.dirichlet(np.ones(V) * 2.0), jnp.float32)
+
+
+def iid_score_fn(pi):
+    def score_fn(tokens, t):
+        return jnp.broadcast_to(pi, tokens.shape + (V,))
+    return score_fn
+
+
+# --------------------------------------------------------------------------- #
+# Registry round-trip
+# --------------------------------------------------------------------------- #
+
+
+def test_registry_covers_methods():
+    assert set(list_solvers()) >= set(METHODS)
+    for name in METHODS:
+        cls = get_solver(name)
+        assert issubclass(cls, Solver)
+        assert cls.name == name
+        assert cls.nfe_per_step == (2 if name in TWO_STAGE else 1)
+
+
+def test_methods_is_registry_derived():
+    assert METHODS == tuple(list_solvers())[: len(METHODS)]
+    assert TWO_STAGE == tuple(n for n in METHODS
+                              if get_solver(n).nfe_per_step == 2)
+
+
+def test_unknown_solver_raises():
+    with pytest.raises(ValueError, match="unknown solver"):
+        get_solver("does_not_exist")
+    with pytest.raises(ValueError):
+        SamplerConfig(method="does_not_exist")
+
+
+def test_register_custom_solver(toy, rng_key):
+    from repro.core.solvers.registry import _REGISTRY
+
+    try:
+        @register_solver("test_midpoint", override=True)
+        class MidpointSolver(Solver):
+            def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+                mu = engine.rates(x, (t0 + t1) / 2.0)
+                return engine.apply_jump(key, x, mu, t0 - t1)
+
+        assert "test_midpoint" in list_solvers()
+        assert get_solver("test_midpoint") is MidpointSolver
+        cfg = SamplerConfig(method="test_midpoint", n_steps=4)
+        res = sample(rng_key, DenseEngine(toy), cfg, batch=128)
+        assert res.tokens.shape == (128,)
+        assert res.nfe == 4
+    finally:
+        _REGISTRY.pop("test_midpoint", None)  # keep the global registry clean
+    assert "test_midpoint" not in list_solvers()
+
+
+def test_duplicate_registration_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_solver("euler")
+        class Clash(Solver):
+            pass
+
+
+# --------------------------------------------------------------------------- #
+# Wrapper parity: legacy sample_* == new sample() bit-for-bit
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("method", ["euler", "tau_leaping", "tweedie",
+                                    "theta_rk2", "theta_trapezoidal"])
+def test_dense_wrapper_parity(method, toy, rng_key):
+    cfg = SamplerConfig(method=method, n_steps=5, theta=0.4)
+    via_wrapper = np.asarray(sample_dense(rng_key, toy, cfg, 512))
+    via_sample = np.asarray(sample(rng_key, DenseEngine(toy), cfg,
+                                   batch=512).tokens)
+    assert (via_wrapper == via_sample).all()
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_masked_wrapper_parity(method, pi, rng_key):
+    proc = masked_process(V, loglinear_schedule())
+    cfg = SamplerConfig(method=method, n_steps=5, theta=0.4)
+    via_wrapper = np.asarray(
+        sample_masked(rng_key, proc, iid_score_fn(pi), cfg, 16, 24))
+    via_sample = np.asarray(
+        sample(rng_key, MaskedEngine(process=proc, score_fn=iid_score_fn(pi)),
+               cfg, batch=16, seq_len=24).tokens)
+    assert (via_wrapper == via_sample).all()
+
+
+@pytest.mark.parametrize("method", ["euler", "tau_leaping",
+                                    "theta_rk2", "theta_trapezoidal"])
+def test_uniform_wrapper_parity(method, pi, rng_key):
+    uproc = uniform_process(V, loglinear_schedule())
+
+    def ratio_fn(tokens, t):
+        a = uproc.schedule.alpha(t)
+        pt = a * pi + (1 - a) / V
+        return (jnp.broadcast_to(pt, tokens.shape + (V,))
+                / jnp.take(pt, tokens)[..., None])
+
+    cfg = SamplerConfig(method=method, n_steps=5, theta=0.4)
+    via_wrapper = np.asarray(
+        sample_uniform(rng_key, uproc, ratio_fn, cfg, 16, 24))
+    via_sample = np.asarray(
+        sample(rng_key, UniformEngine(process=uproc, score_fn=ratio_fn),
+               cfg, batch=16, seq_len=24).tokens)
+    assert (via_wrapper == via_sample).all()
+
+
+def test_wrapper_parity_under_jit(toy, rng_key):
+    cfg = SamplerConfig(method="theta_trapezoidal", n_steps=4, theta=0.5)
+    a = np.asarray(jax.jit(lambda k: sample_dense(k, toy, cfg, 256))(rng_key))
+    b = jax.jit(lambda k: sample(k, DenseEngine(toy), cfg, batch=256))(rng_key)
+    assert (a == np.asarray(b.tokens)).all()
+    assert b.nfe == 8  # SampleResult round-trips through jit with static nfe
+
+
+# --------------------------------------------------------------------------- #
+# NFE accounting, deprecations, engine capability errors
+# --------------------------------------------------------------------------- #
+
+
+def test_nfe_accounting(toy, pi, rng_key):
+    for method in ("euler", "theta_trapezoidal"):
+        cfg = SamplerConfig(method=method, n_steps=6, theta=0.4)
+        res = sample(rng_key, DenseEngine(toy), cfg, batch=8)
+        assert res.nfe == cfg.nfe == 6 * cfg.nfe_per_step
+    proc = masked_process(V, loglinear_schedule())
+    res = sample(rng_key, MaskedEngine(process=proc, score_fn=iid_score_fn(pi)),
+                 SamplerConfig(method="fhs"), batch=4, seq_len=17)
+    assert res.nfe == 17
+
+
+def test_set_fused_jump_shim_deprecated_but_effective(pi, rng_key):
+    from repro.core.solvers.config import fused_jump_default, set_fused_jump
+
+    proc = masked_process(V, loglinear_schedule())
+    cfg = SamplerConfig(method="tau_leaping", n_steps=4)
+    engine = MaskedEngine(process=proc, score_fn=iid_score_fn(pi))
+    fused_ref = np.asarray(sample(rng_key, engine, cfg, batch=8, seq_len=12,
+                                  ).tokens)
+    try:
+        with pytest.warns(DeprecationWarning):
+            set_fused_jump(True)
+        assert fused_jump_default() is True
+        # the global default is folded into the engine at sample() time
+        via_global = np.asarray(
+            sample_masked(rng_key, proc, iid_score_fn(pi), cfg, 8, 12))
+        via_flag = np.asarray(
+            sample(rng_key, dataclasses_replace_fused(engine), cfg,
+                   batch=8, seq_len=12).tokens)
+        assert (via_global == via_flag).all()
+    finally:
+        with pytest.warns(DeprecationWarning):
+            set_fused_jump(False)
+    # non-fused reference still well-formed
+    assert ((fused_ref >= 0) & (fused_ref < V)).all()
+
+
+def dataclasses_replace_fused(engine):
+    import dataclasses
+    return dataclasses.replace(engine, fused=True)
+
+
+def test_engine_capability_errors(toy, pi, rng_key):
+    uproc = uniform_process(V, loglinear_schedule())
+    ueng = UniformEngine(process=uproc, score_fn=iid_score_fn(pi))
+    with pytest.raises(ValueError, match="tweedie"):
+        sample(rng_key, ueng, SamplerConfig(method="tweedie"), batch=4, seq_len=8)
+    with pytest.raises(ValueError, match="parallel_decoding"):
+        sample(rng_key, ueng, SamplerConfig(method="parallel_decoding"),
+               batch=4, seq_len=8)
+    with pytest.raises(ValueError, match="fhs"):
+        sample(rng_key, DenseEngine(toy), SamplerConfig(method="fhs"), batch=4)
