@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Default is the quick profile
   image_nfe          -> Fig. 3 (Frechet distance vs NFE, incl. parallel decoding)
   kernels            -> kernel microbenches + bytes-touched model
   roofline           -> §Roofline table from the dry-run artifact
+  serve_throughput   -> continuous batching vs run-to-completion requests/sec
 """
 from __future__ import annotations
 
@@ -30,6 +31,7 @@ def main() -> None:
         image_nfe,
         kernels_bench,
         roofline_report,
+        serve_throughput,
         text_nfe,
         theta_sweep,
         toy_convergence,
@@ -56,6 +58,10 @@ def main() -> None:
         if args.full else image_nfe.run,
         "kernels": lambda: kernels_bench.run(quick=not args.full),
         "roofline": roofline_report.run,
+        "serve_throughput": serve_throughput.run if args.full else (
+            lambda: serve_throughput.run(
+                n_requests=16, max_batch=4, short_steps=3, long_steps=12,
+                seq_len=16, load=1.67, trace_seed=0)),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -1,0 +1,174 @@
+"""Serving throughput: continuous batching vs run-to-completion batching.
+
+Replays one Poisson arrival trace against the ServingEngine in both
+scheduling modes and reports requests/sec, slot occupancy, and the speedup.
+The trace mixes admission times (Poisson arrivals at ~1.4-1.7x pool capacity,
+so a backlog keeps both modes throughput-bound) and step budgets (~30% of
+requests are stragglers with a several-fold larger NFE budget) — the regime
+where run-to-completion batching leaves slots empty for entire trajectories:
+a batch runs as long as its longest member, and requests arriving mid-run
+wait for the whole batch to drain.
+
+Cost model: every pool step is one (or two, for two-stage schemes) score
+forward over the whole batch — the paper's serving regime — so the clock
+advances one *step unit* per executed pool step and idles only while waiting
+for the next arrival.  Both modes execute the identical jitted whole-batch
+step, so requests/sec converts step units to seconds with ONE calibrated
+per-step device time shared by both modes; the raw measured wall time is
+printed alongside for reference.
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import time
+
+from . import common  # noqa: F401 - import side effect puts src on sys.path
+import jax
+import numpy as np
+
+from repro.core import (
+    SamplerConfig,
+    get_solver,
+    loglinear_schedule,
+    masked_process,
+)
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serve import Request, ServingEngine
+
+
+def _model(vocab: int) -> ModelConfig:
+    return ModelConfig(name="serve-bench", family="dense", n_layers=2,
+                       d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                       d_ff=128, vocab_size=vocab, dtype="float32")
+
+
+def poisson_trace(n_requests: int, max_batch: int, short_steps: int,
+                  long_steps: int, p_long: float = 0.3, load: float = 1.67,
+                  seed: int = 0):
+    """(arrival_times, step_budgets): Poisson arrivals, straggler budgets.
+
+    ``load`` is the offered load as a multiple of pool capacity (capacity =
+    max_batch slots / mean work per request); heavy traffic (> 1) keeps a
+    backlog so both modes are throughput-bound and requests/sec measures
+    sustained service rate.  ``p_long`` of the requests are stragglers
+    carrying the large budget.
+    """
+    rng = np.random.default_rng(seed)
+    budgets = np.where(rng.uniform(size=n_requests) < p_long,
+                       long_steps, short_steps)
+    gaps = rng.exponential(budgets.mean() / (max_batch * load),
+                           size=n_requests - 1)
+    arrivals = np.concatenate([[0.0], np.cumsum(gaps)])
+    return arrivals, budgets
+
+
+def replay(engine: ServingEngine, arrivals: np.ndarray, budgets: np.ndarray,
+           seq_len: int):
+    """Drive one engine over the trace; returns (span_units, results, wall_s).
+
+    The virtual clock advances 1 unit per executed pool step and jumps to the
+    next arrival when the pool is empty; wall_s accumulates the measured
+    device time of the executed steps.
+    """
+    pending = collections.deque(
+        (i, float(t), int(n)) for i, (t, n) in enumerate(zip(arrivals, budgets)))
+    clock, wall, finish = 0.0, 0.0, {}
+    results = []
+    while pending or engine.queued or engine.active_slots:
+        while pending and pending[0][1] <= clock:
+            i, _, n = pending.popleft()
+            engine.submit(Request(request_id=i, seq_len=seq_len, seed=i,
+                                  n_steps=n))
+        if not engine.active_slots and not engine.queued:
+            clock = max(clock, pending[0][1])  # idle until the next arrival
+            continue
+        t0 = time.perf_counter()
+        done = engine.step()
+        wall += time.perf_counter() - t0
+        clock += 1.0
+        for r in done:
+            finish[r.request_id] = clock
+            results.append(r)
+    span = max(finish.values()) - float(arrivals[0])
+    return span, results, wall
+
+
+def run(n_requests: int = 32, max_batch: int = 6, short_steps: int = 6,
+        long_steps: int = 36, seq_len: int = 32, vocab: int = 23,
+        method: str = "theta_trapezoidal", load: float = 1.43,
+        trace_seed: int = 1):
+    if not get_solver(method).supports_stepwise:
+        raise SystemExit(f"serve_throughput compares step-level scheduling; "
+                         f"{method!r} has no stepwise form")
+    cfg = _model(vocab)
+    process = masked_process(cfg.vocab_size, loglinear_schedule())
+    sampler = SamplerConfig(method=method, n_steps=short_steps, theta=0.4)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    arrivals, budgets = poisson_trace(n_requests, max_batch, short_steps,
+                                      long_steps, load=load, seed=trace_seed)
+    print(f"trace: {n_requests} requests, {int((budgets == long_steps).sum())} "
+          f"stragglers ({long_steps} vs {short_steps} steps), "
+          f"offered load {load:.2f}x the {max_batch}-slot pool capacity")
+
+    sec_per_step = None
+    rates = {}
+    for label, continuous in (("run-to-completion", False), ("continuous", True)):
+        engine = ServingEngine(params, cfg, process, sampler,
+                               max_batch=max_batch, seq_len=seq_len,
+                               continuous=continuous)
+        # Warm the jit caches so compile time stays out of the measurement.
+        engine.submit(Request(request_id=10_000, seq_len=seq_len, seed=0))
+        engine.run_all()
+        engine.requests_served = 0
+        engine.global_steps = 0
+        engine._active_slot_steps = 0
+        if sec_per_step is None:
+            # One shared calibration: the whole-batch jitted step both modes run.
+            state = engine._state
+            t0 = time.perf_counter()
+            for _ in range(20):
+                state = engine._advance(state)
+            np.asarray(state.step)
+            sec_per_step = (time.perf_counter() - t0) / 20
+
+        span, results, wall = replay(engine, arrivals, budgets, seq_len)
+        stats = engine.stats()
+        rps = n_requests / (span * sec_per_step)
+        rates[label] = rps
+        print(f"{label:>18}: {n_requests} requests in {span:.0f} pool steps "
+              f"-> {rps:.2f} req/s at {sec_per_step * 1e3:.1f} ms/step, "
+              f"occupancy {stats['occupancy']:.1%} "
+              f"(measured wall {wall:.2f}s)")
+        assert len(results) == n_requests
+
+    ratio = rates["continuous"] / rates["run-to-completion"]
+    print(f"continuous batching speedup: {ratio:.2f}x requests/sec "
+          f"({rates['continuous']:.2f} vs {rates['run-to-completion']:.2f})")
+    return ratio
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced trace for CI (seconds, not minutes)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--method", default="theta_trapezoidal")
+    args = ap.parse_args()
+    if args.smoke:
+        ratio = run(n_requests=args.requests or 16, max_batch=4,
+                    short_steps=3, long_steps=12, seq_len=16,
+                    method=args.method, load=1.67, trace_seed=0)
+    else:
+        ratio = run(n_requests=args.requests or 32, max_batch=6,
+                    short_steps=6, long_steps=36, seq_len=64,
+                    method=args.method, load=1.43, trace_seed=1)
+    if ratio < 1.5:
+        raise SystemExit(f"continuous batching speedup {ratio:.2f}x < 1.5x")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@ from .schedules import (
     constant_schedule,
     cosine_schedule,
     get_schedule,
+    grid_fraction,
     loglinear_schedule,
     theta_section,
     time_grid,
@@ -24,15 +25,22 @@ from .solvers import (
     SampleResult,
     SamplerConfig,
     Solver,
+    SolverState,
     UniformEngine,
+    admit_slot,
+    advance,
+    budget_supported,
     dense_step,
     fhs_sample,
+    finalize,
     get_solver,
+    init_state,
     list_solvers,
     masked_step,
     register_solver,
     rk2_coefficients,
     sample,
+    slot_done,
     sample_dense,
     sample_masked,
     sample_uniform,
@@ -44,7 +52,7 @@ from .losses import masked_cross_entropy, masked_elbo_loss, score_entropy_loss
 
 __all__ = [
     "NoiseSchedule", "constant_schedule", "cosine_schedule", "get_schedule",
-    "loglinear_schedule", "theta_section", "time_grid",
+    "grid_fraction", "loglinear_schedule", "theta_section", "time_grid",
     "DiffusionProcess", "masked_process", "uniform_process",
     "DenseCTMC", "adaptive_uniformization_sample", "uniform_rate_matrix",
     "uniformization_sample",
@@ -52,6 +60,9 @@ __all__ = [
     "Engine", "DenseEngine", "MaskedEngine", "UniformEngine",
     "Solver", "register_solver", "get_solver", "list_solvers",
     "sample", "SampleResult",
+    # stepwise sampling API
+    "SolverState", "init_state", "advance", "finalize", "admit_slot",
+    "slot_done", "budget_supported",
     # legacy solver API (kept: bit-identical wrappers over the new entrypoint)
     "METHODS", "TWO_STAGE", "SamplerConfig", "dense_step", "fhs_sample",
     "masked_step", "rk2_coefficients", "sample_dense", "sample_masked",

@@ -135,6 +135,24 @@ def get_schedule(name: str, **kwargs) -> NoiseSchedule:
     return _REGISTRY[name](**kwargs)
 
 
+def grid_fraction(u: Array, kind: str) -> Array:
+    """Warped grid phase: step i of an n-step grid sits at
+    ``t = t_max - (t_max - t_stop) * grid_fraction(i / n, kind)``.
+
+    The single source of truth for the grid law — ``time_grid``, the dense
+    engine's host grid, and the per-slot stepwise grids all evaluate this.
+
+    kinds:
+      uniform  — arithmetic grid (paper's choice for all experiments);
+      quadratic — denser near the data end (t ~ t_stop), an optional refinement.
+    """
+    if kind == "uniform":
+        return u
+    if kind == "quadratic":
+        return u**2
+    raise ValueError(f"unknown grid kind {kind!r}")
+
+
 def time_grid(
     n_steps: int,
     t_max: float,
@@ -144,18 +162,14 @@ def time_grid(
     """Backward-time discretization: decreasing forward times t_max -> eps_stop.
 
     Returns an array of n_steps+1 forward times ``t_0 = t_max > ... > t_N = eps_stop``
-    (the early-stopping time delta of Thm. 5.4).
-
-    kinds:
-      uniform  — arithmetic grid (paper's choice for all experiments);
-      quadratic — denser near the data end (t ~ eps_stop), an optional refinement.
+    (the early-stopping time delta of Thm. 5.4).  See :func:`grid_fraction`
+    for the available kinds.
     """
     if kind == "uniform":
+        # linspace, not the affine form, to keep the legacy grid bit-exact.
         return jnp.linspace(t_max, eps_stop, n_steps + 1)
-    if kind == "quadratic":
-        u = jnp.linspace(0.0, 1.0, n_steps + 1)
-        return t_max - (t_max - eps_stop) * u**2
-    raise ValueError(f"unknown grid kind {kind!r}")
+    u = grid_fraction(jnp.linspace(0.0, 1.0, n_steps + 1), kind)
+    return t_max - (t_max - eps_stop) * u
 
 
 def theta_section(t0: Array, t1: Array, theta: float) -> Array:

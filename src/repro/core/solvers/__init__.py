@@ -6,6 +6,10 @@ Layout:
 * ``config``    — ``SamplerConfig`` (with the ``fused`` execution-path field)
   and the theta-scheme coefficient formulas;
 * ``base``      — the ``Solver`` base class (step loop, tracing, NFE);
+* ``state``     — the stepwise API: ``SolverState`` with ``init_state`` /
+  ``advance`` / ``finalize`` (plus the per-slot pool ops ``admit_slot`` /
+  ``slot_done`` that the continuous-batching ServingEngine builds on);
+* ``rng``       — PRNG helpers accepting a single key or a per-slot key batch;
 * ``engines``   — the ``Engine`` protocol and the ``DenseEngine`` /
   ``MaskedEngine`` / ``UniformEngine`` state-space implementations;
 * ``schemes``   — the seven registered solver classes (Euler, tau-leaping,
@@ -42,6 +46,15 @@ from .config import (
 )
 from .base import Solver
 from .engines import DenseEngine, Engine, MaskedEngine, UniformEngine
+from .state import (
+    SolverState,
+    admit_slot,
+    advance,
+    budget_supported,
+    finalize,
+    init_state,
+    slot_done,
+)
 from .schemes import (
     EulerSolver,
     FHSSolver,
@@ -73,6 +86,9 @@ __all__ = [
     "trapezoidal_coefficients", "rk2_coefficients",
     # base + engines
     "Solver", "Engine", "DenseEngine", "MaskedEngine", "UniformEngine",
+    # stepwise API
+    "SolverState", "init_state", "advance", "finalize", "admit_slot",
+    "slot_done", "budget_supported",
     # solver classes
     "EulerSolver", "TauLeapingSolver", "TweedieSolver", "ThetaRK2Solver",
     "ThetaTrapezoidalSolver", "ParallelDecodingSolver", "FHSSolver",

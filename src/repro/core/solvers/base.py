@@ -4,9 +4,11 @@ A :class:`Solver` says *what a scheme computes* per backward step — stage
 structure, intensity combinations, PRNG splits — strictly in terms of the
 engine primitives (``rates`` / ``apply_jump``; see ``engines.py``), so the
 two-stage theta-schemes are written once instead of per state space.  The
-default :meth:`run` owns the time grid loop, the per-step key folding
-(``fold_in(loop_key, i)``), the optional trace callback, and the engine's
-finalize pass; whole-trajectory samplers (FHS) override it.
+default :meth:`run` is the stepwise API (``state.py``) driven to completion:
+``init_state`` -> ``advance`` x n_steps -> ``finalize``, which owns the time
+grid, the per-step key folding (``fold_in(loop_key, i)``), the optional trace
+callback, and the engine's finalize pass.  Whole-trajectory samplers (FHS)
+override :meth:`run` and set ``supports_stepwise = False``.
 """
 from __future__ import annotations
 
@@ -27,6 +29,11 @@ class Solver:
     name: str = ""
     #: score-network evaluations per step (2 for the two-stage theta-schemes).
     nfe_per_step: int = 1
+    #: False for whole-trajectory samplers that cannot expose init/advance.
+    supports_stepwise: bool = True
+    #: False when step() reads config.n_steps (e.g. a masking schedule), which
+    #: per-slot step-budget overrides (admit_slot n_steps=...) would break.
+    supports_step_budgets: bool = True
 
     @classmethod
     def validate(cls, config) -> None:
@@ -53,24 +60,24 @@ class Solver:
             seq_len: Optional[int] = None, trace_fn: Optional[TraceFn] = None):
         """Integrate the backward process over the engine's time grid.
 
-        Returns ``(tokens, trace)`` where ``trace`` is None without a trace_fn,
-        else the stacked per-step outputs of ``trace_fn(i, x, t_next)``.
+        Implemented as the stepwise API driven to completion, so the monolithic
+        and stepwise paths are bit-identical by construction.  Returns
+        ``(tokens, trace)`` where ``trace`` is None without a trace_fn, else
+        the stacked per-step outputs of ``trace_fn(i, x, t_next)``.
         """
-        times = engine.time_grid(config)
-        x0, k_loop = engine.prior(key, batch, seq_len)
-        aux = self.prepare(engine, config)
+        from .state import advance, finalize, init_state
 
-        def body(i, x):
-            return self.step(jax.random.fold_in(k_loop, i), engine, x,
-                             times[i], times[i + 1], config, i=i, aux=aux)
+        state = init_state(key, engine, config, batch, seq_len, solver=self)
 
         if trace_fn is None:
-            x = jax.lax.fori_loop(0, config.n_steps, body, x0)
-            return engine.finalize(x, times[-1]), None
+            state = jax.lax.fori_loop(0, config.n_steps,
+                                      lambda i, s: advance(s), state)
+            return finalize(state), None
 
-        def scan_body(x, i):
-            x = body(i, x)
-            return x, trace_fn(i, x, times[i + 1])
+        def scan_body(s, i):
+            s = advance(s)
+            return s, trace_fn(i, s.x, s.times[i + 1])
 
-        x, trace = jax.lax.scan(scan_body, x0, jnp.arange(config.n_steps))
-        return engine.finalize(x, times[-1]), trace
+        state, trace = jax.lax.scan(scan_body, state,
+                                    jnp.arange(config.n_steps))
+        return finalize(state), trace

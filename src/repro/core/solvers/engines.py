@@ -33,10 +33,31 @@ import jax.numpy as jnp
 
 from ..dense import DenseCTMC
 from ..process import DiffusionProcess
+from ..schedules import grid_fraction as _grid_fraction
 from ..schedules import time_grid as _schedule_time_grid
 from .config import ScoreFn, fused_jump_default
+from .rng import (
+    is_batched_key,
+    rcategorical,
+    rgumbel,
+    rpoisson,
+    runiform,
+    split_key,
+)
 
 Array = jnp.ndarray
+
+
+def _match_cols(a, ndim: int):
+    """Right-pad a per-slot vector [B] with axes so it broadcasts to rank ndim.
+
+    Scalars (the lockstep path) pass through unchanged, so per-slot time/dt
+    support costs the legacy path nothing.
+    """
+    a = jnp.asarray(a)
+    if a.ndim == 0:
+        return a
+    return a.reshape(a.shape + (1,) * (ndim - a.ndim))
 
 
 @runtime_checkable
@@ -93,7 +114,7 @@ class DenseEngine:
 
         if config.grid == "uniform":
             return np.linspace(self.ctmc.t_max, config.t_stop, config.n_steps + 1)
-        u = np.linspace(0.0, 1.0, config.n_steps + 1) ** 2
+        u = _grid_fraction(np.linspace(0.0, 1.0, config.n_steps + 1), config.grid)
         return self.ctmc.t_max - (self.ctmc.t_max - config.t_stop) * u
 
     def time_grid(self, config) -> Array:
@@ -108,9 +129,14 @@ class DenseEngine:
 
         Returns mu [B, 2S-1] where column j corresponds to nu = j - (S-1); the
         nu = 0 column is zero.  Entries with x + nu outside X are zero.
+        ``t`` may be a scalar (shared time) or [B] (per-slot times).
         """
         s = self.n_states
-        rates_y = self.ctmc.backward_rates(x, t)  # [B, S] over target states
+        if jnp.ndim(t) == 0:
+            rates_y = self.ctmc.backward_rates(x, t)  # [B, S] over targets
+        else:
+            rates_y = jax.vmap(
+                lambda xb, tb: self.ctmc.backward_rates(xb[None], tb)[0])(x, t)
         nu = jnp.arange(-(s - 1), s)  # [2S-1]
         tgt = x[:, None] + nu[None, :]
         valid = (tgt >= 0) & (tgt < s) & (nu[None, :] != 0)
@@ -122,6 +148,7 @@ class DenseEngine:
                    coeff_a=1.0, coeff_b=0.0):
         s = self.n_states
         rates = _combine(rates, rates_b, coeff_a, coeff_b)
+        dt = _match_cols(dt, rates.ndim)  # scalar, or [B] per-slot steps
         if linear:
             # Linearized single-jump kernel: jump to y w.p. mu_y dt (clipped),
             # else stay.  Gather the nu-indexed intensities back to target
@@ -130,11 +157,11 @@ class DenseEngine:
             p = jnp.take_along_axis(rates, tgt, axis=1) * dt
             p_stay = jnp.maximum(1.0 - p.sum(-1), 0.0)
             p_full = jnp.concatenate([p, p_stay[:, None]], axis=1)
-            y = jax.random.categorical(key, jnp.log(p_full + 1e-30))
+            y = rcategorical(key, jnp.log(p_full + 1e-30))
             return jnp.where(y == s, x, y).astype(x.dtype)
         # tau-leap update x + sum_nu K_nu * nu with K_nu ~ Poisson(mu_nu dt).
         nu = jnp.arange(-(s - 1), s)
-        k = jax.random.poisson(key, jnp.maximum(rates * dt, 0.0))
+        k = rpoisson(key, jnp.maximum(rates * dt, 0.0))
         delta = (k * nu[None, :]).sum(axis=1)
         return jnp.clip(x + delta, 0, s - 1).astype(x.dtype)
 
@@ -154,8 +181,13 @@ class DenseEngine:
         return jnp.asarray(kerns, jnp.float32)
 
     def tweedie_step(self, key, x, t0, t1, *, i, aux):
-        logits = jnp.log(aux[i][x] + 1e-30)
-        return jax.random.categorical(key, logits).astype(x.dtype)
+        if jnp.ndim(i) == 0:
+            kern = aux[i][x]  # [B, S]: step i's reverse kernel, rows by state
+        else:
+            # Per-slot step indices: gather each slot's own kernel row.
+            kern = jax.vmap(lambda k_i, xb: k_i[xb])(aux[i], x)
+        logits = jnp.log(kern + 1e-30)
+        return rcategorical(key, logits).astype(x.dtype)
 
 
 # ============================================================================ #
@@ -165,7 +197,7 @@ class DenseEngine:
 
 def _categorical_from_rates(key: jax.Array, rates: Array) -> Array:
     """Sample argmax_y (log rates_y + Gumbel) — categorical proportional to rates."""
-    g = jax.random.gumbel(key, rates.shape)
+    g = rgumbel(key, rates.shape)
     return jnp.argmax(jnp.log(jnp.maximum(rates, 1e-30)) + g, axis=-1)
 
 
@@ -187,9 +219,14 @@ def _unmask_update_fused(
     from repro.kernels import ops  # local import: kernels are optional at core
 
     b, l, v = mu_a.shape
-    k_g, k_u = jax.random.split(key)
-    gumbel = jax.random.gumbel(k_g, (b * l, v))
-    u = jax.random.uniform(k_u, (b * l,))
+    k_g, k_u = split_key(key)
+    if is_batched_key(key):
+        gumbel = rgumbel(k_g, (b, l, v)).reshape(b * l, v)
+        u = runiform(k_u, (b, l)).reshape(b * l)
+    else:
+        gumbel = jax.random.gumbel(k_g, (b * l, v))
+        u = jax.random.uniform(k_u, (b * l,))
+    dt = _match_cols(dt, mu_a.ndim)
     active = (x == mask_id).reshape(-1)
     token, jump = ops.fused_jump_update(
         (mu_a * dt).reshape(b * l, v),
@@ -213,13 +250,14 @@ def _unmask_update(
     rates: [B, L, V] per-target intensities (zero where position not masked);
     a masked position unmasks with prob 1 - exp(-sum_y rates dt) (or the
     linearized `sum_y rates * dt` when exponential=False, i.e. the Euler kernel),
-    revealing y ~ Categorical(rates).
+    revealing y ~ Categorical(rates).  dt may be scalar or [B] per-slot.
     """
-    k_jump, k_tok = jax.random.split(key)
+    k_jump, k_tok = split_key(key)
     lam = rates.sum(-1)
+    dt = _match_cols(dt, lam.ndim)
     p_jump = 1.0 - jnp.exp(-lam * dt) if exponential else jnp.clip(lam * dt, 0.0, 1.0)
     is_masked = x == mask_id
-    u = jax.random.uniform(k_jump, x.shape)
+    u = runiform(k_jump, x.shape)
     do_jump = is_masked & (u < p_jump)
     y = _categorical_from_rates(k_tok, rates)
     return jnp.where(do_jump, y, x).astype(x.dtype)
@@ -230,10 +268,11 @@ def _uniform_update(key: jax.Array, x: Array, rates: Array, dt: Array,
     """Jump applicator for uniform diffusion: positions may jump repeatedly, but we
     apply at most one target change per step (the standard factorized-tau-leaping
     practice; multi-jump composition is ill-defined on categorical fibers)."""
-    k_jump, k_tok = jax.random.split(key)
+    k_jump, k_tok = split_key(key)
     lam = rates.sum(-1)
+    dt = _match_cols(dt, lam.ndim)
     p_jump = 1.0 - jnp.exp(-lam * dt) if exponential else jnp.clip(lam * dt, 0.0, 1.0)
-    u = jax.random.uniform(k_jump, x.shape)
+    u = runiform(k_jump, x.shape)
     y = _categorical_from_rates(k_tok, rates)
     return jnp.where(u < p_jump, y, x).astype(x.dtype)
 
@@ -312,8 +351,9 @@ class MaskedEngine:
         is_masked = (x == self.mask_id)[..., None]
         a0, a1_ = self.process.schedule.alpha(t0), self.process.schedule.alpha(t1)
         p_unmask = jnp.clip((a1_ - a0) / (1.0 - a0), 0.0, 1.0)
-        k_jump, k_tok = jax.random.split(key)
-        u = jax.random.uniform(k_jump, x.shape)
+        p_unmask = _match_cols(p_unmask, x.ndim)  # [B] per-slot times
+        k_jump, k_tok = split_key(key)
+        u = runiform(k_jump, x.shape)
         do_jump = (x == self.mask_id) & (u < p_unmask)
         y = _categorical_from_rates(k_tok, probs * is_masked + 1e-30)
         return jnp.where(do_jump, y, x).astype(x.dtype)

@@ -1,0 +1,81 @@
+"""PRNG helpers that accept a single key or a per-slot batch of keys.
+
+The stepwise sampling API (``state.py``) runs every slot of a serving batch
+with its *own* key stream, so each request's tokens depend only on its own
+``(seed, request_id)`` — admission of a neighbor mid-flight cannot perturb
+them.  The monolithic path keeps the legacy batch-level key.  Both paths flow
+through the helpers here:
+
+* given a **single** key, every helper delegates to ``jax.random`` unchanged,
+  so the legacy per-step bit streams are preserved exactly;
+* given a **batched** key (leading axis = slots), draws are vmapped per slot,
+  producing one independent stream per row.
+
+Both raw ``uint32[2]`` keys (``jax.random.PRNGKey``) and new-style typed keys
+(``jax.random.key``) are supported.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def is_batched_key(key: jax.Array) -> bool:
+    """True when ``key`` carries a leading per-slot axis."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return key.ndim >= 1
+    return key.ndim >= 2
+
+
+def split_key(key: jax.Array, num: int = 2) -> tuple:
+    """``jax.random.split`` generalized to per-slot key batches."""
+    if not is_batched_key(key):
+        return tuple(jax.random.split(key, num))
+    sub = jax.vmap(lambda k: jax.random.split(k, num))(key)  # [B, num, ...]
+    return tuple(sub[:, j] for j in range(num))
+
+def fold_key(key: jax.Array, data: Array) -> jax.Array:
+    """``jax.random.fold_in`` over a single key or per-slot (key, data) pairs."""
+    if not is_batched_key(key):
+        return jax.random.fold_in(key, data)
+    data = jnp.broadcast_to(jnp.asarray(data), key.shape[:1])
+    return jax.vmap(jax.random.fold_in)(key, data)
+
+
+def _per_slot(draw, key: jax.Array, shape: tuple):
+    """Row-independent draw: row b of the [B, ...] result comes from key[b]."""
+    return jax.vmap(lambda k: draw(k, shape[1:]))(key)
+
+
+def runiform(key: jax.Array, shape: tuple, **kw) -> Array:
+    if not is_batched_key(key):
+        return jax.random.uniform(key, shape, **kw)
+    return _per_slot(lambda k, s: jax.random.uniform(k, s, **kw), key, shape)
+
+
+def rgumbel(key: jax.Array, shape: tuple) -> Array:
+    if not is_batched_key(key):
+        return jax.random.gumbel(key, shape)
+    return _per_slot(jax.random.gumbel, key, shape)
+
+
+def rpoisson(key: jax.Array, lam: Array) -> Array:
+    if not is_batched_key(key):
+        return jax.random.poisson(key, lam)
+    return jax.vmap(jax.random.poisson)(key, lam)
+
+
+def rcategorical(key: jax.Array, logits: Array) -> Array:
+    """Categorical over the last axis; batched keys draw one row per slot key."""
+    if not is_batched_key(key):
+        return jax.random.categorical(key, logits)
+    return jax.vmap(jax.random.categorical)(key, logits)
+
+
+def rrandint(key: jax.Array, shape: tuple, minval: int, maxval: int) -> Array:
+    if not is_batched_key(key):
+        return jax.random.randint(key, shape, minval, maxval)
+    return _per_slot(lambda k, s: jax.random.randint(k, s, minval, maxval),
+                     key, shape)

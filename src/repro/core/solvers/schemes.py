@@ -24,8 +24,9 @@ from ..process import DiffusionProcess
 from ..schedules import theta_section
 from .base import Solver
 from .config import ScoreFn, rk2_coefficients, trapezoidal_coefficients
-from .engines import _categorical_from_rates
+from .engines import _categorical_from_rates, _match_cols
 from .registry import register_solver
+from .rng import rgumbel, split_key
 
 Array = jnp.ndarray
 
@@ -70,7 +71,7 @@ class _TwoStageSolver(Solver):
     nfe_per_step = 2
 
     def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
-        k1, k2 = jax.random.split(key)
+        k1, k2 = split_key(key)
         dt = t0 - t1
         rho = theta_section(t0, t1, config.theta)
         mu_n = engine.rates(x, t0)
@@ -136,16 +137,17 @@ def parallel_decoding_step(
     """MaskGIT step: greedily commit the most confident tokens, re-mask the rest.
 
     Confidence = log p(chosen) + temperature * (1 - (i+1)/N) * Gumbel (the "linear
-    randomization" strategy of Chang et al. / App. D.4).
+    randomization" strategy of Chang et al. / App. D.4).  ``i`` (and ``t0``)
+    may be scalars or [B] per-slot values.
     """
-    k_tok, k_conf = jax.random.split(key)
+    k_tok, k_conf = split_key(key)
     b, l = x.shape
     probs = score_fn(x, t0)
     is_masked = x == mask_id
     y = _categorical_from_rates(k_tok, probs)
     chosen_p = jnp.take_along_axis(probs, y[..., None], axis=-1)[..., 0]
-    anneal = temperature * (1.0 - (i + 1.0) / n_steps)
-    conf = jnp.log(chosen_p + 1e-30) + anneal * jax.random.gumbel(k_conf, x.shape)
+    anneal = _match_cols(temperature * (1.0 - (i + 1.0) / n_steps), x.ndim)
+    conf = jnp.log(chosen_p + 1e-30) + anneal * rgumbel(k_conf, x.shape)
     conf = jnp.where(is_masked, conf, jnp.inf)  # already-revealed stay revealed
     n_masked_next = _maskgit_schedule(i, n_steps, is_masked.sum(-1))
     # Keep masked the n_masked_next least-confident positions.
@@ -159,6 +161,10 @@ def parallel_decoding_step(
 @register_solver("parallel_decoding")
 class ParallelDecodingSolver(Solver):
     """MaskGIT-style confidence decoding (a biased sampler; see Fig. 3)."""
+
+    #: the arccos masking schedule is a function of i / config.n_steps, so a
+    #: per-slot budget override would evaluate it out of range.
+    supports_step_budgets = False
 
     def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
         mask_id = getattr(engine, "mask_id", None)
@@ -217,6 +223,8 @@ def fhs_sample(
 @register_solver("fhs")
 class FHSSolver(Solver):
     """Whole-trajectory exact sampler for masked diffusion; overrides run()."""
+
+    supports_stepwise = False
 
     def run(self, key, engine, config, batch, seq_len=None, trace_fn=None):
         if trace_fn is not None:

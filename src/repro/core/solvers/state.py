@@ -1,0 +1,325 @@
+"""Stepwise sampling API: SolverState + init_state / advance / finalize.
+
+``Solver.run`` (and therefore ``sample``) integrates a whole trajectory inside
+one ``fori_loop`` — fine for offline sampling, useless for serving, where
+trajectories must be advanced, interleaved, and observed one step at a time.
+This module exposes the same integration as an explicit state machine:
+
+    state = init_state(key, engine, config, batch, seq_len)
+    for _ in range(config.n_steps):
+        state = advance(state)          # one jitted solver step, whole batch
+    tokens = finalize(state)
+
+Two modes, chosen statically at ``init_state`` time:
+
+* **lockstep** (default): one batch-level key stream, all slots share the step
+  index — the bits reproduce the monolithic ``sample()`` exactly (the default
+  ``Solver.run`` is itself implemented on top of this path, so parity is by
+  construction and enforced by tests/test_solver_api.py);
+* **per-slot** (``per_slot=True``): every slot carries its own PRNG key, step
+  index, time, and step budget (``target``).  ``advance`` folds each slot's
+  key with its *own* step index and steps each slot over its *own* (t0, t1)
+  interval of an analytically-evaluated per-slot time grid, so fresh slots can
+  start at t = t_max while neighbors are mid-trajectory and slots can carry
+  different NFE budgets — the substrate of the continuous-batching
+  ``ServingEngine``.  Slots whose step index reached their target are frozen
+  (their tokens stop changing) until re-admitted.
+
+In per-slot mode a slot's tokens depend only on its own key and its own rows
+of the score network (engines are row-independent), so admitting a request
+into a freed slot cannot perturb its neighbors — see
+``test_solver_api.py::test_per_slot_rows_independent``.
+
+``SolverState`` is a registered pytree; the non-array run context (solver,
+engine, config) rides in the pytree's *static* aux data as a single
+identity-hashed object, keeping ``advance`` jittable with the state as its
+only argument.  Contexts are interned weakly, so repeated ``init_state``
+calls with the same (engine, config) share one context (one jit trace) and a
+context — including the engine's score_fn closure over the model params —
+is freed as soon as no state references it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..schedules import grid_fraction
+from .config import SamplerConfig
+from .registry import get_solver
+from .rng import fold_key
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------------- #
+# Run context: the (solver, engine, config) triple behind a state.
+# --------------------------------------------------------------------------- #
+
+
+# eq=False: identity hash/eq, so the context can sit in pytree static aux data
+# (engines hold numpy fields and callables, which value-hashing would choke on)
+# and jit caches by object identity.
+@dataclasses.dataclass(frozen=True, eq=False)
+class _RunContext:
+    solver: Any
+    engine: Any
+    config: SamplerConfig
+
+
+_CONTEXTS: "weakref.WeakValueDictionary[tuple, _RunContext]" = (
+    weakref.WeakValueDictionary())
+
+
+def _intern_context(solver, engine, config) -> _RunContext:
+    """Share one context per live (solver type, engine, config) triple.
+
+    Keyed by engine identity (safe: the context holds the engine strongly, so
+    an id can only be reused once every context referencing the old engine is
+    gone) and config value (SamplerConfig is frozen/hashable, so fresh but
+    equal configs — the sweep pattern — reuse the same trace).
+    """
+    key = (type(solver), id(engine), config)
+    ctx = _CONTEXTS.get(key)
+    if ctx is None:
+        ctx = _RunContext(solver=solver, engine=engine, config=config)
+        _CONTEXTS[key] = ctx
+    return ctx
+
+
+def run_context(state: "SolverState") -> _RunContext:
+    """The (solver, engine, config) triple a state was initialized with."""
+    return state.ctx
+
+
+# --------------------------------------------------------------------------- #
+# SolverState pytree
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class SolverState:
+    """In-flight sampling state — everything ``advance`` needs, as a pytree.
+
+    Lockstep mode: ``step``/``t`` are scalars and ``rng`` is one key.
+    Per-slot mode: ``step``/``t`` are [B] and ``rng`` is a [B] key batch.
+    """
+
+    #: current tokens, [B] (dense) or [B, L] (factorized).
+    x: Array
+    #: next step index to run; a slot is finished once it reaches its target.
+    step: Array
+    #: current forward time (t_max at init, descending to t_stop).
+    t: Array
+    #: loop key(s); the step key is fold_in(rng, step), exactly the legacy fold.
+    rng: jax.Array
+    #: shared backward time grid, [n_steps + 1] descending.
+    times: Array
+    #: per-slot step budget [B] (per-slot mode; None in lockstep, where the
+    #: budget is always config.n_steps).  Slots with target != n_steps walk an
+    #: analytically-evaluated grid of their own resolution over the same
+    #: [t_max, t_stop] span.
+    target: Any
+    #: solver.prepare() output (e.g. dense tweedie's stacked reverse kernels).
+    aux: Any
+    #: run context (static, identity-hashed) — see run_context().
+    ctx: Any
+    #: static mode flag.
+    per_slot: bool
+
+
+jax.tree_util.register_pytree_node(
+    SolverState,
+    lambda s: ((s.x, s.step, s.t, s.rng, s.times, s.target, s.aux),
+               (s.ctx, s.per_slot)),
+    lambda meta, ch: SolverState(x=ch[0], step=ch[1], t=ch[2], rng=ch[3],
+                                 times=ch[4], target=ch[5], aux=ch[6],
+                                 ctx=meta[0], per_slot=meta[1]),
+)
+
+
+def _slot_prior(engine, key: jax.Array, seq_len: Optional[int]):
+    """One slot's t = t_max canvas and loop key (batch-of-one prior, squeezed)."""
+    x, k_loop = engine.prior(key, 1, seq_len)
+    return x[0], k_loop
+
+
+def init_state(
+    key: jax.Array,
+    engine,
+    config: SamplerConfig,
+    batch: int,
+    seq_len: Optional[int] = None,
+    *,
+    per_slot: bool = False,
+    solver=None,
+) -> SolverState:
+    """Build the t = t_max state for a run of ``batch`` trajectories.
+
+    Args:
+      key: PRNG key for the run.  In per-slot mode it is split into one key
+        per slot (slots admitted later via :func:`admit_slot` carry their own).
+      engine: state-space engine (configure() is applied, as in ``sample``).
+      config: SamplerConfig; ``config.method`` must name a stepwise solver
+        (``fhs`` integrates whole trajectories and is rejected here).
+      batch: number of slots.
+      seq_len: sequence length for factorized engines.
+      per_slot: False -> lockstep mode, bit-identical to ``sample()``;
+        True -> independent per-slot key/step/time streams.
+      solver: optional pre-built solver instance (defaults to the registry's).
+    """
+    if solver is None:
+        solver = get_solver(config.method)()
+    if not getattr(solver, "supports_stepwise", True):
+        raise ValueError(
+            f"solver {config.method!r} integrates whole trajectories and has "
+            "no stepwise init/advance form; use sample()")
+    configure = getattr(engine, "configure", None)
+    if configure is not None:
+        engine = configure(config)
+    ctx = _intern_context(solver, engine, config)
+    times = engine.time_grid(config)
+    aux = solver.prepare(engine, config)
+    if not per_slot:
+        x0, k_loop = engine.prior(key, batch, seq_len)
+        return SolverState(x=x0, step=jnp.int32(0), t=times[0], rng=k_loop,
+                           times=times, target=None, aux=aux, ctx=ctx,
+                           per_slot=False)
+    slot_keys = jax.random.split(key, batch)
+    x0, loop_keys = jax.vmap(lambda k: _slot_prior(engine, k, seq_len))(slot_keys)
+    return SolverState(
+        x=x0,
+        step=jnp.zeros((batch,), jnp.int32),
+        t=jnp.broadcast_to(times[0], (batch,)),
+        rng=loop_keys,
+        times=times,
+        target=jnp.full((batch,), config.n_steps, jnp.int32),
+        aux=aux,
+        ctx=ctx,
+        per_slot=True,
+    )
+
+
+def _slot_interval(state: SolverState, config, i: Array, target: Array):
+    """Per-slot (t0, t1): step i of a target-step grid over [t_max, t_stop].
+
+    Evaluates the config's grid law in closed form so every slot can walk a
+    grid of its own resolution (per-request NFE budgets) without materializing
+    per-slot time arrays.
+    """
+    t_hi = state.times[0]
+    t_lo = state.times[-1]
+    m = target.astype(jnp.float32)
+    u0 = grid_fraction(i.astype(jnp.float32) / m, config.grid)
+    u1 = grid_fraction((i.astype(jnp.float32) + 1.0) / m, config.grid)
+    return t_hi - (t_hi - t_lo) * u0, t_hi - (t_hi - t_lo) * u1
+
+
+def advance(state: SolverState) -> SolverState:
+    """One solver step of the whole batch; jit-safe (state is the only arg).
+
+    Lockstep: the exact legacy loop body — key = fold_in(rng, i), step over
+    (times[i], times[i+1]).  Per-slot: each slot folds its own key with its
+    own step index and integrates its own interval; finished slots (step ==
+    target) are frozen.
+    """
+    ctx = run_context(state)
+    if not state.per_slot:
+        n_steps = ctx.config.n_steps
+        i_c = jnp.minimum(state.step, n_steps - 1)
+        key = fold_key(state.rng, i_c)
+        x_new = ctx.solver.step(key, ctx.engine, state.x, state.times[i_c],
+                                state.times[i_c + 1], ctx.config, i=i_c,
+                                aux=state.aux)
+        # Freeze once the grid is exhausted (i_c == state.step for every
+        # in-range step, so the legacy bits are untouched); an over-driven
+        # loop must not silently re-sample the finished canvas.
+        done = state.step >= n_steps
+        return dataclasses.replace(
+            state,
+            x=jnp.where(done, state.x, x_new),
+            step=jnp.minimum(state.step + 1, n_steps),
+            t=state.times[i_c + 1])
+    i = state.step                                     # [B]
+    active = i < state.target                          # [B]
+    i_c = jnp.minimum(i, state.target - 1)
+    keys = fold_key(state.rng, i_c)                    # [B] per-slot step keys
+    t0, t1 = _slot_interval(state, ctx.config, i_c, state.target)
+    x_new = ctx.solver.step(keys, ctx.engine, state.x, t0, t1, ctx.config,
+                            i=i_c, aux=state.aux)
+    keep = active.reshape(active.shape + (1,) * (state.x.ndim - 1))
+    return dataclasses.replace(
+        state,
+        x=jnp.where(keep, x_new, state.x),
+        step=jnp.where(active, i + 1, i),
+        t=jnp.where(active, t1, state.t),
+    )
+
+
+def finalize(state: SolverState) -> Array:
+    """Engine finalize pass (masked: greedy-fill leftover masks) -> tokens."""
+    ctx = run_context(state)
+    return ctx.engine.finalize(state.x, state.times[-1])
+
+
+# --------------------------------------------------------------------------- #
+# Per-slot pool operations (the ServingEngine's substrate)
+# --------------------------------------------------------------------------- #
+
+
+def admit_slot(state: SolverState, slot: int, key: jax.Array,
+               n_steps: Optional[int] = None) -> SolverState:
+    """Restart slot ``slot`` from t = t_max under its own key.
+
+    The slot's canvas and loop key come from ``engine.prior`` exactly as a
+    fresh per-slot init would produce them, so a request's tokens do not
+    depend on when (or next to whom) it was admitted.  ``n_steps`` overrides
+    the config's step budget for this slot (per-request NFE): the slot then
+    walks an n_steps-resolution grid over the same [t_max, t_stop] span.
+    """
+    if not state.per_slot:
+        raise ValueError("admit_slot requires a per-slot state "
+                         "(init_state(..., per_slot=True))")
+    ctx = run_context(state)
+    if n_steps is None:
+        n_steps = ctx.config.n_steps
+    if not budget_supported(state, n_steps):
+        raise ValueError(
+            f"solver {ctx.config.method!r} bakes config.n_steps into its "
+            "per-step math or aux; per-slot n_steps overrides are not "
+            "supported")
+    seq_len = state.x.shape[1] if state.x.ndim > 1 else None
+    x_row, loop_key = _slot_prior(ctx.engine, key, seq_len)
+    return dataclasses.replace(
+        state,
+        x=state.x.at[slot].set(x_row.astype(state.x.dtype)),
+        step=state.step.at[slot].set(0),
+        t=state.t.at[slot].set(state.times[0]),
+        rng=state.rng.at[slot].set(loop_key),
+        target=state.target.at[slot].set(n_steps),
+    )
+
+
+def budget_supported(state: SolverState, n_steps: int) -> bool:
+    """Whether ``admit_slot(..., n_steps=n_steps)`` would be accepted.
+
+    The single predicate behind both ``admit_slot``'s rejection and the
+    ServingEngine's submit-time validation: an override requires a solver
+    whose per-step math is budget-agnostic (no per-step aux, no
+    ``config.n_steps`` coupling).
+    """
+    ctx = run_context(state)
+    if n_steps == ctx.config.n_steps:
+        return True
+    return (state.aux is None
+            and getattr(ctx.solver, "supports_step_budgets", True))
+
+
+def slot_done(state: SolverState) -> Array:
+    """[B] bool — slots whose trajectory has consumed its step budget."""
+    if not state.per_slot:
+        raise ValueError("slot_done requires a per-slot state")
+    return state.step >= state.target

@@ -1,4 +1,4 @@
-"""Serving launcher: batched diffusion sampling with an NFE budget.
+"""Serving launcher: continuous-batching diffusion sampling with an NFE budget.
 
     PYTHONPATH=src python -m repro.launch.serve --arch radd_small --reduced \
         --method theta_trapezoidal --nfe 32 --requests 8 --seq-len 128
@@ -30,6 +30,8 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--run-to-completion", action="store_true",
+                    help="legacy batching: admit only between complete runs")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -40,15 +42,30 @@ def main() -> None:
     mesh = make_host_mesh()
     with mesh:
         engine = ServingEngine(params, cfg, process, sampler,
-                               max_batch=args.max_batch, seq_len=args.seq_len)
+                               max_batch=args.max_batch, seq_len=args.seq_len,
+                               continuous=not args.run_to_completion)
         t0 = time.time()
         for i in range(args.requests):
-            engine.submit(Request(request_id=i, seq_len=args.seq_len, seed=args.seed))
+            engine.submit(Request(request_id=i, seq_len=args.seq_len,
+                                  seed=args.seed + i))
         results = engine.run_all()
     dt = time.time() - t0
     toks = np.stack([r.tokens for r in results])
+    stats = engine.stats()
+
+    # Latency here is end-to-end (submit -> finish), queue delay included.
+    lat = np.asarray([r.latency_s for r in results])
+    qd = np.asarray([r.queue_delay_s for r in results])
+    nfe = sorted({r.nfe for r in results})
     print(f"served {len(results)} requests in {dt:.2f}s "
-          f"({args.method}, NFE={results[0].nfe}, shape={toks.shape})")
+          f"({args.method}, NFE/request={nfe}, shape={toks.shape}, "
+          f"mode={'continuous' if engine.continuous else 'run-to-completion'})")
+    print(f"latency p50 {np.percentile(lat, 50):.2f}s  "
+          f"p95 {np.percentile(lat, 95):.2f}s  "
+          f"(queue delay p50 {np.percentile(qd, 50):.2f}s  "
+          f"p95 {np.percentile(qd, 95):.2f}s)")
+    print(f"slot occupancy {stats['occupancy']:.1%} over "
+          f"{stats['global_steps']} pool steps")
     print("first sample head:", toks[0, :24].tolist())
 
 

@@ -1,3 +1,13 @@
-from .engine import Request, Result, ServingEngine, ar_generate, make_score_fn
+from .engine import (
+    FINISHED,
+    QUEUED,
+    RUNNING,
+    Request,
+    Result,
+    ServingEngine,
+    ar_generate,
+    make_score_fn,
+)
 
-__all__ = ["Request", "Result", "ServingEngine", "ar_generate", "make_score_fn"]
+__all__ = ["Request", "Result", "ServingEngine", "ar_generate", "make_score_fn",
+           "QUEUED", "RUNNING", "FINISHED"]

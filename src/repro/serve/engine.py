@@ -1,26 +1,64 @@
-"""Batched sampling/serving engine.
+"""Continuous-batching sampling/serving engine.
 
-Serves generation requests by batching them onto NFE-budgeted solver runs: each
-admitted batch runs `SamplerConfig.n_steps` full-canvas denoising forwards (the
-paper's serving regime — every NFE is one score-network evaluation on the whole
-batch).  The engine also exposes an AR decode path (`ar_generate`) used by the
-decode-shape dry-runs.
+The paper's serving regime prices every NFE as one score-network forward over
+the whole batch, so wall-clock throughput is set by how full each forward is.
+The engine therefore keeps a fixed pool of ``max_batch`` *slots* over a
+per-slot :class:`~repro.core.SolverState` and advances the whole pool one
+solver step at a time (one/two score forwards per step, depending on the
+scheme).  Requests move through ``QUEUED -> RUNNING -> FINISHED``:
+
+* **admission** happens at any step boundary — a freed slot picks up the next
+  queued request, which starts at t = t_max while its neighbors are
+  mid-trajectory (the per-slot step/time/key fields make this sound);
+* each request samples under its **own PRNG key**, folded from
+  ``(seed, request_id)``, so results are independent of batch composition and
+  admission time;
+* per-request accounting records NFE, queue delay (submit -> admission), and
+  end-to-end latency (submit -> finish).
+
+``continuous=False`` selects the legacy run-to-completion discipline (a new
+batch is admitted only once every slot has drained) — kept as the benchmark
+baseline; ``benchmarks/serve_throughput.py`` measures the throughput gap.
+Whole-trajectory solvers (``fhs``) cannot be stepped and always use a
+monolithic whole-batch run.  The engine also exposes an AR decode path
+(`ar_generate`) used by the decode-shape dry-runs.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, Deque, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DiffusionProcess, MaskedEngine, SamplerConfig, sample
+from repro.core import (
+    DiffusionProcess,
+    MaskedEngine,
+    SamplerConfig,
+    admit_slot,
+    advance,
+    budget_supported,
+    finalize,
+    get_solver,
+    init_state,
+    sample,
+)
 from repro.models import decode_step, denoise_logits, init_decode_state
 from repro.models.config import ModelConfig
 
 Params = Any
+
+#: request lifecycle states
+QUEUED = "QUEUED"
+RUNNING = "RUNNING"
+FINISHED = "FINISHED"
+
+#: stream_cb(request_id, step_index, tokens_row) — called after every solver
+#: step for each RUNNING request (costs one device fetch per step).
+StreamFn = Callable[[int, int, np.ndarray], None]
 
 
 @dataclasses.dataclass
@@ -28,14 +66,26 @@ class Request:
     request_id: int
     seq_len: int
     seed: int = 0
+    #: per-request step budget (NFE knob); None = the sampler config's
+    #: n_steps.  Ignored by whole-trajectory solvers (fhs).
+    n_steps: Optional[int] = None
+    #: lifecycle state, maintained by the engine.
+    status: str = QUEUED
 
 
 @dataclasses.dataclass
 class Result:
     request_id: int
     tokens: np.ndarray
+    #: score-network evaluations this request's trajectory consumed.
     nfe: int
+    #: end-to-end latency, submit -> finish (queue delay included).
     latency_s: float
+    #: time spent QUEUED, submit -> admission into a slot.
+    queue_delay_s: float = 0.0
+    #: solver steps the trajectory ran (the request's n_steps budget if set,
+    #: else the sampler config's; whole-batch evals for fhs).
+    steps: int = 0
 
 
 def make_score_fn(params: Params, cfg: ModelConfig,
@@ -52,57 +102,196 @@ def make_score_fn(params: Params, cfg: ModelConfig,
 
 
 class ServingEngine:
-    """Fixed-shape batched diffusion sampling with continuous admission."""
+    """Fixed-shape batched diffusion sampling with step-boundary admission."""
 
     def __init__(self, params: Params, cfg: ModelConfig, process: DiffusionProcess,
                  sampler: SamplerConfig, max_batch: int = 8, seq_len: int = 256,
-                 extra_inputs: Optional[dict] = None):
+                 extra_inputs: Optional[dict] = None, continuous: bool = True,
+                 stream_cb: Optional[StreamFn] = None):
         self.params = params
         self.cfg = cfg
         self.process = process
         self.sampler = sampler
         self.max_batch = max_batch
         self.seq_len = seq_len
-        self._queue: List[Request] = []
-        score_fn = make_score_fn(params, cfg, extra_inputs)
-        solver_engine = MaskedEngine(process=process, score_fn=score_fn)
-        # SampleResult is a pytree (nfe is static), so the jitted call returns
-        # solver-accurate NFE accounting (e.g. fhs: one eval per position).
-        self._sample = jax.jit(
-            lambda key: sample(key, solver_engine, sampler,
-                               batch=max_batch, seq_len=seq_len))
+        self.continuous = continuous
+        self.stream_cb = stream_cb
+        self._queue: Deque[Tuple[Request, float]] = collections.deque()
+        self._slot_req: List[Optional[Request]] = [None] * max_batch
+        self._slot_times: List[Tuple[float, float]] = [(0.0, 0.0)] * max_batch
+        # accounting
+        self.requests_served = 0
+        self.global_steps = 0
+        self.finalize_passes = 0
+        self._active_slot_steps = 0
 
+        score_fn = make_score_fn(params, cfg, extra_inputs)
+        self._solver_engine = MaskedEngine(process=process, score_fn=score_fn)
+        self._solver = get_solver(sampler.method)()
+        self._stepwise = self._solver.supports_stepwise
+        if self._stepwise:
+            # Per-slot pool state; all slots start drained (step == n_steps,
+            # frozen by advance) until a request is admitted into them.
+            state = init_state(jax.random.PRNGKey(0), self._solver_engine,
+                               sampler, max_batch, seq_len, per_slot=True,
+                               solver=self._solver)
+            self._state = dataclasses.replace(
+                state,
+                step=jnp.full((max_batch,), sampler.n_steps, jnp.int32),
+                t=jnp.broadcast_to(state.times[-1], (max_batch,)))
+            self._advance = jax.jit(advance)
+            self._finalize = jax.jit(finalize)
+        else:
+            # Whole-trajectory solvers (fhs) run monolithically per batch; the
+            # batch key folds in every request's (seed, request_id).
+            self._sample = jax.jit(
+                lambda key: sample(key, self._solver_engine, sampler,
+                                   batch=max_batch, seq_len=seq_len))
+
+    # ------------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
         if req.seq_len > self.seq_len:
             raise ValueError(f"request seq_len {req.seq_len} > engine {self.seq_len}")
-        self._queue.append(req)
+        if req.n_steps is not None and req.n_steps < 1:
+            raise ValueError(f"request n_steps must be >= 1, got {req.n_steps}")
+        if (self._stepwise and req.n_steps is not None
+                and not budget_supported(self._state, req.n_steps)):
+            # Reject up front: admit_slot would raise mid-run otherwise,
+            # dropping the request after it was already queued.
+            raise ValueError(
+                f"solver {self.sampler.method!r} does not support per-request "
+                f"n_steps (requested {req.n_steps}, engine runs "
+                f"{self.sampler.n_steps})")
+        req.status = QUEUED
+        self._queue.append((req, time.time()))
+
+    @staticmethod
+    def request_key(req: Request) -> jax.Array:
+        """The request's private PRNG key, folded from (seed, request_id)."""
+        return jax.random.fold_in(jax.random.PRNGKey(req.seed), req.request_id)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self._slot_req) if r is not None]
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    def _slot_budget(self, slot: int) -> int:
+        req = self._slot_req[slot]
+        return self.sampler.n_steps if req.n_steps is None else req.n_steps
+
+    def _admit(self) -> None:
+        """Move queued requests into free slots (continuous: at any step
+        boundary; run-to-completion: only once the whole pool has drained)."""
+        if not self.continuous and self.active_slots:
+            return
+        now = time.time()
+        for slot in range(self.max_batch):
+            if not self._queue:
+                break
+            if self._slot_req[slot] is not None:
+                continue
+            req, submit_t = self._queue.popleft()
+            if self._stepwise:
+                self._state = admit_slot(self._state, slot,
+                                         self.request_key(req),
+                                         n_steps=req.n_steps)
+            req.status = RUNNING
+            self._slot_req[slot] = req
+            self._slot_times[slot] = (submit_t, now)
+
+    def _emit(self, slot: int, finish_t: float, tokens_row: np.ndarray) -> Result:
+        req = self._slot_req[slot]
+        submit_t, admit_t = self._slot_times[slot]
+        req.status = FINISHED
+        self._slot_req[slot] = None
+        self.requests_served += 1
+        steps = req.n_steps if req.n_steps is not None else self.sampler.n_steps
+        return Result(
+            request_id=req.request_id,
+            tokens=np.asarray(tokens_row[: req.seq_len]),
+            nfe=steps * self._solver.nfe_per_step,
+            latency_s=finish_t - submit_t,
+            queue_delay_s=admit_t - submit_t,
+            steps=steps,
+        )
 
     def step(self) -> List[Result]:
-        """Run one admitted batch (padded to max_batch); returns finished results."""
-        if not self._queue:
+        """Admit, advance the pool by ONE solver step, return newly finished."""
+        if not self._stepwise:
+            return self._run_monolithic()
+        self._admit()
+        active = self.active_slots
+        if not active:
             return []
-        batch = self._queue[: self.max_batch]
-        self._queue = self._queue[self.max_batch:]
-        key = jax.random.PRNGKey(batch[0].seed ^ (batch[0].request_id * 2654435761))
-        t0 = time.time()
+        self._state = self._advance(self._state)
+        self.global_steps += 1
+        self._active_slot_steps += len(active)
+
+        steps = np.asarray(self._state.step)
+        if self.stream_cb is not None:
+            x_host = np.asarray(jax.device_get(self._state.x))
+            for slot in active:
+                req = self._slot_req[slot]
+                self.stream_cb(req.request_id, int(steps[slot]),
+                               x_host[slot, : req.seq_len])
+
+        done = [s for s in active if steps[s] >= self._slot_budget(s)]
+        if not done:
+            return []
+        # One whole-pool finalize forward per finishing step (shape-stable for
+        # jit); counted separately in stats() since it is off-grid work.
+        self.finalize_passes += 1
+        tokens = np.asarray(jax.device_get(self._finalize(self._state)))
+        finish_t = time.time()
+        return [self._emit(slot, finish_t, tokens[slot]) for slot in done]
+
+    def _run_monolithic(self) -> List[Result]:
+        """Legacy whole-batch run for solvers without a stepwise form (fhs)."""
+        self._admit()
+        active = self.active_slots
+        if not active:
+            return []
+        key = jax.random.PRNGKey(0)
+        for slot in active:
+            key = jax.random.fold_in(key, self._slot_req[slot].seed)
+            key = jax.random.fold_in(key, self._slot_req[slot].request_id)
         result = self._sample(key)
-        tokens = jax.device_get(result.tokens)
-        dt = time.time() - t0
+        tokens = np.asarray(jax.device_get(result.tokens))
+        # Account actual whole-batch evals (fhs: one per position), not the
+        # sampler's n_steps, which whole-trajectory solvers ignore.
+        self.global_steps += result.nfe
+        self._active_slot_steps += len(active) * result.nfe
+        finish_t = time.time()
         out = []
-        for i, req in enumerate(batch):
-            out.append(Result(
-                request_id=req.request_id,
-                tokens=np.asarray(tokens[i, : req.seq_len]),
-                nfe=result.nfe,
-                latency_s=dt,
-            ))
+        for slot in active:
+            res = self._emit(slot, finish_t, tokens[slot])
+            res = dataclasses.replace(res, nfe=result.nfe, steps=result.nfe)
+            out.append(res)
         return out
 
     def run_all(self) -> List[Result]:
-        results = []
-        while self._queue:
+        """Serve until the queue and every slot have drained (completion order)."""
+        results: List[Result] = []
+        while self._queue or self.active_slots:
             results.extend(self.step())
         return results
+
+    def stats(self) -> dict:
+        """Pool-level accounting: forwards spent vs. slot-steps actually used."""
+        capacity = self.global_steps * self.max_batch
+        return {
+            "requests_served": self.requests_served,
+            "global_steps": self.global_steps,
+            # in-grid solver forwards + the whole-pool finalize forwards
+            "score_evals": (self.global_steps * self._solver.nfe_per_step
+                            + self.finalize_passes),
+            "finalize_passes": self.finalize_passes,
+            "active_slot_steps": self._active_slot_steps,
+            "occupancy": (self._active_slot_steps / capacity) if capacity else 0.0,
+        }
 
 
 def ar_generate(params: Params, cfg: ModelConfig, prompt: jnp.ndarray,

@@ -1,4 +1,4 @@
-"""Serving engine: batching, request lifecycle, AR generation path."""
+"""Serving engine: continuous batching, request lifecycle, AR generation path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +7,15 @@ import pytest
 from repro.core import SamplerConfig, loglinear_schedule, masked_process
 from repro.models import init_params
 from repro.models.config import ModelConfig
-from repro.serve import Request, ServingEngine, ar_generate, make_score_fn
+from repro.serve import (
+    FINISHED,
+    QUEUED,
+    RUNNING,
+    Request,
+    ServingEngine,
+    ar_generate,
+    make_score_fn,
+)
 
 CFG = ModelConfig(name="srv", family="dense", n_layers=2, d_model=64, n_heads=2,
                   n_kv_heads=2, head_dim=32, d_ff=128, vocab_size=23,
@@ -17,6 +25,14 @@ CFG = ModelConfig(name="srv", family="dense", n_layers=2, d_model=64, n_heads=2,
 @pytest.fixture(scope="module")
 def params():
     return init_params(jax.random.PRNGKey(0), CFG)[0]
+
+
+def make_engine(params, n_steps=4, max_batch=4, seq_len=16, **kw):
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    return ServingEngine(params, CFG, proc,
+                         SamplerConfig(method="theta_trapezoidal",
+                                       n_steps=n_steps, theta=0.5),
+                         max_batch=max_batch, seq_len=seq_len, **kw)
 
 
 def test_score_fn_is_normalized(params, rng_key):
@@ -51,6 +67,143 @@ def test_engine_rejects_oversized(params):
                         max_batch=2, seq_len=8)
     with pytest.raises(ValueError):
         eng.submit(Request(request_id=0, seq_len=64))
+
+
+# --------------------------------------------------------------------------- #
+# Continuous-batching scheduler
+# --------------------------------------------------------------------------- #
+
+
+def test_distinct_seeds_in_one_batch(params):
+    """Regression: every request's seed matters, not just the batch head's."""
+    eng = make_engine(params, max_batch=2)
+    eng.submit(Request(request_id=0, seq_len=16, seed=1))
+    eng.submit(Request(request_id=1, seq_len=16, seed=2))
+    r0, r1 = sorted(eng.run_all(), key=lambda r: r.request_id)
+    assert (r0.tokens != r1.tokens).any()
+
+
+def test_tokens_independent_of_batch_composition(params):
+    """The same (seed, request_id) yields the same tokens served alone or
+    admitted mid-flight next to other traffic."""
+    eng = make_engine(params, max_batch=2)
+    eng.submit(Request(request_id=7, seq_len=16, seed=3))
+    alone = eng.run_all()[0]
+
+    eng2 = make_engine(params, max_batch=2)
+    for i in range(3):
+        eng2.submit(Request(request_id=i, seq_len=16, seed=i))
+    eng2.step()                       # pool busy with requests 0 and 1
+    eng2.submit(Request(request_id=7, seq_len=16, seed=3))
+    crowded = [r for r in eng2.run_all() if r.request_id == 7][0]
+    assert (alone.tokens == crowded.tokens).all()
+
+
+def test_mid_flight_admission_and_slot_reuse(params):
+    """6 requests through a 2-slot pool: freed slots re-admit at step
+    boundaries while the neighbor is mid-trajectory."""
+    eng = make_engine(params, n_steps=4, max_batch=2)
+    for i in range(6):
+        eng.submit(Request(request_id=i, seq_len=16, seed=i))
+    assert eng.queued == 6
+    finished = eng.step()             # admits 0,1; 3 steps remain for them
+    assert finished == [] and eng.queued == 4
+    assert sorted(r.request_id for r in
+                  (eng._slot_req[s] for s in eng.active_slots)) == [0, 1]
+    results = eng.run_all()
+    assert [r.request_id for r in results] == [0, 1, 2, 3, 4, 5]  # drain order
+    assert eng.queued == 0 and eng.active_slots == []
+    # slot reuse: 6 requests x 4 steps through 2 slots = 12 pool steps
+    assert eng.stats()["global_steps"] == 12
+    assert eng.stats()["occupancy"] == 1.0
+
+
+def test_request_lifecycle_states(params):
+    eng = make_engine(params, max_batch=2)
+    req = Request(request_id=0, seq_len=16)
+    late = Request(request_id=1, seq_len=16)
+    eng.submit(req)
+    eng.submit(late)
+    assert req.status == QUEUED and late.status == QUEUED
+    eng.step()
+    assert req.status == RUNNING
+    eng.run_all()
+    assert req.status == FINISHED and late.status == FINISHED
+
+
+def test_latency_includes_queue_delay(params):
+    eng = make_engine(params, n_steps=2, max_batch=1)
+    for i in range(3):
+        eng.submit(Request(request_id=i, seq_len=16, seed=i))
+    results = eng.run_all()
+    # request 2 waited for two full runs before admission
+    assert results[2].queue_delay_s >= results[0].queue_delay_s
+    for r in results:
+        assert r.latency_s >= r.queue_delay_s >= 0.0
+
+
+def test_per_request_step_budgets(params):
+    eng = make_engine(params, n_steps=4, max_batch=2)
+    eng.submit(Request(request_id=0, seq_len=16, n_steps=2))
+    eng.submit(Request(request_id=1, seq_len=16, n_steps=6))
+    results = eng.run_all()
+    assert [r.request_id for r in results] == [0, 1]  # short one drains first
+    assert results[0].steps == 2 and results[0].nfe == 4   # two-stage scheme
+    assert results[1].steps == 6 and results[1].nfe == 12
+    assert eng.stats()["global_steps"] == 6
+
+
+def test_unsupported_budget_rejected_at_submit(params):
+    """Budget overrides a solver can't honor fail fast, not mid-run."""
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    eng = ServingEngine(params, CFG, proc,
+                        SamplerConfig(method="parallel_decoding", n_steps=4),
+                        max_batch=2, seq_len=16)
+    with pytest.raises(ValueError, match="per-request"):
+        eng.submit(Request(request_id=0, seq_len=16, n_steps=8))
+    with pytest.raises(ValueError, match="n_steps"):
+        eng.submit(Request(request_id=1, seq_len=16, n_steps=0))
+    assert eng.queued == 0
+
+
+def test_stream_callback(params):
+    seen = []
+    eng = make_engine(params, n_steps=3, max_batch=2,
+                      stream_cb=lambda rid, step, toks: seen.append(
+                          (rid, step, toks.shape)))
+    eng.submit(Request(request_id=5, seq_len=12))
+    eng.run_all()
+    assert [(rid, step) for rid, step, _ in seen] == [(5, 1), (5, 2), (5, 3)]
+    assert all(shape == (12,) for _, _, shape in seen)
+
+
+def test_run_to_completion_mode(params):
+    """Legacy discipline: admission only once the whole pool has drained."""
+    eng = make_engine(params, n_steps=2, max_batch=2, continuous=False)
+    for i in range(3):
+        eng.submit(Request(request_id=i, seq_len=16, seed=i))
+    eng.step()
+    assert len(eng.active_slots) == 2 and eng.queued == 1
+    results = eng.step()              # pool mid-run: request 2 must NOT join
+    assert [r.request_id for r in results] == [0, 1]
+    results += eng.run_all()
+    assert [r.request_id for r in results] == [0, 1, 2]
+    # request 2 ran alone in the second run -> 4 pool steps, occupancy 3/4...
+    assert eng.stats()["global_steps"] == 4
+    assert eng.stats()["occupancy"] == pytest.approx(0.75)
+
+
+def test_fhs_serves_monolithically(params):
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    eng = ServingEngine(params, CFG, proc, SamplerConfig(method="fhs"),
+                        max_batch=2, seq_len=8)
+    eng.submit(Request(request_id=0, seq_len=8, seed=1))
+    eng.submit(Request(request_id=1, seq_len=8, seed=2))
+    results = eng.run_all()
+    assert len(results) == 2
+    for r in results:
+        assert r.nfe == 8             # fhs: one eval per position
+        assert (r.tokens < CFG.vocab_size).all()
 
 
 def test_ar_generate(params, rng_key):

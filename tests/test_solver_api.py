@@ -18,7 +18,11 @@ from repro.core import (
     SamplerConfig,
     Solver,
     UniformEngine,
+    admit_slot,
+    advance,
+    finalize,
     get_solver,
+    init_state,
     list_solvers,
     loglinear_schedule,
     masked_process,
@@ -27,6 +31,7 @@ from repro.core import (
     sample_dense,
     sample_masked,
     sample_uniform,
+    slot_done,
     uniform_process,
     uniform_rate_matrix,
 )
@@ -164,6 +169,186 @@ def test_wrapper_parity_under_jit(toy, rng_key):
     b = jax.jit(lambda k: sample(k, DenseEngine(toy), cfg, batch=256))(rng_key)
     assert (a == np.asarray(b.tokens)).all()
     assert b.nfe == 8  # SampleResult round-trips through jit with static nfe
+
+
+# --------------------------------------------------------------------------- #
+# Stepwise/monolithic parity: init_state/advance^n/finalize == sample()
+# --------------------------------------------------------------------------- #
+
+DENSE_STEPWISE = ["euler", "tau_leaping", "tweedie", "theta_rk2",
+                  "theta_trapezoidal"]
+MASKED_STEPWISE = DENSE_STEPWISE + ["parallel_decoding"]
+UNIFORM_STEPWISE = ["euler", "tau_leaping", "theta_rk2", "theta_trapezoidal"]
+
+
+def _drive(key, engine, cfg, batch, seq_len=None):
+    state = init_state(key, engine, cfg, batch, seq_len)
+    for _ in range(cfg.n_steps):
+        state = advance(state)
+    return np.asarray(finalize(state))
+
+
+def test_stepwise_covers_every_registered_solver():
+    """Every registered solver is either in a parity list or whole-trajectory."""
+    covered = set(MASKED_STEPWISE) | set(UNIFORM_STEPWISE) | set(DENSE_STEPWISE)
+    for name in list_solvers():
+        solver = get_solver(name)
+        if solver.supports_stepwise:
+            assert name in covered, f"{name} missing from the parity suite"
+        else:
+            assert name == "fhs"
+
+
+@pytest.mark.parametrize("method", DENSE_STEPWISE)
+def test_stepwise_parity_dense(method, toy, rng_key):
+    cfg = SamplerConfig(method=method, n_steps=5, theta=0.4)
+    ref = np.asarray(sample(rng_key, DenseEngine(toy), cfg, batch=256).tokens)
+    got = _drive(rng_key, DenseEngine(toy), cfg, 256)
+    assert (ref == got).all()
+
+
+@pytest.mark.parametrize("method", MASKED_STEPWISE)
+def test_stepwise_parity_masked(method, pi, rng_key):
+    proc = masked_process(V, loglinear_schedule())
+    eng = MaskedEngine(process=proc, score_fn=iid_score_fn(pi))
+    cfg = SamplerConfig(method=method, n_steps=5, theta=0.4)
+    ref = np.asarray(sample(rng_key, eng, cfg, batch=16, seq_len=24).tokens)
+    got = _drive(rng_key, eng, cfg, 16, 24)
+    assert (ref == got).all()
+
+
+@pytest.mark.parametrize("method", UNIFORM_STEPWISE)
+def test_stepwise_parity_uniform(method, pi, rng_key):
+    uproc = uniform_process(V, loglinear_schedule())
+    eng = UniformEngine(process=uproc, score_fn=iid_score_fn(pi))
+    cfg = SamplerConfig(method=method, n_steps=5, theta=0.4)
+    ref = np.asarray(sample(rng_key, eng, cfg, batch=16, seq_len=24).tokens)
+    got = _drive(rng_key, eng, cfg, 16, 24)
+    assert (ref == got).all()
+
+
+def test_stepwise_parity_under_jit(toy, rng_key):
+    cfg = SamplerConfig(method="theta_trapezoidal", n_steps=4, theta=0.5)
+    eng = DenseEngine(toy)
+    ref = np.asarray(sample(rng_key, eng, cfg, batch=128).tokens)
+    adv = jax.jit(advance)
+    state = init_state(rng_key, eng, cfg, 128)
+    for _ in range(cfg.n_steps):
+        state = adv(state)
+    assert (ref == np.asarray(finalize(state))).all()
+
+
+def test_fhs_has_no_stepwise_form(pi, rng_key):
+    proc = masked_process(V, loglinear_schedule())
+    eng = MaskedEngine(process=proc, score_fn=iid_score_fn(pi))
+    with pytest.raises(ValueError, match="stepwise"):
+        init_state(rng_key, eng, SamplerConfig(method="fhs"), 4, 8)
+
+
+# --------------------------------------------------------------------------- #
+# Per-slot mode: independent key streams, mid-flight admission, budgets
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture()
+def masked_engine(pi):
+    return MaskedEngine(process=masked_process(V, loglinear_schedule()),
+                        score_fn=iid_score_fn(pi))
+
+
+def test_per_slot_rows_independent(masked_engine, rng_key):
+    """A slot's tokens depend only on its own key, not its neighbors'."""
+    cfg = SamplerConfig(method="theta_trapezoidal", n_steps=4, theta=0.4)
+
+    def run_with_neighbor(neighbor_key):
+        st = init_state(rng_key, masked_engine, cfg, 2, 12, per_slot=True)
+        st = admit_slot(st, 1, neighbor_key)
+        for _ in range(cfg.n_steps):
+            st = advance(st)
+        return np.asarray(finalize(st))
+
+    a = run_with_neighbor(jax.random.PRNGKey(7))
+    b = run_with_neighbor(jax.random.PRNGKey(8))
+    assert (a[0] == b[0]).all()        # slot 0 untouched by neighbor's key
+    assert (a[1] != b[1]).any()        # different keys -> different tokens
+
+
+def test_per_slot_admission_time_invariance(masked_engine, rng_key):
+    """Tokens are identical whether a key's slot starts at step 0 or mid-run."""
+    cfg = SamplerConfig(method="theta_rk2", n_steps=4, theta=0.6)
+    k_req = jax.random.PRNGKey(42)
+
+    st = init_state(rng_key, masked_engine, cfg, 3, 10, per_slot=True)
+    st = admit_slot(st, 0, k_req)
+    for _ in range(cfg.n_steps):
+        st = advance(st)
+    ref = np.asarray(finalize(st))[0]
+
+    st = init_state(rng_key, masked_engine, cfg, 3, 10, per_slot=True)
+    st = advance(st)
+    st = advance(st)                   # neighbors are now mid-trajectory
+    st = admit_slot(st, 2, k_req)      # fresh slot starts at t = t_max
+    while not np.asarray(slot_done(st)).all():
+        st = advance(st)
+    late = np.asarray(finalize(st))[2]
+    assert (ref == late).all()
+
+
+def test_lockstep_over_advance_freezes(toy, rng_key):
+    """Driving the lockstep loop past n_steps must not re-sample tokens."""
+    cfg = SamplerConfig(method="tweedie", n_steps=3)
+    st = init_state(rng_key, DenseEngine(toy), cfg, 64)
+    for _ in range(cfg.n_steps):
+        st = advance(st)
+    x_done = np.asarray(st.x)
+    st2 = advance(st)
+    assert (np.asarray(st2.x) == x_done).all()
+    assert int(st2.step) == cfg.n_steps
+
+
+def test_per_slot_finished_rows_freeze(masked_engine, rng_key):
+    cfg = SamplerConfig(method="tau_leaping", n_steps=3)
+    st = init_state(rng_key, masked_engine, cfg, 2, 8, per_slot=True)
+    for _ in range(cfg.n_steps):
+        st = advance(st)
+    x_done = np.asarray(st.x)
+    st2 = advance(advance(st))         # extra advances must be no-ops
+    assert (np.asarray(st2.x) == x_done).all()
+    assert np.asarray(slot_done(st2)).all()
+
+
+def test_per_slot_step_budgets(masked_engine, rng_key):
+    """Slots can carry different n_steps; each walks its own grid to t_stop."""
+    cfg = SamplerConfig(method="tau_leaping", n_steps=4)
+    st = init_state(rng_key, masked_engine, cfg, 2, 8, per_slot=True)
+    st = admit_slot(st, 0, jax.random.PRNGKey(1), n_steps=2)
+    st = admit_slot(st, 1, jax.random.PRNGKey(2), n_steps=6)
+    st = advance(advance(st))
+    assert np.asarray(slot_done(st)).tolist() == [True, False]
+    for _ in range(4):
+        st = advance(st)
+    assert np.asarray(slot_done(st)).all()
+    # both slots end at t_stop regardless of budget
+    np.testing.assert_allclose(np.asarray(st.t), cfg.t_stop, atol=1e-6)
+    toks = np.asarray(finalize(st))
+    assert ((toks >= 0) & (toks < V)).all()
+
+
+def test_per_slot_budget_rejected_with_per_step_aux(toy, rng_key):
+    """Dense tweedie precomputes kernels on the config grid: no overrides."""
+    cfg = SamplerConfig(method="tweedie", n_steps=4)
+    st = init_state(rng_key, DenseEngine(toy), cfg, 2, per_slot=True)
+    with pytest.raises(ValueError, match="per-slot n_steps"):
+        admit_slot(st, 0, jax.random.PRNGKey(0), n_steps=2)
+
+
+def test_per_slot_budget_rejected_for_n_steps_coupled_solver(masked_engine,
+                                                             rng_key):
+    """MaskGIT's schedule is a function of i/config.n_steps: no overrides."""
+    cfg = SamplerConfig(method="parallel_decoding", n_steps=4)
+    st = init_state(rng_key, masked_engine, cfg, 2, 8, per_slot=True)
+    with pytest.raises(ValueError, match="per-slot n_steps"):
+        admit_slot(st, 0, jax.random.PRNGKey(0), n_steps=8)
 
 
 # --------------------------------------------------------------------------- #
