@@ -2,11 +2,14 @@
 
 This container executes kernels in interpret mode (CPU), so wall-times of the
 XLA-fused oracle path are reported as the CPU-executable proxy, together with
-the bytes-touched model that motivates the fusion (HBM passes saved on TPU).
+the bytes-touched model that motivates the fusion (HBM passes saved on TPU)
+and a scheduler tick-overhead microbench (``advance`` x K dispatches vs one
+``advance_many(K)`` launch — the serving engine's ``scheduler_stride``).
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
@@ -17,37 +20,43 @@ from repro.kernels import ref
 from repro.kernels.fused_jump import fused_jump
 
 
-def hbm_passes_model(t: int, v: int, dtype_bytes: int = 2) -> str:
-    """Bytes over HBM: unfused (~6 passes over [T,V]) vs fused (1 read/operand)."""
+def hbm_passes_model(t: int, v: int, dtype_bytes: int = 2,
+                     operands: int = 2) -> str:
+    """Bytes over HBM: unfused (~6 passes over [T,V] plus a materialized
+    Gumbel write+read) vs the v2 fused kernel (1 read per intensity operand;
+    noise is generated in VMEM, so the old third [T,V] operand is gone)."""
     tv = t * v * dtype_bytes
-    unfused = 6 * tv  # rates, clip, sum, log, +gumbel, argmax re-read
-    fused = 3 * tv  # mu_a, mu_b, gumbel single read each
-    return f"unfused_bytes={unfused} fused_bytes={fused} saving={unfused/fused:.1f}x"
+    unfused = 8 * tv  # rates, clip, sum, log, +gumbel, argmax re-read
+    #                   + gumbel materialize (1 write + 1 read)
+    fused = operands * tv  # mu_a (+ mu_b) single read each, RNG in-kernel
+    return (f"unfused_bytes={unfused} fused_bytes={fused} "
+            f"saving={unfused / fused:.1f}x")
 
 
 def run(shapes=((1024, 4096), (4096, 32768)), quick: bool = True) -> list[str]:
     rows = []
     key = jax.random.PRNGKey(0)
     for t, v in shapes[: 1 if quick else None]:
-        ks = jax.random.split(key, 5)
+        ks = jax.random.split(key, 3)
         mu_a = jax.nn.softmax(jax.random.normal(ks[0], (t, v)), -1)
         mu_b = jax.nn.softmax(jax.random.normal(ks[1], (t, v)), -1)
-        g = jax.random.gumbel(ks[2], (t, v))
-        u = jax.random.uniform(ks[3], (t,))
+        seed = jax.random.bits(ks[2], (t, 2), jnp.uint32)
         act = jnp.ones((t,), bool)
 
-        fn = jax.jit(lambda *a: ref.fused_jump_ref(a[0], a[1], 2.667, -1.667,
-                                                   0.05, a[2], a[3], a[4]))
-        _, sec = timed(fn, mu_a, mu_b, g, u, act, repeats=3)
+        fn = jax.jit(lambda *a: ref.fused_jump_rng_ref(a[0], a[1], 2.667,
+                                                       -1.667, 0.05, a[2], a[3]))
+        _, sec = timed(fn, mu_a, mu_b, seed, act, repeats=3)
         rows.append(csv_row(f"fused_jump/oracle_xla/T{t}xV{v}", sec * 1e6,
                             hbm_passes_model(t, v)))
         if t <= 1024:  # interpret mode is slow; validate-and-time small only
             _, sec_k = timed(
-                lambda: fused_jump(mu_a, mu_b, g, u, act, coeff_a=2.667,
+                lambda: fused_jump(mu_a, mu_b, seed, act, coeff_a=2.667,
                                    coeff_b=-1.667, dt=0.05, interpret=True),
                 repeats=1)
             rows.append(csv_row(f"fused_jump/pallas_interpret/T{t}xV{v}",
                                 sec_k * 1e6, "correctness_path_only"))
+
+    rows += tick_overhead(k=8)
 
     # flash attention oracle timing
     b, h, s, d = 1, 8, 1024, 64
@@ -59,6 +68,74 @@ def run(shapes=((1024, 4096), (4096, 32768)), quick: bool = True) -> list[str]:
     rows.append(csv_row(f"flash_attention/oracle_xla/B{b}H{h}S{s}D{d}",
                         sec * 1e6, f"flops={flops:.2e}"))
     return rows
+
+
+def tick_overhead(k: int = 8, batch: int = 8, seq_len: int = 32,
+                  vocab: int = 64, repeats: int = 10) -> list[str]:
+    """Scheduler tick cost: K jitted ``advance`` dispatches vs ONE
+    ``advance_many(K)`` launch, same math (bit-identical states).
+
+    Uses an analytic iid score so the timings isolate dispatch + host-sync
+    overhead — the quantity ``scheduler_stride`` amortizes — rather than
+    score-network compute.
+    """
+    import numpy as np
+
+    from repro.core import (
+        MaskedEngine,
+        SamplerConfig,
+        advance,
+        advance_many,
+        init_state,
+        loglinear_schedule,
+        masked_process,
+    )
+
+    pi = jnp.asarray(np.random.default_rng(0).dirichlet(np.ones(vocab)),
+                     jnp.float32)
+    proc = masked_process(vocab, loglinear_schedule())
+    engine = MaskedEngine(
+        process=proc,
+        score_fn=lambda toks, t: jnp.broadcast_to(pi, toks.shape + (vocab,)))
+    cfg = SamplerConfig(method="theta_trapezoidal",
+                        n_steps=k * (repeats + 1), theta=0.4)
+    adv = jax.jit(advance)
+
+    def fresh():
+        return init_state(jax.random.PRNGKey(0), engine, cfg, batch, seq_len,
+                          per_slot=True)
+
+    # Warm both jit caches outside the timed region.
+    st = fresh()
+    for _ in range(k):
+        st = adv(st)
+    jax.block_until_ready(st.x)
+    st = advance_many(fresh(), k)
+    jax.block_until_ready(st.x)
+
+    # advance_many donates its input, so both loops thread the state through
+    # (no timed() here: its repeated fn(*args) would reuse a donated buffer).
+    st = fresh()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for _ in range(k):
+            st = adv(st)
+            np.asarray(st.step)  # the per-step host sync PR 2's loop paid
+    sec_seq = (time.perf_counter() - t0) / repeats
+
+    st = fresh()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        st = advance_many(st, k)
+        np.asarray(st.step)
+    sec_many = (time.perf_counter() - t0) / repeats
+
+    return [
+        csv_row(f"tick_overhead/advance_x{k}", sec_seq * 1e6,
+                f"{k}_dispatches_{k}_syncs"),
+        csv_row(f"tick_overhead/advance_many_{k}", sec_many * 1e6,
+                f"1_dispatch_1_sync speedup={sec_seq / sec_many:.2f}x"),
+    ]
 
 
 def main() -> None:

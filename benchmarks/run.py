@@ -1,7 +1,13 @@
 """Benchmark runner — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Default is the quick profile
-(CPU-minutes); ``--full`` reproduces the EXPERIMENTS.md-scale numbers.
+Prints ``name,us_per_call,derived`` CSV rows and mirrors them into a
+machine-readable ``BENCH_solvers.json`` (section -> row dicts) so the perf
+trajectory is tracked across PRs: the JSON preserves a ``history`` block of
+previously recorded numbers (seeded with the before/after of the v2 fused
+kernel + strided executor change), and CI uploads the file as an artifact.
+
+Default is the quick profile (CPU-minutes); ``--full`` reproduces the
+EXPERIMENTS.md-scale numbers.
 
   toy_convergence    -> Fig. 2 (KL vs steps, fitted order)
   theta_sweep        -> Fig. 4/5 (quality vs theta)
@@ -10,14 +16,54 @@ Prints ``name,us_per_call,derived`` CSV rows.  Default is the quick profile
   image_nfe          -> Fig. 3 (Frechet distance vs NFE, incl. parallel decoding)
   kernels            -> kernel microbenches + bytes-touched model
   roofline           -> §Roofline table from the dry-run artifact
-  serve_throughput   -> continuous batching vs run-to-completion requests/sec
+  serve_throughput   -> continuous batching / strided executor requests/sec
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+
+def parse_row(row: str) -> dict:
+    """'name,us_per_call,derived' -> row dict (derived may contain commas)."""
+    name, us, derived = row.split(",", 2)
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    return {"name": name, "us_per_call": us_val, "derived": derived}
+
+
+def write_json(path: str, sections: dict, failures: int) -> None:
+    """Mirror the CSV rows into BENCH_solvers.json, preserving history.
+
+    Sections not re-run (``--only``) keep their previous rows, so partial
+    runs never erase the rest of the trajectory file.
+    """
+    payload = {
+        "schema": "bench_solvers/v1",
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "failures": failures,
+        "sections": {},
+        "history": {},
+    }
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            payload["history"] = prev.get("history", {})
+            payload["sections"] = prev.get("sections", {})
+        except (json.JSONDecodeError, OSError):
+            pass
+    payload["sections"].update(
+        {name: [parse_row(r) for r in rows] for name, rows in sections.items()})
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def main() -> None:
@@ -25,6 +71,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of section names")
+    ap.add_argument("--json-out",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "BENCH_solvers.json"),
+                    help="machine-readable mirror of the CSV rows "
+                         "(default: benchmarks/BENCH_solvers.json, the "
+                         "committed perf-trajectory file; '' disables)")
     args = ap.parse_args()
 
     from . import (  # noqa: PLC0415
@@ -69,16 +121,25 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    collected: dict[str, list[str]] = {}
     for name, fn in sections.items():
         t0 = time.time()
         try:
+            rows = []
             for row in fn():
+                rows.append(row)
                 print(row, flush=True)
-            print(f"{name}/TOTAL,{(time.time()-t0)*1e6:.1f},ok", flush=True)
+            rows.append(f"{name}/TOTAL,{(time.time()-t0)*1e6:.1f},ok")
+            print(rows[-1], flush=True)
         except Exception:  # noqa: BLE001
             failures += 1
-            print(f"{name}/TOTAL,0.0,FAILED", flush=True)
+            rows = [f"{name}/TOTAL,0.0,FAILED"]
+            print(rows[-1], flush=True)
             traceback.print_exc(file=sys.stderr)
+        collected[name] = rows
+    if args.json_out:
+        write_json(args.json_out, collected, failures)
+        print(f"wrote {args.json_out}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

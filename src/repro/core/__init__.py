@@ -29,6 +29,7 @@ from .solvers import (
     UniformEngine,
     admit_slot,
     advance,
+    advance_many,
     budget_supported,
     dense_step,
     fhs_sample,
@@ -61,8 +62,8 @@ __all__ = [
     "Solver", "register_solver", "get_solver", "list_solvers",
     "sample", "SampleResult",
     # stepwise sampling API
-    "SolverState", "init_state", "advance", "finalize", "admit_slot",
-    "slot_done", "budget_supported",
+    "SolverState", "init_state", "advance", "advance_many", "finalize",
+    "admit_slot", "slot_done", "budget_supported",
     # legacy solver API (kept: bit-identical wrappers over the new entrypoint)
     "METHODS", "TWO_STAGE", "SamplerConfig", "dense_step", "fhs_sample",
     "masked_step", "rk2_coefficients", "sample_dense", "sample_masked",

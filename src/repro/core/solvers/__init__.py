@@ -7,8 +7,9 @@ Layout:
   and the theta-scheme coefficient formulas;
 * ``base``      — the ``Solver`` base class (step loop, tracing, NFE);
 * ``state``     — the stepwise API: ``SolverState`` with ``init_state`` /
-  ``advance`` / ``finalize`` (plus the per-slot pool ops ``admit_slot`` /
-  ``slot_done`` that the continuous-batching ServingEngine builds on);
+  ``advance`` / ``advance_many`` / ``finalize`` (plus the per-slot pool ops
+  ``admit_slot`` / ``slot_done`` that the continuous-batching ServingEngine
+  builds on);
 * ``rng``       — PRNG helpers accepting a single key or a per-slot key batch;
 * ``engines``   — the ``Engine`` protocol and the ``DenseEngine`` /
   ``MaskedEngine`` / ``UniformEngine`` state-space implementations;
@@ -50,6 +51,7 @@ from .state import (
     SolverState,
     admit_slot,
     advance,
+    advance_many,
     budget_supported,
     finalize,
     init_state,
@@ -87,8 +89,8 @@ __all__ = [
     # base + engines
     "Solver", "Engine", "DenseEngine", "MaskedEngine", "UniformEngine",
     # stepwise API
-    "SolverState", "init_state", "advance", "finalize", "admit_slot",
-    "slot_done", "budget_supported",
+    "SolverState", "init_state", "advance", "advance_many", "finalize",
+    "admit_slot", "slot_done", "budget_supported",
     # solver classes
     "EulerSolver", "TauLeapingSolver", "TweedieSolver", "ThetaRK2Solver",
     "ThetaTrapezoidalSolver", "ParallelDecodingSolver", "FHSSolver",

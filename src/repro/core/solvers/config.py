@@ -30,9 +30,10 @@ class SamplerConfig:
     grid: str = "uniform"
     # parallel decoding only:
     pd_temperature: float = 1.0
-    # Route two-intensity jump updates through the fused Pallas kernel
-    # (repro.kernels.fused_jump) on engines that support it.  Replaces the old
-    # module-global toggled by the (deprecated) set_fused_jump().
+    # Route exponential jump updates through the fused Pallas kernel
+    # (repro.kernels.fused_jump: in-kernel RNG, runtime dt) on the masked and
+    # uniform engines.  Replaces the old module-global toggled by the
+    # (deprecated) set_fused_jump().
     fused: bool = False
 
     def __post_init__(self):

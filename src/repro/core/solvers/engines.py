@@ -16,7 +16,12 @@ An :class:`Engine` supplies the primitives every scheme is written against:
   ``linear=True`` selects the linearized single-jump Euler kernel.  Passing
   ``rates_b``/``coeff_a``/``coeff_b`` applies the clipped combination
   ``(coeff_a * rates + coeff_b * rates_b)_+`` — the theta-scheme stage-2 form —
-  which the masked engine can route through the fused Pallas kernel;
+  which the masked AND uniform engines can route through the fused Pallas
+  kernel (noise drawn in-kernel; dt a runtime per-row operand).  ``t`` is the
+  time the primary ``rates`` were evaluated at; on the masked single-rate path
+  it lets the engine use the identity ``sum_y rates = unmask_rate(t)`` (the
+  score is a normalized distribution) so the thinning intensity costs no
+  [B, L, V] vocab reduction;
 * ``finalize(x, t_last)`` — post-loop cleanup (masked: greedy-fill stragglers).
 
 Engine-specific exact steps (``tweedie_*``) live on the engines that admit
@@ -37,7 +42,7 @@ from ..schedules import grid_fraction as _grid_fraction
 from ..schedules import time_grid as _schedule_time_grid
 from .config import ScoreFn, fused_jump_default
 from .rng import (
-    is_batched_key,
+    rbits,
     rcategorical,
     rgumbel,
     rpoisson,
@@ -73,7 +78,8 @@ class Engine(Protocol):
 
     def apply_jump(self, key: jax.Array, x: Array, rates: Array, dt: Array, *,
                    linear: bool = False, rates_b: Optional[Array] = None,
-                   coeff_a: float = 1.0, coeff_b: float = 0.0) -> Array: ...
+                   coeff_a: float = 1.0, coeff_b: float = 0.0,
+                   t: Optional[Array] = None) -> Array: ...
 
     def finalize(self, x: Array, t_last: Array) -> Array: ...
 
@@ -145,7 +151,7 @@ class DenseEngine:
         return jnp.where(valid, mu, 0.0)
 
     def apply_jump(self, key, x, rates, dt, *, linear=False, rates_b=None,
-                   coeff_a=1.0, coeff_b=0.0):
+                   coeff_a=1.0, coeff_b=0.0, t=None):
         s = self.n_states
         rates = _combine(rates, rates_b, coeff_a, coeff_b)
         dt = _match_cols(dt, rates.ndim)  # scalar, or [B] per-slot steps
@@ -201,7 +207,7 @@ def _categorical_from_rates(key: jax.Array, rates: Array) -> Array:
     return jnp.argmax(jnp.log(jnp.maximum(rates, 1e-30)) + g, axis=-1)
 
 
-def _unmask_update_fused(
+def _fused_jump_apply(
     key: jax.Array,
     x: Array,
     mu_a: Array,
@@ -209,30 +215,30 @@ def _unmask_update_fused(
     coeff_a: float,
     coeff_b: float,
     dt: Array,
-    mask_id: int,
+    active: Array,
 ) -> Array:
     """Fused-kernel path for rates = (coeff_a mu_a + coeff_b mu_b)_+ updates.
 
-    dt is traced (a time-grid element), and the kernel's dt is static — so dt is
-    folded into the intensities: rates*dt = ca*(mu_a*dt) + cb*(mu_b*dt).
+    Zero [T, V] materialization: the intensities go to the kernel unscaled
+    (dt is a runtime per-row operand, so no ``mu * dt`` copies) and the
+    Gumbel/uniform noise is drawn in-kernel from per-row counter-RNG seeds
+    derived from ``key`` — with a batched (per-slot) key, each slot's rows
+    seed from that slot's key only, preserving admission-time invariance.
+    Shared by the masked engine (active = still-masked positions) and the
+    uniform engine (every position may jump).
     """
     from repro.kernels import ops  # local import: kernels are optional at core
 
     b, l, v = mu_a.shape
-    k_g, k_u = split_key(key)
-    if is_batched_key(key):
-        gumbel = rgumbel(k_g, (b, l, v)).reshape(b * l, v)
-        u = runiform(k_u, (b, l)).reshape(b * l)
-    else:
-        gumbel = jax.random.gumbel(k_g, (b * l, v))
-        u = jax.random.uniform(k_u, (b * l,))
-    dt = _match_cols(dt, mu_a.ndim)
-    active = (x == mask_id).reshape(-1)
+    # Two seed words per row: a single uint32 id would birthday-collide at
+    # B*L ~ 2^18 rows, handing distinct positions identical noise streams.
+    seed = rbits(key, (b, l, 2)).reshape(b * l, 2)
+    dt_row = jnp.broadcast_to(_match_cols(dt, 2), (b, l)).reshape(b * l)
     token, jump = ops.fused_jump_update(
-        (mu_a * dt).reshape(b * l, v),
-        None if mu_b is None else (mu_b * dt).reshape(b * l, v),
-        gumbel, u, active,
-        coeff_a=coeff_a, coeff_b=coeff_b, dt=1.0,
+        mu_a.reshape(b * l, v),
+        None if mu_b is None else mu_b.reshape(b * l, v),
+        seed, active.reshape(-1),
+        coeff_a=coeff_a, coeff_b=coeff_b, dt=dt_row,
     )
     return jnp.where(jump.reshape(b, l), token.reshape(b, l), x).astype(x.dtype)
 
@@ -244,6 +250,7 @@ def _unmask_update(
     dt: Array,
     mask_id: int,
     exponential: bool = True,
+    lam: Optional[Array] = None,
 ) -> Array:
     """Shared jump applicator for masked diffusion.
 
@@ -251,9 +258,12 @@ def _unmask_update(
     a masked position unmasks with prob 1 - exp(-sum_y rates dt) (or the
     linearized `sum_y rates * dt` when exponential=False, i.e. the Euler kernel),
     revealing y ~ Categorical(rates).  dt may be scalar or [B] per-slot.
+    ``lam`` overrides the vocab reduction with a precomputed/analytic total
+    intensity (only consulted at masked positions).
     """
     k_jump, k_tok = split_key(key)
-    lam = rates.sum(-1)
+    if lam is None:
+        lam = rates.sum(-1)
     dt = _match_cols(dt, lam.ndim)
     p_jump = 1.0 - jnp.exp(-lam * dt) if exponential else jnp.clip(lam * dt, 0.0, 1.0)
     is_masked = x == mask_id
@@ -327,13 +337,23 @@ class MaskedEngine:
         return self.process.backward_rates_masked(probs, t) * is_masked
 
     def apply_jump(self, key, x, rates, dt, *, linear=False, rates_b=None,
-                   coeff_a=1.0, coeff_b=0.0):
+                   coeff_a=1.0, coeff_b=0.0, t=None):
         if self.fused and not linear:
-            return _unmask_update_fused(key, x, rates, rates_b, coeff_a, coeff_b,
-                                        dt, self.mask_id)
+            return _fused_jump_apply(key, x, rates, rates_b, coeff_a, coeff_b,
+                                     dt, active=(x == self.mask_id))
+        lam = None
+        if rates_b is None and t is not None:
+            # Masked single-rate identity: rates = unmask_rate(t) * probs at
+            # masked rows with sum_y probs = 1, so the total intensity is
+            # analytic — no [B, L, V] reduction.  (Unmasked rows carry zero
+            # rates but their lam is never consulted: the jump draw is gated
+            # on x == mask_id.)
+            lam = jnp.broadcast_to(
+                _match_cols(self.process.schedule.unmask_rate(t), x.ndim),
+                x.shape)
         rates = _combine(rates, rates_b, coeff_a, coeff_b)
         return _unmask_update(key, x, rates, dt, self.mask_id,
-                              exponential=not linear)
+                              exponential=not linear, lam=lam)
 
     def finalize(self, x, t_last):
         # Early stopping at t_stop can leave rare masks; greedy-fill them
@@ -369,11 +389,23 @@ class UniformEngine:
     """X = [vocab]^d uniform-state diffusion driven by a neural ratio network.
 
     score_fn returns ratio estimates s_t(x)[..., y] ~ p_t(x^{l->y}) / p_t(x);
-    the current token's own entry is zeroed (no self-jump).
+    the current token's own entry is zeroed (no self-jump).  With
+    ``fused=True`` exponential jump updates route through the same fused
+    Pallas kernel as the masked engine — the jump law (clipped combination,
+    Bernoulli thinning, Gumbel categorical) is identical, with every position
+    active instead of only still-masked ones.
     """
 
     process: DiffusionProcess
     score_fn: ScoreFn
+    fused: bool = False
+
+    def configure(self, config) -> "UniformEngine":
+        """Fold the config's (or the deprecated global) fused flag into the engine."""
+        fused = self.fused or config.fused or fused_jump_default()
+        if fused == self.fused:
+            return self
+        return dataclasses.replace(self, fused=fused)
 
     def time_grid(self, config) -> Array:
         return _schedule_time_grid(config.n_steps, self.process.schedule.t_max,
@@ -391,7 +423,10 @@ class UniformEngine:
         return r * (1.0 - self_hot)
 
     def apply_jump(self, key, x, rates, dt, *, linear=False, rates_b=None,
-                   coeff_a=1.0, coeff_b=0.0):
+                   coeff_a=1.0, coeff_b=0.0, t=None):
+        if self.fused and not linear:
+            return _fused_jump_apply(key, x, rates, rates_b, coeff_a, coeff_b,
+                                     dt, active=jnp.ones(x.shape, bool))
         rates = _combine(rates, rates_b, coeff_a, coeff_b)
         return _uniform_update(key, x, rates, dt, exponential=not linear)
 

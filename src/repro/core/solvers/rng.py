@@ -61,6 +61,17 @@ def rgumbel(key: jax.Array, shape: tuple) -> Array:
     return _per_slot(jax.random.gumbel, key, shape)
 
 
+def rbits(key: jax.Array, shape: tuple) -> Array:
+    """Raw uint32 bits; feeds the fused kernel's per-row counter-RNG seeds.
+
+    With a batched key, row b's bits come from key[b] only, so a serving
+    slot's kernel-side noise streams stay independent of its neighbors.
+    """
+    if not is_batched_key(key):
+        return jax.random.bits(key, shape, jnp.uint32)
+    return _per_slot(lambda k, s: jax.random.bits(k, s, jnp.uint32), key, shape)
+
+
 def rpoisson(key: jax.Array, lam: Array) -> Array:
     if not is_batched_key(key):
         return jax.random.poisson(key, lam)

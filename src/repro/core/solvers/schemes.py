@@ -37,7 +37,7 @@ class EulerSolver(Solver):
 
     def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
         mu = engine.rates(x, t0)
-        return engine.apply_jump(key, x, mu, t0 - t1, linear=True)
+        return engine.apply_jump(key, x, mu, t0 - t1, linear=True, t=t0)
 
 
 @register_solver("tau_leaping")
@@ -46,7 +46,7 @@ class TauLeapingSolver(Solver):
 
     def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
         mu = engine.rates(x, t0)
-        return engine.apply_jump(key, x, mu, t0 - t1)
+        return engine.apply_jump(key, x, mu, t0 - t1, t=t0)
 
 
 @register_solver("tweedie")
@@ -75,7 +75,7 @@ class _TwoStageSolver(Solver):
         dt = t0 - t1
         rho = theta_section(t0, t1, config.theta)
         mu_n = engine.rates(x, t0)
-        x_star = engine.apply_jump(k1, x, mu_n, config.theta * dt)
+        x_star = engine.apply_jump(k1, x, mu_n, config.theta * dt, t=t0)
         # mu*(nu, y*): engines zero intensities at states that admit no further
         # jumps in the intermediate state (e.g. positions already unmasked).
         mu_star = engine.rates(x_star, rho)

@@ -41,6 +41,7 @@ is freed as soon as no state references it.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import weakref
 from typing import Any, Optional
 
@@ -185,6 +186,11 @@ def init_state(
     aux = solver.prepare(engine, config)
     if not per_slot:
         x0, k_loop = engine.prior(key, batch, seq_len)
+        if k_loop is key:
+            # Engines that consume no prior entropy (masked) hand the caller's
+            # key back unchanged; copy so advance_many's buffer donation can
+            # never delete an array the caller still holds.
+            k_loop = jnp.copy(k_loop)
         return SolverState(x=x0, step=jnp.int32(0), t=times[0], rng=k_loop,
                            times=times, target=None, aux=aux, ctx=ctx,
                            per_slot=False)
@@ -257,6 +263,31 @@ def advance(state: SolverState) -> SolverState:
         step=jnp.where(active, i + 1, i),
         t=jnp.where(active, t1, state.t),
     )
+
+
+@functools.partial(jax.jit, static_argnames="k", donate_argnums=0)
+def _advance_scan(state: SolverState, k: int) -> SolverState:
+    state, _ = jax.lax.scan(lambda s, _: (advance(s), None), state, None,
+                            length=k)
+    return state
+
+
+def advance_many(state: SolverState, k: int) -> SolverState:
+    """``k`` solver steps as ONE device launch — bit-identical to ``advance``
+    called ``k`` times, without ``k`` host round-trips.
+
+    The whole stride runs as a jitted ``lax.scan`` over :func:`advance` with
+    the state's buffers donated, so a serving tick of ``k`` steps costs one
+    dispatch and zero intermediate host syncs (the continuous-batching
+    engine's ``scheduler_stride`` knob sits directly on top of this).
+
+    Because the input state's buffers are donated, treat the call as
+    consuming: keep using the *returned* state, never the argument.  ``k``
+    is static — each distinct stride compiles once per run context.
+    """
+    if k < 1:
+        raise ValueError(f"advance_many requires k >= 1, got {k}")
+    return _advance_scan(state, k)
 
 
 def finalize(state: SolverState) -> Array:

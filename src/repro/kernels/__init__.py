@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the perf-critical compute hot-spots.
 
 - fused_jump: the paper-specific sampler stage (extrapolated rate construction
-  + Poisson thinning + Gumbel categorical, fused over vocab tiles in VMEM);
+  + Poisson thinning + Gumbel categorical, fused over vocab tiles in VMEM,
+  noise drawn in-kernel from per-row counter-RNG streams — see prng.py);
 - flash_attention: blockwise online-softmax attention for the backbones.
 
 Each kernel has a jit'd wrapper in ops.py and a pure-jnp oracle in ref.py.

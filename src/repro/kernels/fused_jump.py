@@ -1,4 +1,4 @@
-"""Fused theta-jump Pallas TPU kernel — the paper's sampler hot-spot.
+"""Fused theta-jump Pallas TPU kernel — the paper's sampler hot-spot (v2).
 
 Every solver stage maps a (tokens x vocab) intensity tensor to per-token jump
 decisions.  Naively that materializes several HBM-resident [T, V] intermediates
@@ -12,6 +12,19 @@ fusing Alg. 2's stage-2 construction
 with the Poisson-thinning Bernoulli and the Gumbel categorical draw — a single
 pass over HBM instead of ~6.
 
+v2 over the original kernel:
+
+* **in-kernel RNG** — the ``[T, V]`` Gumbel operand is gone.  Variates are
+  generated inside the kernel from a per-row uint32 ``seed`` operand via the
+  counter hash in ``prng.py`` (one whole HBM write + read of a [T, V] tensor
+  deleted; samples are tiling-invariant and bit-reproducible by the jnp
+  oracle ``ref.fused_jump_rng_ref``);
+* **runtime scalars** — ``coeff_a``/``coeff_b`` arrive as an SMEM
+  scalar-prefetch operand and ``dt`` as a per-row VMEM vector, so none of them
+  is baked into the executable: the jit cache holds ONE entry across solver
+  steps with varying dt (the old static_argnames version recompiled per float
+  value), and per-slot serving can hand every row its own dt.
+
 Grid: (T_tiles, V_tiles), V innermost so accumulators live in VMEM scratch.
 Block shapes are (block_t, block_v) with block_v a multiple of 128 (lane width)
 and block_t a multiple of 8 (sublane), as the MXU/VPU tiling requires.
@@ -19,23 +32,24 @@ and block_t a multiple of 8 (sublane), as the MXU/VPU tiling requires.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .prng import col_gumbel, row_uniform
+
 Array = jnp.ndarray
 
 NEG_INF = -1e30
 
 
-def _kernel(mu_a_ref, mu_b_ref, gumbel_ref, u_ref, active_ref,
-            token_ref, jump_ref,
+def _kernel(scal_ref, mu_a_ref, mu_b_ref, seed_lo_ref, seed_hi_ref, dt_ref,
+            active_ref, token_ref, jump_ref,
             lam_acc, best_acc, idx_acc,
-            *, coeff_a: float, coeff_b: float, dt: float, block_v: int,
-            n_v_blocks: int, vocab: int):
+            *, block_v: int, n_v_blocks: int, vocab: int):
     vi = pl.program_id(1)
 
     @pl.when(vi == 0)
@@ -44,9 +58,9 @@ def _kernel(mu_a_ref, mu_b_ref, gumbel_ref, u_ref, active_ref,
         best_acc[...] = jnp.full_like(best_acc, NEG_INF)
         idx_acc[...] = jnp.zeros_like(idx_acc)
 
-    mu = coeff_a * mu_a_ref[...].astype(jnp.float32)
+    mu = scal_ref[0] * mu_a_ref[...].astype(jnp.float32)
     if mu_b_ref is not None:
-        mu = mu + coeff_b * mu_b_ref[...].astype(jnp.float32)
+        mu = mu + scal_ref[1] * mu_b_ref[...].astype(jnp.float32)
     rates = jnp.maximum(mu, 0.0)
 
     # Mask out-of-range vocab columns in the (padded) final block.
@@ -56,10 +70,12 @@ def _kernel(mu_a_ref, mu_b_ref, gumbel_ref, u_ref, active_ref,
 
     lam_acc[...] += rates.sum(axis=1)
 
+    # Per-element Gumbel from (row seed, global column) — no HBM operand, and
+    # the draw is independent of the (block_t, block_v) tiling.
+    gumbel = col_gumbel(seed_lo_ref[...][:, None], seed_hi_ref[...][:, None],
+                        col)
     score = jnp.where(
-        valid,
-        jnp.log(jnp.maximum(rates, 1e-30)) + gumbel_ref[...].astype(jnp.float32),
-        NEG_INF)
+        valid, jnp.log(jnp.maximum(rates, 1e-30)) + gumbel, NEG_INF)
     blk_best = score.max(axis=1)
     # col = vi*block_v + iota, so the argmax column maps directly.
     blk_idx = (vi * block_v + score.argmax(axis=1)).astype(jnp.int32)
@@ -69,31 +85,40 @@ def _kernel(mu_a_ref, mu_b_ref, gumbel_ref, u_ref, active_ref,
 
     @pl.when(vi == n_v_blocks - 1)
     def _finalize():
-        lam = lam_acc[...]
-        p_jump = 1.0 - jnp.exp(-lam * dt)
+        u = row_uniform(seed_lo_ref[...], seed_hi_ref[...])
+        p_jump = 1.0 - jnp.exp(-lam_acc[...] * dt_ref[...])
         token_ref[...] = idx_acc[...].astype(jnp.int32)
-        jump_ref[...] = (active_ref[...] & (u_ref[...] < p_jump))
+        jump_ref[...] = (active_ref[...] & (u < p_jump))
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("coeff_a", "coeff_b", "dt", "block_t", "block_v",
-                     "interpret"))
+def _kernel_single(scal_ref, mu_a_ref, seed_lo_ref, seed_hi_ref, dt_ref,
+                   active_ref, token_ref, jump_ref, lam_acc, best_acc,
+                   idx_acc, **kw):
+    _kernel(scal_ref, mu_a_ref, None, seed_lo_ref, seed_hi_ref, dt_ref,
+            active_ref, token_ref, jump_ref, lam_acc, best_acc, idx_acc, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
 def fused_jump(
     mu_a: Array,  # [T, V]
     mu_b: Optional[Array],  # [T, V] or None
-    gumbel: Array,  # [T, V]
-    u: Array,  # [T]
+    seed: Array,  # [T, 2] uint32 per-row RNG stream ids (two words)
     active: Array,  # [T] bool
     *,
-    coeff_a: float = 1.0,
-    coeff_b: float = 0.0,
-    dt: float = 1.0,
+    coeff_a: Union[Array, float] = 1.0,
+    coeff_b: Union[Array, float] = 0.0,
+    dt: Union[Array, float] = 1.0,  # scalar or [T] per-row step sizes
     block_t: int = 256,
     block_v: int = 512,
     interpret: bool = False,
 ) -> tuple[Array, Array]:
-    """Pallas-fused jump update. Returns (token [T] int32, jump [T] bool)."""
+    """Pallas-fused jump update. Returns (token [T] int32, jump [T] bool).
+
+    ``coeff_a``/``coeff_b``/``dt`` are traced runtime operands (coefficients in
+    SMEM via scalar prefetch, dt as a per-row vector), so distinct values share
+    one compiled executable; ``seed`` gives every row its own 64-bit
+    counter-RNG stream id (see prng.py for the draw layout and why two words).
+    """
     t, v = mu_a.shape
     block_t = min(block_t, max(8, t))
     block_v = min(block_v, max(128, v))
@@ -110,47 +135,51 @@ def fused_jump(
 
     mu_a_p = pad2(mu_a)
     mu_b_p = pad2(mu_b) if mu_b is not None else None
-    gum_p = pad2(gumbel)
-    u_p = pad1(u, 2.0)  # padded rows never jump (u=2 > any prob)
-    act_p = pad1(active, False)
+    seed = seed.astype(jnp.uint32)
+    seed_lo_p, seed_hi_p = pad1(seed[:, 0]), pad1(seed[:, 1])
+    act_p = pad1(active, False)  # padded rows never jump
+    dt_p = pad1(jnp.broadcast_to(jnp.asarray(dt, jnp.float32), (t,)))
 
     grid = (n_t, n_v)
-    mat_spec = pl.BlockSpec((block_t, block_v), lambda i, j: (i, j))
-    vec_spec = pl.BlockSpec((block_t,), lambda i, j: (i,))
+    # index maps take (grid ids..., scalar-prefetch refs...) under
+    # PrefetchScalarGridSpec; the coefficients need no index logic here.
+    mat_spec = pl.BlockSpec((block_t, block_v), lambda i, j, s: (i, j))
+    vec_spec = pl.BlockSpec((block_t,), lambda i, j, s: (i,))
 
     in_specs = [mat_spec]
     inputs = [mu_a_p]
     if mu_b_p is not None:
         in_specs.append(mat_spec)
         inputs.append(mu_b_p)
-    in_specs += [mat_spec, vec_spec, vec_spec]
-    inputs += [gum_p, u_p, act_p]
+    in_specs += [vec_spec, vec_spec, vec_spec, vec_spec]
+    inputs += [seed_lo_p, seed_hi_p, dt_p, act_p]
 
-    kernel = functools.partial(
-        _kernel if mu_b_p is not None else _kernel_single,
-        coeff_a=coeff_a, coeff_b=coeff_b, dt=dt, block_v=block_v,
-        n_v_blocks=n_v, vocab=v)
+    scal = jnp.stack([jnp.asarray(coeff_a, jnp.float32),
+                      jnp.asarray(coeff_b, jnp.float32)])
 
-    token, jump = pl.pallas_call(
-        kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # the (coeff_a, coeff_b) pair rides in SMEM
         grid=grid,
         in_specs=in_specs,
         out_specs=[vec_spec, vec_spec],
-        out_shape=[
-            jax.ShapeDtypeStruct((n_t * block_t,), jnp.int32),
-            jax.ShapeDtypeStruct((n_t * block_t,), jnp.bool_),
-        ],
         scratch_shapes=[
             pltpu.VMEM((block_t,), jnp.float32),  # lam accumulator
             pltpu.VMEM((block_t,), jnp.float32),  # best score
             pltpu.VMEM((block_t,), jnp.int32),  # argmax index
         ],
+    )
+
+    kernel = functools.partial(
+        _kernel if mu_b_p is not None else _kernel_single,
+        block_v=block_v, n_v_blocks=n_v, vocab=v)
+
+    token, jump = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_t * block_t,), jnp.int32),
+            jax.ShapeDtypeStruct((n_t * block_t,), jnp.bool_),
+        ],
         interpret=interpret,
-    )(*inputs)
+    )(scal, *inputs)
     return token[:t], jump[:t]
-
-
-def _kernel_single(mu_a_ref, gumbel_ref, u_ref, active_ref,
-                   token_ref, jump_ref, lam_acc, best_acc, idx_acc, **kw):
-    _kernel(mu_a_ref, None, gumbel_ref, u_ref, active_ref,
-            token_ref, jump_ref, lam_acc, best_acc, idx_acc, **kw)

@@ -25,20 +25,25 @@ def on_tpu() -> bool:
 def fused_jump_update(
     mu_a: Array,
     mu_b: Optional[Array],
-    gumbel: Array,
-    u: Array,
+    seed: Array,
     active: Array,
     *,
-    coeff_a: float = 1.0,
-    coeff_b: float = 0.0,
-    dt: float = 1.0,
+    coeff_a=1.0,
+    coeff_b=0.0,
+    dt=1.0,
     force_kernel: bool = False,
 ) -> tuple[Array, Array]:
-    """Solver-stage jump update: (token, jump) per position. See fused_jump.py."""
+    """Solver-stage jump update: (token, jump) per position. See fused_jump.py.
+
+    ``seed`` is the [T, 2] uint32 per-row counter-RNG stream ids (noise is
+    drawn in-kernel; no [T, V] operand); ``dt`` may be a scalar or [T]
+    per-row; both paths evaluate the identical generator, so kernel and
+    fallback agree bit-for-bit.
+    """
     if on_tpu() or force_kernel:
-        return fused_jump(mu_a, mu_b, gumbel, u, active, coeff_a=coeff_a,
+        return fused_jump(mu_a, mu_b, seed, active, coeff_a=coeff_a,
                           coeff_b=coeff_b, dt=dt, interpret=not on_tpu())
-    return ref.fused_jump_ref(mu_a, mu_b, coeff_a, coeff_b, dt, gumbel, u, active)
+    return ref.fused_jump_rng_ref(mu_a, mu_b, coeff_a, coeff_b, dt, seed, active)
 
 
 def attention(

@@ -1,0 +1,106 @@
+"""Counter-based in-kernel RNG shared by the Pallas kernels and their oracles.
+
+The v2 fused-jump kernel draws its Gumbel and thinning-uniform variates
+*inside* the kernel instead of streaming pre-materialized ``[T, V]`` noise
+tensors through HBM.  The generator is a stateless counter hash:
+
+    bits(seed, ctr) = fmix32((seed ^ (ctr * GOLDEN)) + SPLITMIX_INC)
+
+where ``fmix32`` is the murmur3 avalanche finalizer.  Every element's bits are
+a pure function of a per-row ``seed`` (uint32) and a per-draw counter, which
+buys three properties the hardware PRNG (``pltpu.prng_seed`` /
+``prng_random_bits``) cannot give us here:
+
+* **tiling invariance** — the per-core hardware stream changes whenever the
+  grid/block layout changes; counter bits depend only on (row seed, column),
+  so autotuning block sizes never changes the samples;
+* **per-row streams** — serving runs every batch slot under its own PRNG key
+  (admission-time invariance: a request's tokens must not depend on which slot
+  it lands in).  One per-core seed cannot express per-row streams; a per-row
+  seed operand can;
+* **a bit-exact oracle** — the same element-wise formula evaluated in plain
+  jnp (``ref.fused_jump_rng_ref``) reproduces the kernel's draws exactly, so
+  fused-vs-oracle parity stays testable at array equality, in interpret mode
+  and on device.
+
+All helpers are element-wise jnp on uint32/float32, so the *same code* runs
+inside a Pallas kernel body and in the XLA oracle.
+
+Row streams are identified by a **two-word (64-bit) seed**: with a single
+uint32 word, birthday collisions at serving scale (B*L ~ 2^18 rows) would
+give ~several row pairs per solver stage bit-identical noise — silently
+correlating jump decisions across positions.  Two independent words push the
+collision probability to the 2^64 birthday bound (~1e-9 at 2^18 rows).
+
+Counter layout per row: ctr 0 is the thinning uniform; ctr ``1 + c`` is the
+Gumbel for vocab column ``c``.  Distinct jump updates must use distinct row
+seeds (the solver layer derives them from its per-step PRNG keys via
+``jax.random.bits``), never distinct counters.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_U = jnp.uint32
+#: 2^32 / golden ratio — the Weyl increment decorrelating consecutive counters.
+_GOLDEN = 0x9E3779B9
+#: odd multiplier decorrelating the high seed word's counter walk from the
+#: low word's (murmur3 c1).
+_GOLDEN_HI = 0xCC9E2D51
+#: splitmix64's low-word increment, breaking the seed==ctr*GOLDEN fixed point.
+_SPLITMIX_INC = 0x7F4A7C15
+
+#: counter tag of the per-row thinning uniform (vocab Gumbels start at 1).
+CTR_UNIFORM = 0
+#: first Gumbel counter: column c uses counter CTR_GUMBEL0 + c.
+CTR_GUMBEL0 = 1
+
+
+def fmix32(x: Array) -> Array:
+    """murmur3's 32-bit avalanche finalizer (bijective on uint32)."""
+    x = x ^ (x >> _U(16))
+    x = x * _U(0x85EBCA6B)
+    x = x ^ (x >> _U(13))
+    x = x * _U(0xC2B2AE35)
+    x = x ^ (x >> _U(16))
+    return x
+
+
+def counter_bits(seed_lo: Array, seed_hi: Array, ctr: Array) -> Array:
+    """Stateless uint32 draw for (64-bit seed, ctr); broadcasts elementwise.
+
+    Two chained avalanche rounds, each folding in one seed word on its own
+    counter walk — streams coincide only when BOTH words collide.
+    """
+    seed_lo = seed_lo.astype(jnp.uint32)
+    seed_hi = seed_hi.astype(jnp.uint32)
+    ctr = jnp.asarray(ctr).astype(jnp.uint32)
+    h = fmix32((seed_hi ^ (ctr * _U(_GOLDEN_HI))) + _U(_SPLITMIX_INC))
+    return fmix32((seed_lo ^ (ctr * _U(_GOLDEN))) + h)
+
+
+def uniform_from_bits(bits: Array) -> Array:
+    """Map uint32 bits to float32 strictly inside (0, 1) (24-bit mantissa grid).
+
+    The open interval matters on both ends: ``u > 0`` keeps ``log(u)`` finite
+    for the Gumbel transform, ``u < 1`` keeps ``p_jump = 1`` rows jumping.
+    """
+    return ((bits >> _U(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+            + jnp.float32(2.0 ** -25))
+
+
+def gumbel_from_bits(bits: Array) -> Array:
+    """Standard Gumbel via inverse-CDF of the (0, 1)-open uniform above."""
+    return -jnp.log(-jnp.log(uniform_from_bits(bits)))
+
+
+def row_uniform(seed_lo: Array, seed_hi: Array) -> Array:
+    """The per-row thinning uniform (counter ``CTR_UNIFORM``)."""
+    return uniform_from_bits(counter_bits(seed_lo, seed_hi, CTR_UNIFORM))
+
+
+def col_gumbel(seed_lo: Array, seed_hi: Array, col: Array) -> Array:
+    """Gumbel for (row seed, vocab column); broadcasts seed x col."""
+    return gumbel_from_bits(counter_bits(seed_lo, seed_hi, col + CTR_GUMBEL0))

@@ -5,25 +5,27 @@ per-kernel tests sweep shapes/dtypes and assert_allclose kernel-vs-ref.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from .prng import col_gumbel, row_uniform
+
 Array = jnp.ndarray
 
 
-def fused_jump_ref(
+def fused_jump_law(
     mu_a: Array,  # [T, V] stage intensities (e.g. alpha1 * mu*_rho)
     mu_b: Optional[Array],  # [T, V] or None (e.g. alpha2 * mu_{s_n})
-    coeff_a: float,
-    coeff_b: float,
-    dt: float,
+    coeff_a: Union[Array, float],
+    coeff_b: Union[Array, float],
+    dt: Union[Array, float],  # scalar or [T] per-row step sizes
     gumbel: Array,  # [T, V]
     u: Array,  # [T]
     active: Array,  # [T] bool: position may jump (masked position)
 ) -> tuple[Array, Array]:
-    """Reference for the fused theta-jump kernel.
+    """The fused jump law with the noise supplied explicitly.
 
     rates   = relu(coeff_a * mu_a + coeff_b * mu_b)         (extrapolated rate)
     lam     = sum_v rates
@@ -32,16 +34,43 @@ def fused_jump_ref(
 
     Returns (token [T] int32, jump [T] bool).
     """
-    mu = coeff_a * mu_a.astype(jnp.float32)
+    mu = jnp.asarray(coeff_a, jnp.float32) * mu_a.astype(jnp.float32)
     if mu_b is not None:
-        mu = mu + coeff_b * mu_b.astype(jnp.float32)
+        mu = mu + jnp.asarray(coeff_b, jnp.float32) * mu_b.astype(jnp.float32)
     rates = jnp.maximum(mu, 0.0)
     lam = rates.sum(axis=-1)
-    p_jump = 1.0 - jnp.exp(-lam * dt)
+    p_jump = 1.0 - jnp.exp(-lam * jnp.asarray(dt, jnp.float32))
     jump = active & (u < p_jump)
     logr = jnp.log(jnp.maximum(rates, 1e-30))
     token = jnp.argmax(logr + gumbel.astype(jnp.float32), axis=-1).astype(jnp.int32)
     return token, jump
+
+
+def fused_jump_rng_ref(
+    mu_a: Array,  # [T, V]
+    mu_b: Optional[Array],  # [T, V] or None
+    coeff_a: Union[Array, float],
+    coeff_b: Union[Array, float],
+    dt: Union[Array, float],  # scalar or [T]
+    seed: Array,  # [T, 2] uint32 per-row RNG stream ids (two words)
+    active: Array,  # [T] bool
+) -> tuple[Array, Array]:
+    """Reference for the v2 fused kernel: counter-RNG draws + the jump law.
+
+    Evaluates the *same* element-wise generator the kernel runs in VMEM
+    (prng.py), so this oracle is bit-identical to the kernel's own draws —
+    parity is testable at array equality, not just in distribution.
+    """
+    t, v = mu_a.shape
+    seed = seed.astype(jnp.uint32)
+    lo, hi = seed[:, :1], seed[:, 1:]
+    gumbel = col_gumbel(lo, hi, jnp.arange(v, dtype=jnp.int32)[None, :])
+    u = row_uniform(lo[:, 0], hi[:, 0])
+    return fused_jump_law(mu_a, mu_b, coeff_a, coeff_b, dt, gumbel, u, active)
+
+
+# Backwards-compatible name: the explicit-noise law oracle.
+fused_jump_ref = fused_jump_law
 
 
 def flash_attention_ref(

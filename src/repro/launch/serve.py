@@ -32,6 +32,10 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--run-to-completion", action="store_true",
                     help="legacy batching: admit only between complete runs")
+    ap.add_argument("--scheduler-stride", type=int, default=1,
+                    help="solver steps per scheduler tick: the pool advances "
+                         "K steps per device launch, admitting/fetching only "
+                         "at stride boundaries (1 = step-level streaming)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -43,7 +47,8 @@ def main() -> None:
     with mesh:
         engine = ServingEngine(params, cfg, process, sampler,
                                max_batch=args.max_batch, seq_len=args.seq_len,
-                               continuous=not args.run_to_completion)
+                               continuous=not args.run_to_completion,
+                               scheduler_stride=args.scheduler_stride)
         t0 = time.time()
         for i in range(args.requests):
             engine.submit(Request(request_id=i, seq_len=args.seq_len,
@@ -65,7 +70,8 @@ def main() -> None:
           f"(queue delay p50 {np.percentile(qd, 50):.2f}s  "
           f"p95 {np.percentile(qd, 95):.2f}s)")
     print(f"slot occupancy {stats['occupancy']:.1%} over "
-          f"{stats['global_steps']} pool steps")
+          f"{stats['global_steps']} pool steps "
+          f"(scheduler stride {stats['scheduler_stride']})")
     print("first sample head:", toks[0, :24].tolist())
 
 

@@ -184,6 +184,58 @@ def test_fused_kernel_path_distributionally_equal(pi, proc):
     assert float(np.abs(q_ref - q_fused).max()) < 0.05
 
 
+def test_fused_kernel_path_uniform_engine(pi):
+    """The uniform engine's fused path (same kernel, every position active)
+    must sample the same law as its reference path, for single-rate and
+    two-stage (clipped combination) schemes alike."""
+    key = jax.random.PRNGKey(29)
+    uproc = uniform_process(V, loglinear_schedule())
+
+    def ratio_fn(tokens, t):
+        a = uproc.schedule.alpha(t)
+        pt = a * pi + (1 - a) / V
+        return (jnp.broadcast_to(pt, tokens.shape + (V,))
+                / jnp.take(pt, tokens)[..., None])
+
+    for method in ("tau_leaping", "theta_trapezoidal"):
+        cfg = SamplerConfig(method=method, n_steps=24, theta=0.4)
+
+        def draw(fused):
+            engine = UniformEngine(process=uproc, score_fn=ratio_fn,
+                                   fused=fused)
+            toks = jax.jit(lambda k: sample(
+                k, engine, cfg, batch=96, seq_len=32).tokens)(key)
+            return (np.bincount(np.asarray(toks).reshape(-1), minlength=V)
+                    / toks.size)
+
+        q_ref = draw(fused=False)
+        q_fused = draw(fused=True)
+        assert kl(np.asarray(pi), q_ref) < 0.03, method
+        assert kl(np.asarray(pi), q_fused) < 0.03, method
+        assert float(np.abs(q_ref - q_fused).max()) < 0.05, method
+
+
+def test_uniform_config_fused_flag_configures_engine(pi):
+    """SamplerConfig(fused=True) reaches the uniform engine via configure()."""
+    key = jax.random.PRNGKey(31)
+    uproc = uniform_process(V, loglinear_schedule())
+
+    def ratio_fn(tokens, t):
+        a = uproc.schedule.alpha(t)
+        pt = a * pi + (1 - a) / V
+        return (jnp.broadcast_to(pt, tokens.shape + (V,))
+                / jnp.take(pt, tokens)[..., None])
+
+    eng = UniformEngine(process=uproc, score_fn=ratio_fn)
+    cfg = SamplerConfig(method="tau_leaping", n_steps=8, fused=True)
+    via_config = np.asarray(sample(key, eng, cfg, batch=16, seq_len=12).tokens)
+    cfg_plain = SamplerConfig(method="tau_leaping", n_steps=8)
+    via_engine = np.asarray(
+        sample(key, UniformEngine(process=uproc, score_fn=ratio_fn, fused=True),
+               cfg_plain, batch=16, seq_len=12).tokens)
+    assert (via_config == via_engine).all()
+
+
 def test_config_fused_flag_equals_engine_flag(pi, proc):
     """SamplerConfig(fused=True) must select the same execution path as
     constructing the engine with fused=True (sample() folds it in)."""

@@ -15,20 +15,24 @@ from repro.kernels import ops, ref
 
 
 # --------------------------------------------------------------------------- #
-# fused_jump
+# fused_jump (v2: in-kernel counter RNG, runtime coefficients and per-row dt)
 # --------------------------------------------------------------------------- #
+def _row_seeds(key, t):
+    return jax.random.bits(key, (t, 2), jnp.uint32)  # two words per row
+
+
 @pytest.mark.parametrize("t,v", [(5, 64), (32, 200), (100, 513), (256, 2048)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_fused_jump_matches_ref(t, v, dtype, rng_key):
-    ks = jax.random.split(rng_key, 5)
+    """Kernel draws == oracle draws bit-for-bit (same counter generator)."""
+    ks = jax.random.split(rng_key, 4)
     mu_a = (jax.nn.softmax(jax.random.normal(ks[0], (t, v)), -1) * 2.0).astype(dtype)
     mu_b = (jax.nn.softmax(jax.random.normal(ks[1], (t, v)), -1) * 2.0).astype(dtype)
-    g = jax.random.gumbel(ks[2], (t, v))
-    u = jax.random.uniform(ks[3], (t,))
-    act = jax.random.bernoulli(ks[4], 0.6, (t,))
+    seed = _row_seeds(ks[2], t)
+    act = jax.random.bernoulli(ks[3], 0.6, (t,))
     a1, a2, dt = 2.2222, 1.2222, 0.07
-    tok_r, jmp_r = ref.fused_jump_ref(mu_a, mu_b, a1, -a2, dt, g, u, act)
-    tok_k, jmp_k = fused_jump(mu_a, mu_b, g, u, act, coeff_a=a1, coeff_b=-a2,
+    tok_r, jmp_r = ref.fused_jump_rng_ref(mu_a, mu_b, a1, -a2, dt, seed, act)
+    tok_k, jmp_k = fused_jump(mu_a, mu_b, seed, act, coeff_a=a1, coeff_b=-a2,
                               dt=dt, block_t=64, block_v=256, interpret=True)
     np.testing.assert_array_equal(np.asarray(tok_r), np.asarray(tok_k))
     np.testing.assert_array_equal(np.asarray(jmp_r), np.asarray(jmp_k))
@@ -37,16 +41,65 @@ def test_fused_jump_matches_ref(t, v, dtype, rng_key):
 def test_fused_jump_single_intensity(rng_key):
     """mu_b = None path (tau-leaping stage: a single intensity tensor)."""
     t, v = 48, 300
-    ks = jax.random.split(rng_key, 4)
+    ks = jax.random.split(rng_key, 2)
     mu = jax.nn.softmax(jax.random.normal(ks[0], (t, v)), -1)
-    g = jax.random.gumbel(ks[1], (t, v))
-    u = jax.random.uniform(ks[2], (t,))
+    seed = _row_seeds(ks[1], t)
     act = jnp.ones((t,), bool)
-    tok_r, jmp_r = ref.fused_jump_ref(mu, None, 1.0, 0.0, 0.3, g, u, act)
-    tok_k, jmp_k = fused_jump(mu, None, g, u, act, coeff_a=1.0, dt=0.3,
+    tok_r, jmp_r = ref.fused_jump_rng_ref(mu, None, 1.0, 0.0, 0.3, seed, act)
+    tok_k, jmp_k = fused_jump(mu, None, seed, act, coeff_a=1.0, dt=0.3,
                               block_t=32, block_v=128, interpret=True)
     np.testing.assert_array_equal(np.asarray(tok_r), np.asarray(tok_k))
     np.testing.assert_array_equal(np.asarray(jmp_r), np.asarray(jmp_k))
+
+
+def test_fused_jump_per_row_dt(rng_key):
+    """dt as a [T] vector (per-slot serving): each row thins with its own dt."""
+    t, v = 24, 160
+    ks = jax.random.split(rng_key, 3)
+    mu = jax.nn.softmax(jax.random.normal(ks[0], (t, v)), -1) * 3.0
+    seed = _row_seeds(ks[1], t)
+    dt = jax.random.uniform(ks[2], (t,), minval=0.01, maxval=0.8)
+    act = jnp.ones((t,), bool)
+    tok_r, jmp_r = ref.fused_jump_rng_ref(mu, None, 1.0, 0.0, dt, seed, act)
+    tok_k, jmp_k = fused_jump(mu, None, seed, act, dt=dt, block_t=8,
+                              block_v=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(tok_r), np.asarray(tok_k))
+    np.testing.assert_array_equal(np.asarray(jmp_r), np.asarray(jmp_k))
+    # dt -> 0 rows must not jump; dt -> inf rows almost surely do.
+    _, jmp_lo = fused_jump(mu, None, seed, act, dt=jnp.zeros((t,)),
+                           interpret=True)
+    assert not bool(jmp_lo.any())
+
+
+def test_fused_jump_tiling_invariant(rng_key):
+    """Counter RNG makes the draws independent of the (block_t, block_v) grid."""
+    t, v = 40, 320
+    ks = jax.random.split(rng_key, 2)
+    mu = jax.nn.softmax(jax.random.normal(ks[0], (t, v)), -1)
+    seed = _row_seeds(ks[1], t)
+    act = jnp.ones((t,), bool)
+    outs = [fused_jump(mu, None, seed, act, dt=0.4, block_t=bt, block_v=bv,
+                       interpret=True)
+            for bt, bv in ((8, 128), (16, 256), (64, 512))]
+    for tok, jmp in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0][0]), np.asarray(tok))
+        np.testing.assert_array_equal(np.asarray(outs[0][1]), np.asarray(jmp))
+
+
+def test_fused_jump_compiles_once_across_dt_and_coeffs(rng_key):
+    """dt/coeff_a/coeff_b are traced operands: ONE executable serves them all
+    (the v1 kernel recompiled per distinct float via static_argnames)."""
+    t, v = 16, 128
+    ks = jax.random.split(rng_key, 2)
+    mu = jax.nn.softmax(jax.random.normal(ks[0], (t, v)), -1)
+    seed = _row_seeds(ks[1], t)
+    act = jnp.ones((t,), bool)
+    before = fused_jump._cache_size()
+    for dt, ca, cb in ((0.05, 2.667, -1.667), (0.11, 1.5, -0.5),
+                       (0.73, 0.9, 0.1), (1.0, 1.0, 0.0)):
+        fused_jump(mu, mu, seed, act, coeff_a=ca, coeff_b=cb, dt=dt,
+                   interpret=True)
+    assert fused_jump._cache_size() - before == 1
 
 
 @given(theta=st.floats(0.2, 0.8), dt=st.floats(0.01, 0.5))
@@ -60,12 +113,36 @@ def test_fused_jump_extrapolation_clip_property(theta, dt):
     key = jax.random.PRNGKey(int(theta * 1e6))
     mu = jax.nn.softmax(jax.random.normal(key, (t, v)), -1)
     zeros = jnp.zeros((t, v))
-    g = jax.random.gumbel(jax.random.fold_in(key, 1), (t, v))
-    u = jax.random.uniform(jax.random.fold_in(key, 2), (t,))
+    seed = _row_seeds(jax.random.fold_in(key, 1), t)
     act = jnp.ones((t,), bool)
-    _, jmp = fused_jump(zeros, mu, g, u, act, coeff_a=a1, coeff_b=-a2, dt=dt,
+    _, jmp = fused_jump(zeros, mu, seed, act, coeff_a=a1, coeff_b=-a2, dt=dt,
                         interpret=True)
     assert not bool(jmp.any())
+
+
+def test_counter_rng_statistics():
+    """The in-kernel generator's uniforms are open-interval and unbiased
+    enough for the thinning/Gumbel draws (moment + KS-style checks)."""
+    from repro.kernels.prng import col_gumbel, row_uniform
+
+    seeds = jax.random.bits(jax.random.PRNGKey(5), (200_000, 2), jnp.uint32)
+    u = np.asarray(row_uniform(seeds[:, 0], seeds[:, 1]))
+    assert 0.0 < u.min() and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 3e-3
+    assert abs(np.var(u) - 1.0 / 12.0) < 1e-3
+    # empirical CDF within 1% everywhere (2e5 samples -> ~0.3% noise floor)
+    qs = np.quantile(u, np.linspace(0.05, 0.95, 19))
+    np.testing.assert_allclose(qs, np.linspace(0.05, 0.95, 19), atol=0.01)
+    # Gumbel mean is the Euler-Mascheroni constant, var pi^2/6
+    g = np.asarray(col_gumbel(seeds[:1000, :1], seeds[:1000, 1:],
+                              jnp.arange(256, dtype=jnp.int32)[None, :]))
+    assert abs(g.mean() - 0.5772) < 5e-3
+    assert abs(g.var() - np.pi ** 2 / 6.0) < 2e-2
+    # two-word streams: rows sharing ONE seed word still draw differently
+    lo = jnp.full((4096,), jnp.uint32(0x12345678))
+    hi = jax.random.bits(jax.random.PRNGKey(6), (4096,), jnp.uint32)
+    u_half = np.asarray(row_uniform(lo, hi))
+    assert np.unique(u_half).size > 4000
 
 
 # --------------------------------------------------------------------------- #

@@ -177,6 +177,94 @@ def test_stream_callback(params):
     assert all(shape == (12,) for _, _, shape in seen)
 
 
+def test_stream_fetch_gated_on_registered_callbacks(params):
+    """Tokens leave the device only on ticks where a streaming request is
+    active; non-streaming traffic pays zero stream fetches."""
+    eng = make_engine(params, n_steps=2, max_batch=2)
+    eng.submit(Request(request_id=0, seq_len=16, seed=0))
+    eng.submit(Request(request_id=1, seq_len=16, seed=1))
+    eng.run_all()
+    assert eng.stream_fetches == 0
+
+    seen = []
+    eng = make_engine(params, n_steps=2, max_batch=2)
+    eng.submit(Request(request_id=0, seq_len=16, seed=0))  # not streaming
+    eng.submit(Request(request_id=1, seq_len=16, seed=1,
+                       stream_cb=lambda rid, st, tk: seen.append((rid, st))))
+    eng.run_all()
+    # only request 1 streamed, and the pool fetched once per tick it was live
+    assert [rid for rid, _ in seen] == [1, 1]
+    assert eng.stream_fetches == 2
+
+
+def test_per_request_stream_cb_overrides_engine_default(params):
+    per_req, engine_wide = [], []
+    eng = make_engine(params, n_steps=2, max_batch=2,
+                      stream_cb=lambda rid, st, tk: engine_wide.append(rid))
+    eng.submit(Request(request_id=0, seq_len=16, seed=0))
+    eng.submit(Request(request_id=1, seq_len=16, seed=1,
+                       stream_cb=lambda rid, st, tk: per_req.append(rid)))
+    eng.run_all()
+    assert set(engine_wide) == {0} and set(per_req) == {1}
+
+
+# --------------------------------------------------------------------------- #
+# Strided scheduler (advance_many under the hood)
+# --------------------------------------------------------------------------- #
+
+
+def test_scheduler_stride_tokens_bit_identical(params):
+    """K-step ticks change only host cadence: per-request samples are the
+    stride-1 samples exactly, budgets and seeds honored."""
+    def serve(stride):
+        eng = make_engine(params, n_steps=4, max_batch=2,
+                          scheduler_stride=stride)
+        for i in range(5):
+            eng.submit(Request(request_id=i, seq_len=16, seed=i,
+                               n_steps=2 if i % 2 else 6))
+        return {r.request_id: r for r in eng.run_all()}
+
+    base, strided = serve(1), serve(3)
+    assert base.keys() == strided.keys()
+    for rid in base:
+        assert (base[rid].tokens == strided[rid].tokens).all()
+        assert base[rid].steps == strided[rid].steps
+        assert base[rid].nfe == strided[rid].nfe
+
+
+def test_scheduler_stride_fewer_ticks_and_fetches(params):
+    """A stride-K tick = K solver steps, one step-counter fetch, one
+    admission pass."""
+    eng = make_engine(params, n_steps=6, max_batch=2, scheduler_stride=3)
+    eng.submit(Request(request_id=0, seq_len=16, seed=0))
+    eng.submit(Request(request_id=1, seq_len=16, seed=1))
+    ticks = 0
+    while eng.queued or eng.active_slots:
+        eng.step()
+        ticks += 1
+    assert ticks == 2                      # 6 steps in 2 launches
+    assert eng.stats()["global_steps"] == 6
+    assert eng.stats()["scheduler_stride"] == 3
+    assert eng.stats()["occupancy"] == 1.0  # both slots ran all 6 steps
+
+
+def test_scheduler_stride_occupancy_counts_frozen_tail(params):
+    """A slot draining mid-stride freezes: occupancy counts only executed
+    slot-steps while capacity counts the full stride."""
+    eng = make_engine(params, n_steps=4, max_batch=1, scheduler_stride=4)
+    eng.submit(Request(request_id=0, seq_len=16, seed=0, n_steps=2))
+    eng.run_all()
+    stats = eng.stats()
+    assert stats["global_steps"] == 4       # one stride-4 tick
+    assert stats["active_slot_steps"] == 2  # budget hit after 2 steps
+    assert stats["occupancy"] == pytest.approx(0.5)
+
+
+def test_scheduler_stride_validation(params):
+    with pytest.raises(ValueError, match="scheduler_stride"):
+        make_engine(params, scheduler_stride=0)
+
+
 def test_run_to_completion_mode(params):
     """Legacy discipline: admission only once the whole pool has drained."""
     eng = make_engine(params, n_steps=2, max_batch=2, continuous=False)

@@ -20,6 +20,7 @@ from repro.core import (
     UniformEngine,
     admit_slot,
     advance,
+    advance_many,
     finalize,
     get_solver,
     init_state,
@@ -243,6 +244,95 @@ def test_fhs_has_no_stepwise_form(pi, rng_key):
     eng = MaskedEngine(process=proc, score_fn=iid_score_fn(pi))
     with pytest.raises(ValueError, match="stepwise"):
         init_state(rng_key, eng, SamplerConfig(method="fhs"), 4, 8)
+
+
+# --------------------------------------------------------------------------- #
+# advance_many: K steps in one launch == K sequential advance calls, bit-exact
+# --------------------------------------------------------------------------- #
+
+
+def _drive_many(key, engine, cfg, batch, seq_len=None, chunks=(2, 2, 1)):
+    """Drive a fresh state with advance_many in (possibly uneven) chunks."""
+    assert sum(chunks) == cfg.n_steps
+    state = init_state(key, engine, cfg, batch, seq_len)
+    for k in chunks:
+        state = advance_many(state, k)
+    return np.asarray(finalize(state))
+
+
+@pytest.mark.parametrize("method", DENSE_STEPWISE)
+def test_advance_many_parity_dense(method, toy, rng_key):
+    cfg = SamplerConfig(method=method, n_steps=5, theta=0.4)
+    ref = _drive(rng_key, DenseEngine(toy), cfg, 128)
+    got = _drive_many(rng_key, DenseEngine(toy), cfg, 128)
+    assert (ref == got).all()
+
+
+@pytest.mark.parametrize("method", MASKED_STEPWISE)
+def test_advance_many_parity_masked(method, pi, rng_key):
+    proc = masked_process(V, loglinear_schedule())
+    eng = MaskedEngine(process=proc, score_fn=iid_score_fn(pi))
+    cfg = SamplerConfig(method=method, n_steps=5, theta=0.4)
+    ref = _drive(rng_key, eng, cfg, 16, 24)
+    got = _drive_many(rng_key, eng, cfg, 16, 24)
+    assert (ref == got).all()
+
+
+@pytest.mark.parametrize("method", UNIFORM_STEPWISE)
+def test_advance_many_parity_uniform(method, pi, rng_key):
+    uproc = uniform_process(V, loglinear_schedule())
+    eng = UniformEngine(process=uproc, score_fn=iid_score_fn(pi))
+    cfg = SamplerConfig(method=method, n_steps=5, theta=0.4)
+    ref = _drive(rng_key, eng, cfg, 16, 24)
+    got = _drive_many(rng_key, eng, cfg, 16, 24)
+    assert (ref == got).all()
+
+
+def test_advance_many_per_slot_with_budgets(pi, rng_key):
+    """Strided per-slot stepping: freezes mid-stride exactly like advance."""
+    proc = masked_process(V, loglinear_schedule())
+    eng = MaskedEngine(process=proc, score_fn=iid_score_fn(pi))
+    cfg = SamplerConfig(method="theta_trapezoidal", n_steps=4, theta=0.4)
+
+    def drive(stepper):
+        st = init_state(rng_key, eng, cfg, 3, 12, per_slot=True)
+        st = admit_slot(st, 0, jax.random.PRNGKey(1), n_steps=2)
+        st = admit_slot(st, 2, jax.random.PRNGKey(2), n_steps=7)
+        st = stepper(st)
+        assert np.asarray(slot_done(st)).all()
+        return np.asarray(finalize(st))
+
+    def seq(st):
+        for _ in range(7):
+            st = advance(st)
+        return st
+
+    def strided(st):
+        st = advance_many(st, 3)
+        return advance_many(st, 4)
+
+    assert (drive(seq) == drive(strided)).all()
+
+
+def test_advance_many_donates_but_does_not_eat_caller_key(pi, rng_key):
+    """init_state must defensively copy an engine-aliased key so donation of
+    the state can never delete a caller-held buffer."""
+    proc = masked_process(V, loglinear_schedule())
+    eng = MaskedEngine(process=proc, score_fn=iid_score_fn(pi))
+    cfg = SamplerConfig(method="tau_leaping", n_steps=3)
+    key = jax.random.PRNGKey(123)
+    st = init_state(key, eng, cfg, 4, 8)
+    st = advance_many(st, 3)  # donates st's buffers
+    np.asarray(finalize(st))
+    # the caller's key must still be alive and usable
+    jax.random.split(key)
+
+
+def test_advance_many_rejects_bad_k(toy, rng_key):
+    st = init_state(rng_key, DenseEngine(toy),
+                    SamplerConfig(method="euler", n_steps=2), 4)
+    with pytest.raises(ValueError, match="k >= 1"):
+        advance_many(st, 0)
 
 
 # --------------------------------------------------------------------------- #
