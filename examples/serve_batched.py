@@ -74,9 +74,10 @@ def main() -> None:
     print(f"latency (submit->finish): p50 {np.percentile(lat, 50):.2f}s  "
           f"p95 {np.percentile(lat, 95):.2f}s  "
           f"| queue delay p95 {np.percentile(qd, 95):.2f}s")
-    print(f"slot occupancy {stats['occupancy']:.1%} over "
-          f"{stats['global_steps']} pool steps "
-          f"({stats['score_evals']} score forwards)")
+    print(f"occupancy {stats['occupancy']:.1%} of {stats['paid_slot_steps']} "
+          f"paid slot-steps over {stats['global_steps']} pool steps "
+          f"({stats['score_evals']} score forwards, "
+          f"{stats['finalize_rows']} finalize rows)")
     print("sample:", np.asarray(results[0].tokens[:16]).tolist())
 
 

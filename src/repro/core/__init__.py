@@ -24,6 +24,7 @@ from .solvers import (
     MaskedEngine,
     SampleResult,
     SamplerConfig,
+    SlotPool,
     Solver,
     SolverState,
     UniformEngine,
@@ -31,6 +32,7 @@ from .solvers import (
     advance,
     advance_many,
     budget_supported,
+    default_bucket_ladder,
     dense_step,
     fhs_sample,
     finalize,
@@ -64,6 +66,8 @@ __all__ = [
     # stepwise sampling API
     "SolverState", "init_state", "advance", "advance_many", "finalize",
     "admit_slot", "slot_done", "budget_supported",
+    # occupancy-aware slot pool
+    "SlotPool", "default_bucket_ladder",
     # legacy solver API (kept: bit-identical wrappers over the new entrypoint)
     "METHODS", "TWO_STAGE", "SamplerConfig", "dense_step", "fhs_sample",
     "masked_step", "rk2_coefficients", "sample_dense", "sample_masked",

@@ -10,6 +10,8 @@ Layout:
   ``advance`` / ``advance_many`` / ``finalize`` (plus the per-slot pool ops
   ``admit_slot`` / ``slot_done`` that the continuous-batching ServingEngine
   builds on);
+* ``pool``      — ``SlotPool``: occupancy-aware executor over a per-slot
+  state (bucketed gather/compact/scatter, slot-masked batched finalize);
 * ``rng``       — PRNG helpers accepting a single key or a per-slot key batch;
 * ``engines``   — the ``Engine`` protocol and the ``DenseEngine`` /
   ``MaskedEngine`` / ``UniformEngine`` state-space implementations;
@@ -42,7 +44,6 @@ from .config import (
     SamplerConfig,
     ScoreFn,
     rk2_coefficients,
-    set_fused_jump,
     trapezoidal_coefficients,
 )
 from .base import Solver
@@ -57,6 +58,7 @@ from .state import (
     init_state,
     slot_done,
 )
+from .pool import SlotPool, default_bucket_ladder
 from .schemes import (
     EulerSolver,
     FHSSolver,
@@ -77,6 +79,7 @@ from .compat import (
     sample_dense,
     sample_masked,
     sample_uniform,
+    set_fused_jump,
     uniform_step,
 )
 
@@ -91,6 +94,8 @@ __all__ = [
     # stepwise API
     "SolverState", "init_state", "advance", "advance_many", "finalize",
     "admit_slot", "slot_done", "budget_supported",
+    # slot pool (bucketed serving substrate)
+    "SlotPool", "default_bucket_ladder",
     # solver classes
     "EulerSolver", "TauLeapingSolver", "TweedieSolver", "ThetaRK2Solver",
     "ThetaTrapezoidalSolver", "ParallelDecodingSolver", "FHSSolver",

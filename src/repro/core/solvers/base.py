@@ -47,8 +47,18 @@ class Solver:
         return None
 
     def step(self, key: jax.Array, engine, x: Array, t0: Array, t1: Array,
-             config, *, i: Optional[Array] = None, aux: Any = None) -> Array:
-        """One backward step t0 -> t1 (t1 < t0) on the given engine."""
+             config, *, i: Optional[Array] = None, aux: Any = None,
+             valid: Optional[Array] = None) -> Array:
+        """One backward step t0 -> t1 (t1 < t0) on the given engine.
+
+        ``valid`` is an optional per-slot [B] bool mask (serving pools pass the
+        not-yet-drained rows of a compacted bucket): rows where it is False
+        must come back unchanged.  Solvers that route through
+        ``engine.apply_jump`` forward it so masked rows skip the jump kernel
+        entirely; a solver may also ignore it — the per-slot ``advance``
+        re-freezes invalid rows after the step either way, and per-slot key
+        batches make row draws independent, so bits never change.
+        """
         raise NotImplementedError
 
     # -------------------------------------------------------------- execution

@@ -15,12 +15,24 @@ import jax.numpy as jnp
 
 from ..dense import DenseCTMC
 from ..process import DiffusionProcess
-from .config import SamplerConfig, ScoreFn, fused_jump_default
+from .config import SamplerConfig, ScoreFn
 from .engines import DenseEngine, MaskedEngine, UniformEngine
 from .registry import get_solver, list_solvers
 from .sampling import sample
 
 Array = jnp.ndarray
+
+
+def set_fused_jump(*_args, **_kwargs) -> None:
+    """Removed.  The process-global fused-jump toggle is gone for good.
+
+    The flag it mutated was deprecated in favor of explicit configuration two
+    releases ago and no internal caller remains; keeping a silently-working
+    global would let new code couple distant call sites through hidden state.
+    """
+    raise RuntimeError(
+        "set_fused_jump() has been removed: pass SamplerConfig(fused=True) "
+        "(or construct MaskedEngine/UniformEngine with fused=True) instead")
 
 # Derived from the registry (registration order); list_solvers() is live, this
 # tuple is the import-time snapshot kept for backward compatibility.
@@ -109,8 +121,7 @@ def masked_step(
     """One backward step t0 -> t1 for masked diffusion with a neural score net."""
     if method not in _STEPPABLE + ("tweedie",):
         raise ValueError(f"masked engine does not implement {method!r} as a step")
-    engine = MaskedEngine(process=process, score_fn=score_fn,
-                          fused=fused_jump_default())
+    engine = MaskedEngine(process=process, score_fn=score_fn)
     cfg = _step_config(method, theta)
     return get_solver(method)().step(key, engine, x, t0, t1, cfg)
 

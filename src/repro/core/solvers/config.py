@@ -8,7 +8,6 @@ of truth for what exists.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Callable
 
 import jax.numpy as jnp
@@ -32,8 +31,8 @@ class SamplerConfig:
     pd_temperature: float = 1.0
     # Route exponential jump updates through the fused Pallas kernel
     # (repro.kernels.fused_jump: in-kernel RNG, runtime dt) on the masked and
-    # uniform engines.  Replaces the old module-global toggled by the
-    # (deprecated) set_fused_jump().
+    # uniform engines.  Replaces the removed module-global toggle
+    # (set_fused_jump, now a hard error in compat.py).
     fused: bool = False
 
     def __post_init__(self):
@@ -64,28 +63,3 @@ def trapezoidal_coefficients(theta: float) -> tuple[float, float]:
 def rk2_coefficients(theta: float) -> tuple[float, float]:
     """(1 - 1/(2 theta), 1/(2 theta)) — interpolation for th > 1/2, extrapolation below."""
     return 1.0 - 1.0 / (2.0 * theta), 1.0 / (2.0 * theta)
-
-
-# --------------------------------------------------------------------------- #
-# Deprecated process-global fused-jump toggle.
-# --------------------------------------------------------------------------- #
-
-_FUSED_JUMP_DEFAULT = False
-
-
-def set_fused_jump(enabled: bool) -> None:
-    """Deprecated: set ``SamplerConfig(fused=True)`` / ``MaskedEngine(fused=True)``.
-
-    Kept as a process-global *default* so legacy call sites keep working: the
-    flag is OR-ed into the engine's fused setting when a sample run starts.
-    """
-    warnings.warn(
-        "set_fused_jump() is deprecated; use SamplerConfig(fused=True) or "
-        "MaskedEngine(fused=True) instead",
-        DeprecationWarning, stacklevel=2)
-    global _FUSED_JUMP_DEFAULT
-    _FUSED_JUMP_DEFAULT = bool(enabled)
-
-
-def fused_jump_default() -> bool:
-    return _FUSED_JUMP_DEFAULT

@@ -21,7 +21,12 @@ An :class:`Engine` supplies the primitives every scheme is written against:
   time the primary ``rates`` were evaluated at; on the masked single-rate path
   it lets the engine use the identity ``sum_y rates = unmask_rate(t)`` (the
   score is a normalized distribution) so the thinning intensity costs no
-  [B, L, V] vocab reduction;
+  [B, L, V] vocab reduction.  ``valid`` is an optional per-slot [B] bool mask:
+  rows where it is False never jump — the serving pool threads the frozen /
+  padded rows of a compacted bucket through it so they do no kernel work (it
+  lands directly on the fused kernel's per-row ``active`` operand).  Row draws
+  with a batched key are per-slot streams, so masking one row never perturbs
+  another row's bits;
 * ``finalize(x, t_last)`` — post-loop cleanup (masked: greedy-fill stragglers).
 
 Engine-specific exact steps (``tweedie_*``) live on the engines that admit
@@ -40,7 +45,7 @@ from ..dense import DenseCTMC
 from ..process import DiffusionProcess
 from ..schedules import grid_fraction as _grid_fraction
 from ..schedules import time_grid as _schedule_time_grid
-from .config import ScoreFn, fused_jump_default
+from .config import ScoreFn
 from .rng import (
     rbits,
     rcategorical,
@@ -79,7 +84,8 @@ class Engine(Protocol):
     def apply_jump(self, key: jax.Array, x: Array, rates: Array, dt: Array, *,
                    linear: bool = False, rates_b: Optional[Array] = None,
                    coeff_a: float = 1.0, coeff_b: float = 0.0,
-                   t: Optional[Array] = None) -> Array: ...
+                   t: Optional[Array] = None,
+                   valid: Optional[Array] = None) -> Array: ...
 
     def finalize(self, x: Array, t_last: Array) -> Array: ...
 
@@ -151,7 +157,7 @@ class DenseEngine:
         return jnp.where(valid, mu, 0.0)
 
     def apply_jump(self, key, x, rates, dt, *, linear=False, rates_b=None,
-                   coeff_a=1.0, coeff_b=0.0, t=None):
+                   coeff_a=1.0, coeff_b=0.0, t=None, valid=None):
         s = self.n_states
         rates = _combine(rates, rates_b, coeff_a, coeff_b)
         dt = _match_cols(dt, rates.ndim)  # scalar, or [B] per-slot steps
@@ -164,11 +170,14 @@ class DenseEngine:
             p_stay = jnp.maximum(1.0 - p.sum(-1), 0.0)
             p_full = jnp.concatenate([p, p_stay[:, None]], axis=1)
             y = rcategorical(key, jnp.log(p_full + 1e-30))
-            return jnp.where(y == s, x, y).astype(x.dtype)
+            stay = (y == s) if valid is None else ((y == s) | ~valid)
+            return jnp.where(stay, x, y).astype(x.dtype)
         # tau-leap update x + sum_nu K_nu * nu with K_nu ~ Poisson(mu_nu dt).
         nu = jnp.arange(-(s - 1), s)
         k = rpoisson(key, jnp.maximum(rates * dt, 0.0))
         delta = (k * nu[None, :]).sum(axis=1)
+        if valid is not None:
+            delta = jnp.where(valid, delta, 0)
         return jnp.clip(x + delta, 0, s - 1).astype(x.dtype)
 
     def finalize(self, x, t_last):
@@ -251,6 +260,7 @@ def _unmask_update(
     mask_id: int,
     exponential: bool = True,
     lam: Optional[Array] = None,
+    valid: Optional[Array] = None,
 ) -> Array:
     """Shared jump applicator for masked diffusion.
 
@@ -259,7 +269,8 @@ def _unmask_update(
     linearized `sum_y rates * dt` when exponential=False, i.e. the Euler kernel),
     revealing y ~ Categorical(rates).  dt may be scalar or [B] per-slot.
     ``lam`` overrides the vocab reduction with a precomputed/analytic total
-    intensity (only consulted at masked positions).
+    intensity (only consulted at masked positions).  Rows where ``valid`` [B]
+    is False never jump.
     """
     k_jump, k_tok = split_key(key)
     if lam is None:
@@ -269,12 +280,15 @@ def _unmask_update(
     is_masked = x == mask_id
     u = runiform(k_jump, x.shape)
     do_jump = is_masked & (u < p_jump)
+    if valid is not None:
+        do_jump &= _match_cols(valid, x.ndim)
     y = _categorical_from_rates(k_tok, rates)
     return jnp.where(do_jump, y, x).astype(x.dtype)
 
 
 def _uniform_update(key: jax.Array, x: Array, rates: Array, dt: Array,
-                    exponential: bool = True) -> Array:
+                    exponential: bool = True,
+                    valid: Optional[Array] = None) -> Array:
     """Jump applicator for uniform diffusion: positions may jump repeatedly, but we
     apply at most one target change per step (the standard factorized-tau-leaping
     practice; multi-jump composition is ill-defined on categorical fibers)."""
@@ -283,8 +297,11 @@ def _uniform_update(key: jax.Array, x: Array, rates: Array, dt: Array,
     dt = _match_cols(dt, lam.ndim)
     p_jump = 1.0 - jnp.exp(-lam * dt) if exponential else jnp.clip(lam * dt, 0.0, 1.0)
     u = runiform(k_jump, x.shape)
+    do_jump = u < p_jump
+    if valid is not None:
+        do_jump &= _match_cols(valid, x.ndim)
     y = _categorical_from_rates(k_tok, rates)
-    return jnp.where(u < p_jump, y, x).astype(x.dtype)
+    return jnp.where(do_jump, y, x).astype(x.dtype)
 
 
 # ============================================================================ #
@@ -313,8 +330,8 @@ class MaskedEngine:
         return self.process.mask_id
 
     def configure(self, config) -> "MaskedEngine":
-        """Fold the config's (or the deprecated global) fused flag into the engine."""
-        fused = self.fused or config.fused or fused_jump_default()
+        """Fold the config's fused flag into the engine."""
+        fused = self.fused or config.fused
         if fused == self.fused:
             return self
         return dataclasses.replace(self, fused=fused)
@@ -337,10 +354,13 @@ class MaskedEngine:
         return self.process.backward_rates_masked(probs, t) * is_masked
 
     def apply_jump(self, key, x, rates, dt, *, linear=False, rates_b=None,
-                   coeff_a=1.0, coeff_b=0.0, t=None):
+                   coeff_a=1.0, coeff_b=0.0, t=None, valid=None):
         if self.fused and not linear:
+            active = x == self.mask_id
+            if valid is not None:
+                active &= _match_cols(valid, x.ndim)
             return _fused_jump_apply(key, x, rates, rates_b, coeff_a, coeff_b,
-                                     dt, active=(x == self.mask_id))
+                                     dt, active=active)
         lam = None
         if rates_b is None and t is not None:
             # Masked single-rate identity: rates = unmask_rate(t) * probs at
@@ -353,7 +373,7 @@ class MaskedEngine:
                 x.shape)
         rates = _combine(rates, rates_b, coeff_a, coeff_b)
         return _unmask_update(key, x, rates, dt, self.mask_id,
-                              exponential=not linear, lam=lam)
+                              exponential=not linear, lam=lam, valid=valid)
 
     def finalize(self, x, t_last):
         # Early stopping at t_stop can leave rare masks; greedy-fill them
@@ -401,8 +421,8 @@ class UniformEngine:
     fused: bool = False
 
     def configure(self, config) -> "UniformEngine":
-        """Fold the config's (or the deprecated global) fused flag into the engine."""
-        fused = self.fused or config.fused or fused_jump_default()
+        """Fold the config's fused flag into the engine."""
+        fused = self.fused or config.fused
         if fused == self.fused:
             return self
         return dataclasses.replace(self, fused=fused)
@@ -423,12 +443,15 @@ class UniformEngine:
         return r * (1.0 - self_hot)
 
     def apply_jump(self, key, x, rates, dt, *, linear=False, rates_b=None,
-                   coeff_a=1.0, coeff_b=0.0, t=None):
+                   coeff_a=1.0, coeff_b=0.0, t=None, valid=None):
         if self.fused and not linear:
+            active = (jnp.ones(x.shape, bool) if valid is None
+                      else jnp.broadcast_to(_match_cols(valid, x.ndim), x.shape))
             return _fused_jump_apply(key, x, rates, rates_b, coeff_a, coeff_b,
-                                     dt, active=jnp.ones(x.shape, bool))
+                                     dt, active=active)
         rates = _combine(rates, rates_b, coeff_a, coeff_b)
-        return _uniform_update(key, x, rates, dt, exponential=not linear)
+        return _uniform_update(key, x, rates, dt, exponential=not linear,
+                               valid=valid)
 
     def finalize(self, x, t_last):
         return x

@@ -1,0 +1,214 @@
+"""SlotPool: occupancy-aware executor over a per-slot ``SolverState``.
+
+The serving regime prices every NFE as one score forward over however many
+rows are in the batch, so a pool that advances all ``capacity`` slots when
+only a handful are running pays for empty rows.  ``SlotPool`` keeps the full
+per-slot state as the source of truth and executes each tick on a *compacted*
+view instead:
+
+* **bucket ladder** — a fixed, sorted tuple of pool widths (powers of two,
+  capped at the capacity).  Each tick the RUNNING slots are gathered into the
+  smallest covering bucket, advanced there, and scattered back.  Because jit
+  specializes on shapes, the executor compiles at most ``len(ladder)``
+  ``advance_many`` executables per (run context, stride) — never one per
+  occupancy pattern (guarded by tests via :func:`state.advance_cache_size`);
+* **gather/compact/scatter** — pytree-generic over the state's per-slot
+  leaves (``x``/``step``/``t``/``rng``/``target``); shared leaves
+  (``times``/``aux``) are defensively copied into the bucket so
+  ``advance_many``'s buffer donation can never free an array the pool still
+  holds.  Bucket rows beyond the active count are *padding*: they gather
+  free/drained slots, whose ``step >= target`` keeps them frozen, and the
+  per-slot ``valid`` mask threads them straight into the fused kernel's
+  per-row ``active`` operand so they do no jump work.  Padding indices must be
+  real, distinct slot ids so the scatter-back is a plain distinct-index write;
+* **slot-masked, batched finalize** — drained rows are finalized in one
+  forward over the smallest covering bucket (``finalize_rows``), not a
+  whole-pool pass per drain; callers may accumulate rows across ticks and
+  flush once.
+
+Bit-identity: engines are row-independent and every per-slot draw comes from
+that slot's own key, so a slot's trajectory does not depend on which bucket
+(or neighbor set) it rode in — the compacted executor is bit-identical per
+slot to advancing the dense pool, which the serving tests assert for every
+stepwise solver on the masked and uniform engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .state import (
+    SolverState,
+    admit_slot,
+    advance_many,
+    run_context,
+    slot_done,
+)
+
+Array = jnp.ndarray
+
+#: the SolverState leaves carrying one row per slot (everything else —
+#: times/aux/ctx — is shared across the pool).
+_PER_SLOT_FIELDS = ("x", "step", "t", "rng", "target")
+
+
+def default_bucket_ladder(capacity: int) -> Tuple[int, ...]:
+    """Powers of two up to (and always including) ``capacity``.
+
+    e.g. capacity 8 -> (1, 2, 4, 8); capacity 6 -> (1, 2, 4, 6).
+    """
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    ladder: List[int] = []
+    w = 1
+    while w < capacity:
+        ladder.append(w)
+        w *= 2
+    ladder.append(capacity)
+    return tuple(ladder)
+
+
+@jax.jit
+def _gather(state: SolverState, perm: Array) -> SolverState:
+    """Rows ``perm`` of the per-slot leaves as a bucket-width state.
+
+    Shared leaves are copied: the bucket is fed to the donating
+    ``advance_many``, and a donated alias of the pool's ``times``/``aux``
+    would delete buffers the full state still references.
+    """
+    repl = {f: getattr(state, f)[perm] for f in _PER_SLOT_FIELDS}
+    repl["times"] = jnp.copy(state.times)
+    repl["aux"] = jax.tree_util.tree_map(jnp.copy, state.aux)
+    return dataclasses.replace(state, **repl)
+
+
+@jax.jit
+def _scatter(state: SolverState, sub: SolverState, perm: Array) -> SolverState:
+    """Write the bucket's per-slot rows back at ``perm`` (distinct indices)."""
+    repl = {f: getattr(state, f).at[perm].set(getattr(sub, f))
+            for f in _PER_SLOT_FIELDS}
+    return dataclasses.replace(state, **repl)
+
+
+@jax.jit
+def _finalize_rows(state: SolverState, x: Array) -> Array:
+    """Engine finalize over an arbitrary row batch at the state's t_stop."""
+    return run_context(state).engine.finalize(x, state.times[-1])
+
+
+class SlotPool:
+    """Bucketed compaction executor over a per-slot :class:`SolverState`.
+
+    The pool owns the full-capacity state (``self.state``); schedulers decide
+    *which* slots run and *how many* steps, the pool decides how to execute
+    that as compiled work.  ``advance_compacted`` is the occupancy-aware path;
+    ``advance_all`` is the legacy dense path kept as the parity baseline.
+    """
+
+    def __init__(self, state: SolverState,
+                 bucket_ladder: Optional[Sequence[int]] = None):
+        if not state.per_slot:
+            raise ValueError("SlotPool requires a per-slot state "
+                             "(init_state(..., per_slot=True))")
+        self.state = state
+        self.capacity = int(state.step.shape[0])
+        ladder = (default_bucket_ladder(self.capacity)
+                  if bucket_ladder is None else tuple(sorted(bucket_ladder)))
+        if not ladder or ladder[-1] != self.capacity or ladder[0] < 1:
+            raise ValueError(
+                f"bucket_ladder must be widths in [1, capacity] ending at "
+                f"capacity={self.capacity}, got {ladder}")
+        self.bucket_ladder = ladder
+
+    # ------------------------------------------------------------------ sizing
+    def bucket_width(self, n_active: int) -> int:
+        """Smallest ladder width covering ``n_active`` rows."""
+        if not 1 <= n_active <= self.capacity:
+            raise ValueError(f"n_active must be in [1, {self.capacity}], "
+                             f"got {n_active}")
+        return next(w for w in self.bucket_ladder if w >= n_active)
+
+    # --------------------------------------------------------------- execution
+    def advance_compacted(self, slots: Sequence[int], pad_slots: Sequence[int],
+                          k: int) -> Tuple[SolverState, np.ndarray]:
+        """Advance ``slots`` by ``k`` solver steps inside the smallest bucket.
+
+        ``pad_slots`` supplies distinct free/drained slot ids used to fill the
+        bucket up to its ladder width (their frozen rows advance as no-ops and
+        scatter back unchanged).  Returns ``(bucket_state, perm)``: the
+        advanced bucket (its ``x``/``step`` rows serve streaming and drain
+        detection without fetching the full pool) and the [width] slot-id
+        permutation mapping bucket rows to pool slots (row j <-> slot
+        perm[j]; rows past ``len(slots)`` are padding).
+        """
+        n = len(slots)
+        w = self.bucket_width(n)
+        pad = list(pad_slots)[: w - n]
+        if len(pad) != w - n:
+            raise ValueError(
+                f"need {w - n} pad slots to fill a width-{w} bucket around "
+                f"{n} active slots, got {len(pad)}")
+        perm = np.asarray(list(slots) + pad, np.int32)
+        if len(set(perm.tolist())) != len(perm):
+            raise ValueError(f"slots and pad_slots must be distinct, got {perm}")
+        sub = _gather(self.state, jnp.asarray(perm))
+        sub = advance_many(sub, k)
+        self.state = _scatter(self.state, sub, jnp.asarray(perm))
+        return sub, perm
+
+    def advance_all(self, k: int) -> SolverState:
+        """Legacy dense tick: every slot (occupied or not) advances ``k``
+        steps with the full state's buffers donated.  Kept as the
+        bit-identity baseline the compacted executor is tested against."""
+        self.state = advance_many(self.state, k)
+        return self.state
+
+    # ---------------------------------------------------------------- finalize
+    def finalize_cost(self, n_rows: int) -> Tuple[int, int]:
+        """(forward launches, rows paid) a ``finalize_rows`` of ``n_rows``
+        costs — the single source of truth for finalize accounting (mirrors
+        the chunking/bucketing below)."""
+        passes, paid = 0, 0
+        for lo in range(0, n_rows, self.capacity):
+            passes += 1
+            paid += self.bucket_width(min(n_rows - lo, self.capacity))
+        return passes, paid
+
+    def finalize_rows(self, rows: Sequence[Array]) -> np.ndarray:
+        """One finalize forward over ``rows``, bucketed — the slot-masked
+        replacement for the whole-pool finalize-per-drain.
+
+        ``rows`` are frozen token rows (``state.x[slot]`` captures taken at
+        drain time — a drained slot's canvas never changes, so the capture
+        stays valid across ticks and the slot can be re-admitted immediately).
+        Each bucket is padded by repeating its first row (finalize is
+        deterministic per row; padding output is discarded); row sets larger
+        than the capacity run as several capacity-wide forwards so the
+        compile count stays bounded by the ladder.  Returns the
+        [len(rows), ...] finalized tokens on host.
+        """
+        n = len(rows)
+        if n == 0:
+            return np.empty((0,) + tuple(self.state.x.shape[1:]), np.int32)
+        rows = list(rows)
+        outs = []
+        for lo in range(0, n, self.capacity):
+            chunk = rows[lo: lo + self.capacity]
+            w = self.bucket_width(len(chunk))
+            x = jnp.stack(chunk + [chunk[0]] * (w - len(chunk)))
+            outs.append(np.asarray(_finalize_rows(self.state, x))[: len(chunk)])
+        return np.concatenate(outs, axis=0)
+
+    # ------------------------------------------------------------ pool ops
+    def admit(self, slot: int, key: jax.Array,
+              n_steps: Optional[int] = None) -> None:
+        """Restart ``slot`` from t = t_max under its own key (admit_slot)."""
+        self.state = admit_slot(self.state, slot, key, n_steps=n_steps)
+
+    def slot_done(self) -> np.ndarray:
+        """[capacity] bool — slots whose step budget is consumed (fetches)."""
+        return np.asarray(slot_done(self.state))

@@ -35,18 +35,21 @@ Array = jnp.ndarray
 class EulerSolver(Solver):
     """Linearized single-jump kernel: jump w.p. mu dt (clipped), else stay."""
 
-    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None,
+             valid=None):
         mu = engine.rates(x, t0)
-        return engine.apply_jump(key, x, mu, t0 - t1, linear=True, t=t0)
+        return engine.apply_jump(key, x, mu, t0 - t1, linear=True, t=t0,
+                                 valid=valid)
 
 
 @register_solver("tau_leaping")
 class TauLeapingSolver(Solver):
     """First-order tau-leap: the engine's exact Poisson/Bernoulli jump law."""
 
-    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None,
+             valid=None):
         mu = engine.rates(x, t0)
-        return engine.apply_jump(key, x, mu, t0 - t1, t=t0)
+        return engine.apply_jump(key, x, mu, t0 - t1, t=t0, valid=valid)
 
 
 @register_solver("tweedie")
@@ -57,7 +60,10 @@ class TweedieSolver(Solver):
         prep = getattr(engine, "tweedie_prepare", None)
         return prep(config) if prep is not None else None
 
-    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None,
+             valid=None):
+        # valid is ignored: the exact conditional never routes through
+        # apply_jump, and advance re-freezes invalid rows after the step.
         fn = getattr(engine, "tweedie_step", None)
         if fn is None:
             raise ValueError(
@@ -70,31 +76,37 @@ class _TwoStageSolver(Solver):
 
     nfe_per_step = 2
 
-    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None,
+             valid=None):
         k1, k2 = split_key(key)
         dt = t0 - t1
         rho = theta_section(t0, t1, config.theta)
         mu_n = engine.rates(x, t0)
-        x_star = engine.apply_jump(k1, x, mu_n, config.theta * dt, t=t0)
+        x_star = engine.apply_jump(k1, x, mu_n, config.theta * dt, t=t0,
+                                   valid=valid)
         # mu*(nu, y*): engines zero intensities at states that admit no further
         # jumps in the intermediate state (e.g. positions already unmasked).
         mu_star = engine.rates(x_star, rho)
-        return self._stage2(k2, engine, x, x_star, mu_n, mu_star, dt, config)
+        return self._stage2(k2, engine, x, x_star, mu_n, mu_star, dt, config,
+                            valid=valid)
 
-    def _stage2(self, key, engine, x, x_star, mu_n, mu_star, dt, config):
+    def _stage2(self, key, engine, x, x_star, mu_n, mu_star, dt, config, *,
+                valid=None):
         raise NotImplementedError
 
 
 @register_solver("theta_rk2")
 class ThetaRK2Solver(_TwoStageSolver):
-    def _stage2(self, key, engine, x, x_star, mu_n, mu_star, dt, config):
+    def _stage2(self, key, engine, x, x_star, mu_n, mu_star, dt, config, *,
+                valid=None):
         c1, c2 = rk2_coefficients(config.theta)
         # Stage 2 restarts FROM y_{s_n} for the full dt (Alg. 4) with the
         # clipped rate (c1 mu_n + c2 mu*)_+ (practical Alg. 4 clip).  Stage-1
         # jumps are discarded unless re-drawn; this matches the algorithm as
         # written (Prop. 4.2).
         return engine.apply_jump(key, x, mu_n, dt,
-                                 rates_b=mu_star, coeff_a=c1, coeff_b=c2)
+                                 rates_b=mu_star, coeff_a=c1, coeff_b=c2,
+                                 valid=valid)
 
 
 @register_solver("theta_trapezoidal")
@@ -105,12 +117,14 @@ class ThetaTrapezoidalSolver(_TwoStageSolver):
         if config.theta >= 1.0:
             raise ValueError("theta-trapezoidal requires theta in (0, 1)")
 
-    def _stage2(self, key, engine, x, x_star, mu_n, mu_star, dt, config):
+    def _stage2(self, key, engine, x, x_star, mu_n, mu_star, dt, config, *,
+                valid=None):
         a1, a2 = trapezoidal_coefficients(config.theta)
         # Stage 2 continues FROM the intermediate state y*_rho for (1-theta) dt
         # with the extrapolated rate (a1 mu* - a2 mu_n)_+ (Alg. 2).
         return engine.apply_jump(key, x_star, mu_star, (1.0 - config.theta) * dt,
-                                 rates_b=mu_n, coeff_a=a1, coeff_b=-a2)
+                                 rates_b=mu_n, coeff_a=a1, coeff_b=-a2,
+                                 valid=valid)
 
 
 # ============================================================================ #
@@ -166,7 +180,10 @@ class ParallelDecodingSolver(Solver):
     #: per-slot budget override would evaluate it out of range.
     supports_step_budgets = False
 
-    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None,
+             valid=None):
+        # valid is ignored: confidence decoding re-masks rather than jumps, so
+        # there is no kernel work to skip; advance re-freezes invalid rows.
         mask_id = getattr(engine, "mask_id", None)
         score_fn = getattr(engine, "score_fn", None)
         if mask_id is None or score_fn is None:
@@ -240,5 +257,6 @@ class FHSSolver(Solver):
     def run_nfe(self, config, *, seq_len=None):
         return int(seq_len) if seq_len else 0
 
-    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None):
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None,
+             valid=None):
         raise ValueError("fhs has no per-step form; use sample()/run()")

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 import weakref
 from typing import Any, Optional
 
@@ -69,6 +70,10 @@ class _RunContext:
     solver: Any
     engine: Any
     config: SamplerConfig
+    #: whether solver.step accepts the per-slot ``valid`` row mask (custom
+    #: solvers registered before the mask existed may not; they still freeze
+    #: correctly via advance's keep-where).
+    passes_valid: bool = False
 
 
 _CONTEXTS: "weakref.WeakValueDictionary[tuple, _RunContext]" = (
@@ -86,7 +91,13 @@ def _intern_context(solver, engine, config) -> _RunContext:
     key = (type(solver), id(engine), config)
     ctx = _CONTEXTS.get(key)
     if ctx is None:
-        ctx = _RunContext(solver=solver, engine=engine, config=config)
+        try:
+            passes_valid = "valid" in inspect.signature(
+                solver.step).parameters
+        except (TypeError, ValueError):
+            passes_valid = False
+        ctx = _RunContext(solver=solver, engine=engine, config=config,
+                          passes_valid=passes_valid)
         _CONTEXTS[key] = ctx
     return ctx
 
@@ -254,8 +265,13 @@ def advance(state: SolverState) -> SolverState:
     i_c = jnp.minimum(i, state.target - 1)
     keys = fold_key(state.rng, i_c)                    # [B] per-slot step keys
     t0, t1 = _slot_interval(state, ctx.config, i_c, state.target)
+    # Frozen (drained / bucket-padding) rows are also masked inside the step:
+    # solvers thread `valid` down to apply_jump and the fused kernel's per-row
+    # active operand, so dead rows skip the jump math instead of computing a
+    # discarded update.  Per-slot key batches keep live rows' bits unchanged.
+    extra = {"valid": active} if ctx.passes_valid else {}
     x_new = ctx.solver.step(keys, ctx.engine, state.x, t0, t1, ctx.config,
-                            i=i_c, aux=state.aux)
+                            i=i_c, aux=state.aux, **extra)
     keep = active.reshape(active.shape + (1,) * (state.x.ndim - 1))
     return dataclasses.replace(
         state,
@@ -288,6 +304,16 @@ def advance_many(state: SolverState, k: int) -> SolverState:
     if k < 1:
         raise ValueError(f"advance_many requires k >= 1, got {k}")
     return _advance_scan(state, k)
+
+
+def advance_cache_size() -> int:
+    """Number of compiled ``advance_many`` executables alive in this process.
+
+    One executable exists per (run context, state shape, k) triple; the
+    bucketed ``SlotPool`` executor is expected to grow this by at most
+    ``len(bucket_ladder)`` per (context, stride) — guarded by tests.
+    """
+    return _advance_scan._cache_size()
 
 
 def finalize(state: SolverState) -> Array:

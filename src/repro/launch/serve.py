@@ -32,11 +32,22 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--run-to-completion", action="store_true",
                     help="legacy batching: admit only between complete runs")
-    ap.add_argument("--scheduler-stride", type=int, default=1,
+    ap.add_argument("--scheduler-stride", default="1",
                     help="solver steps per scheduler tick: the pool advances "
                          "K steps per device launch, admitting/fetching only "
-                         "at stride boundaries (1 = step-level streaming)")
+                         "at stride boundaries (1 = step-level streaming); "
+                         "'auto' adapts K per tick to the queue depth and "
+                         "the earliest remaining drain")
+    ap.add_argument("--dense-pool", action="store_true",
+                    help="disable bucketed compaction: advance all max-batch "
+                         "slots every tick (the legacy executor; tokens are "
+                         "bit-identical either way)")
+    ap.add_argument("--finalize-batch", type=int, default=1,
+                    help="drained slots to accumulate (across ticks) before "
+                         "one batched finalize forward finishes them")
     args = ap.parse_args()
+    stride = (args.scheduler_stride if args.scheduler_stride == "auto"
+              else int(args.scheduler_stride))
 
     cfg = get_config(args.arch, reduced=args.reduced)
     process = masked_process(cfg.vocab_size, loglinear_schedule())
@@ -48,7 +59,9 @@ def main() -> None:
         engine = ServingEngine(params, cfg, process, sampler,
                                max_batch=args.max_batch, seq_len=args.seq_len,
                                continuous=not args.run_to_completion,
-                               scheduler_stride=args.scheduler_stride)
+                               scheduler_stride=stride,
+                               compact=not args.dense_pool,
+                               finalize_batch=args.finalize_batch)
         t0 = time.time()
         for i in range(args.requests):
             engine.submit(Request(request_id=i, seq_len=args.seq_len,
@@ -69,9 +82,12 @@ def main() -> None:
           f"p95 {np.percentile(lat, 95):.2f}s  "
           f"(queue delay p50 {np.percentile(qd, 50):.2f}s  "
           f"p95 {np.percentile(qd, 95):.2f}s)")
-    print(f"slot occupancy {stats['occupancy']:.1%} over "
-          f"{stats['global_steps']} pool steps "
-          f"(scheduler stride {stats['scheduler_stride']})")
+    print(f"occupancy {stats['occupancy']:.1%} of {stats['paid_slot_steps']} "
+          f"paid slot-steps over {stats['global_steps']} pool steps "
+          f"(scheduler stride {stats['scheduler_stride']}, "
+          f"{'compacted' if stats['compact'] else 'dense'} pool, "
+          f"{stats['finalize_rows']} finalize rows in "
+          f"{stats['finalize_passes']} passes)")
     print("first sample head:", toks[0, :24].tolist())
 
 

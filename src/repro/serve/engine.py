@@ -1,29 +1,43 @@
-"""Continuous-batching sampling/serving engine.
+"""Continuous-batching sampling/serving engine over an occupancy-aware pool.
 
 The paper's serving regime prices every NFE as one score-network forward over
-the whole batch, so wall-clock throughput is set by how full each forward is.
-The engine therefore keeps a fixed pool of ``max_batch`` *slots* over a
-per-slot :class:`~repro.core.SolverState` and advances the whole pool one
-solver step at a time (one/two score forwards per step, depending on the
-scheme).  Requests move through ``QUEUED -> RUNNING -> FINISHED``:
+the rows in the batch, so wall-clock throughput is set by how much of each
+forward is *useful* work.  The engine keeps a fixed pool of ``max_batch``
+*slots* over a per-slot :class:`~repro.core.SolverState`, executed through a
+:class:`~repro.core.SlotPool`: each scheduler tick the RUNNING slots are
+compacted into the smallest covering bucket of a fixed power-of-two ladder
+and advanced there, so a nearly-empty pool pays for a narrow forward instead
+of a ``max_batch``-wide one (``compact=False`` keeps the legacy dense pool —
+the bit-identity baseline).  Requests move ``QUEUED -> RUNNING -> FINISHED``:
 
 * **admission** happens at any scheduler-tick boundary — a freed slot picks
   up the next queued request, which starts at t = t_max while its neighbors
   are mid-trajectory (the per-slot step/time/key fields make this sound);
 * each request samples under its **own PRNG key**, folded from
-  ``(seed, request_id)``, so results are independent of batch composition and
-  admission time;
+  ``(seed, request_id)``, so results are independent of batch composition,
+  admission time, AND of which bucket the slot rode in — compaction cannot
+  change a request's tokens (parity-tested per solver/engine/stride);
 * per-request accounting records NFE, queue delay (submit -> admission), and
   end-to-end latency (submit -> finish).
 
-``scheduler_stride`` sets how many solver steps one Python tick executes: the
-pool advances ``K`` steps as a single jitted, buffer-donated ``lax.scan``
-launch (:func:`~repro.core.advance_many`), and the host fetches step counters
-and runs admission only at stride boundaries — no per-step device sync
-survives on the hot path.  Stride 1 preserves the original per-step streaming
-semantics; stride ``K`` trades up to ``K - 1`` steps of admission latency per
-request for ~``K``x fewer dispatches/fetches per trajectory (tokens are
-unaffected either way: per-slot PRNG streams make results schedule-invariant).
+``scheduler_stride`` sets how many solver steps one Python tick executes
+(``advance_many`` under the hood); ``"auto"`` picks K per tick from the queue
+depth and the minimum remaining step budget among RUNNING slots — the next
+tick lands exactly on the earliest drain (rounded down to a power of two so
+the compile count stays bounded), taking long strides through quiet stretches
+and short ones when a drain (= an admission opportunity) or fresh arrivals
+are imminent.  Tokens are unaffected by any stride choice: per-slot PRNG
+streams make results schedule-invariant.
+
+**Finalize is slot-masked and batched.**  A slot that consumes its budget has
+a frozen canvas; the engine captures that row, frees the slot immediately
+(admission does not wait on finalize), and accumulates pending rows until
+``finalize_batch`` of them exist, the pool goes idle, or the oldest drain has
+waited ``finalize_batch`` ticks (so a straggler neighbor cannot head-of-line
+block a finished result) — then finishes them in ONE bucketed finalize
+forward (``SlotPool.finalize_rows``) instead of a whole-pool forward per
+drain.  ``finalize_batch=1`` still replaces the whole-pool pass with a
+drain-sized bucket; larger values batch across ticks.
 
 ``continuous=False`` selects the legacy run-to-completion discipline (a new
 batch is admitted only once every slot has drained) — kept as the benchmark
@@ -37,7 +51,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Callable, Deque, List, Optional, Tuple
+from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +61,7 @@ from repro.core import (
     DiffusionProcess,
     MaskedEngine,
     SamplerConfig,
-    admit_slot,
-    advance_many,
+    SlotPool,
     budget_supported,
     finalize,
     get_solver,
@@ -66,10 +79,11 @@ RUNNING = "RUNNING"
 FINISHED = "FINISHED"
 
 #: stream_cb(request_id, step_index, tokens_row) — called after every
-#: scheduler tick for each streaming RUNNING request.  The pool's tokens are
-#: fetched from device ONLY on ticks where at least one active slot has a
-#: callback registered (engine-wide ``stream_cb`` or per-request
-#: ``Request.stream_cb``); non-streaming traffic pays zero fetches.
+#: scheduler tick for each streaming RUNNING request.  Tokens are fetched
+#: from device ONLY on ticks where at least one active slot has a callback
+#: registered (engine-wide ``stream_cb`` or per-request ``Request.stream_cb``)
+#: — and under compaction only the active bucket's rows leave the device,
+#: never the whole pool.
 StreamFn = Callable[[int, int, np.ndarray], None]
 
 
@@ -103,6 +117,17 @@ class Result:
     steps: int = 0
 
 
+#: a drained request waiting for its batched finalize forward: the slot is
+#: already freed, the frozen token row rides along until the flush.
+@dataclasses.dataclass
+class _PendingFinish:
+    req: Request
+    submit_t: float
+    admit_t: float
+    row: jnp.ndarray
+    steps: int
+
+
 def make_score_fn(params: Params, cfg: ModelConfig,
                   extra_inputs: Optional[dict] = None) -> Callable:
     """Wrap the backbone as the solver-facing score function (RADD-style,
@@ -117,16 +142,29 @@ def make_score_fn(params: Params, cfg: ModelConfig,
 
 
 class ServingEngine:
-    """Fixed-shape batched diffusion sampling with step-boundary admission."""
+    """Fixed-capacity batched diffusion sampling with step-boundary admission
+    and occupancy-aware (bucketed) execution."""
 
     def __init__(self, params: Params, cfg: ModelConfig, process: DiffusionProcess,
                  sampler: SamplerConfig, max_batch: int = 8, seq_len: int = 256,
                  extra_inputs: Optional[dict] = None, continuous: bool = True,
                  stream_cb: Optional[StreamFn] = None,
-                 scheduler_stride: int = 1):
-        if scheduler_stride < 1:
-            raise ValueError(f"scheduler_stride must be >= 1, got "
-                             f"{scheduler_stride}")
+                 scheduler_stride: Union[int, str] = 1,
+                 compact: bool = True,
+                 finalize_batch: int = 1,
+                 auto_stride_max: int = 8,
+                 bucket_ladder: Optional[Sequence[int]] = None,
+                 solver_engine=None):
+        if scheduler_stride == "auto":
+            if auto_stride_max < 1:
+                raise ValueError(f"auto_stride_max must be >= 1, got "
+                                 f"{auto_stride_max}")
+        elif not (isinstance(scheduler_stride, int) and scheduler_stride >= 1):
+            raise ValueError(f"scheduler_stride must be >= 1 or 'auto', got "
+                             f"{scheduler_stride!r}")
+        if not 1 <= finalize_batch <= max_batch:
+            raise ValueError(f"finalize_batch must be in [1, max_batch="
+                             f"{max_batch}], got {finalize_batch}")
         self.params = params
         self.cfg = cfg
         self.process = process
@@ -136,18 +174,23 @@ class ServingEngine:
         self.continuous = continuous
         self.stream_cb = stream_cb
         self.scheduler_stride = scheduler_stride
+        self.compact = compact
+        self.finalize_batch = finalize_batch
+        self.auto_stride_max = auto_stride_max
+        #: solver steps the most recent tick executed (== scheduler_stride for
+        #: a static stride; the chosen K under "auto").
+        self.last_stride = 0
         self._queue: Deque[Tuple[Request, float]] = collections.deque()
         self._slot_req: List[Optional[Request]] = [None] * max_batch
         self._slot_times: List[Tuple[float, float]] = [(0.0, 0.0)] * max_batch
-        # accounting
-        self.requests_served = 0
-        self.global_steps = 0
-        self.finalize_passes = 0
-        self.stream_fetches = 0
-        self._active_slot_steps = 0
+        self._pending: List[_PendingFinish] = []
+        self._pending_age = 0
+        self.reset_stats()
 
-        score_fn = make_score_fn(params, cfg, extra_inputs)
-        self._solver_engine = MaskedEngine(process=process, score_fn=score_fn)
+        if solver_engine is None:
+            score_fn = make_score_fn(params, cfg, extra_inputs)
+            solver_engine = MaskedEngine(process=process, score_fn=score_fn)
+        self._solver_engine = solver_engine
         self._solver = get_solver(sampler.method)()
         self._stepwise = self._solver.supports_stepwise
         if self._stepwise:
@@ -156,22 +199,39 @@ class ServingEngine:
             state = init_state(jax.random.PRNGKey(0), self._solver_engine,
                                sampler, max_batch, seq_len, per_slot=True,
                                solver=self._solver)
-            self._state = dataclasses.replace(
+            state = dataclasses.replace(
                 state,
                 step=jnp.full((max_batch,), sampler.n_steps, jnp.int32),
                 t=jnp.broadcast_to(state.times[-1], (max_batch,)))
+            self._pool = SlotPool(state, bucket_ladder=bucket_ladder)
             # Host-side mirror of the step counters, refreshed once per tick
             # (stride boundary) — the ONLY per-tick device fetch on the
             # non-streaming path.
             self._steps_host = np.full((max_batch,), sampler.n_steps,
                                        np.int32)
-            self._finalize = jax.jit(finalize)
+            self._finalize = jax.jit(finalize)  # dense-pool (legacy) finalize
         else:
             # Whole-trajectory solvers (fhs) run monolithically per batch; the
             # batch key folds in every request's (seed, request_id).
             self._sample = jax.jit(
                 lambda key: sample(key, self._solver_engine, sampler,
                                    batch=max_batch, seq_len=seq_len))
+
+    @property
+    def _state(self):
+        """The pool's full per-slot SolverState (source of truth)."""
+        return self._pool.state
+
+    def reset_stats(self) -> None:
+        """Zero the pool-level counters (benchmarks call this after warmup
+        so compile-time ticks stay out of the measurement)."""
+        self.requests_served = 0
+        self.global_steps = 0
+        self.finalize_passes = 0
+        self.stream_fetches = 0
+        self._active_slot_steps = 0
+        self._paid_slot_steps = 0
+        self._finalize_rows = 0
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
@@ -200,8 +260,17 @@ class ServingEngine:
         return [s for s, r in enumerate(self._slot_req) if r is not None]
 
     @property
+    def free_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self._slot_req) if r is None]
+
+    @property
     def queued(self) -> int:
         return len(self._queue)
+
+    @property
+    def pending_finalize(self) -> int:
+        """Drained requests whose batched finalize has not flushed yet."""
+        return len(self._pending)
 
     def _slot_budget(self, slot: int) -> int:
         req = self._slot_req[slot]
@@ -220,21 +289,18 @@ class ServingEngine:
                 continue
             req, submit_t = self._queue.popleft()
             if self._stepwise:
-                self._state = admit_slot(self._state, slot,
-                                         self.request_key(req),
-                                         n_steps=req.n_steps)
+                self._pool.admit(slot, self.request_key(req),
+                                 n_steps=req.n_steps)
                 self._steps_host[slot] = 0
             req.status = RUNNING
             self._slot_req[slot] = req
             self._slot_times[slot] = (submit_t, now)
 
-    def _emit(self, slot: int, finish_t: float, tokens_row: np.ndarray) -> Result:
-        req = self._slot_req[slot]
-        submit_t, admit_t = self._slot_times[slot]
+    def _make_result(self, req: Request, submit_t: float, admit_t: float,
+                     finish_t: float, steps: int,
+                     tokens_row: np.ndarray) -> Result:
         req.status = FINISHED
-        self._slot_req[slot] = None
         self.requests_served += 1
-        steps = req.n_steps if req.n_steps is not None else self.sampler.n_steps
         return Result(
             request_id=req.request_id,
             tokens=np.asarray(tokens_row[: req.seq_len]),
@@ -244,51 +310,147 @@ class ServingEngine:
             steps=steps,
         )
 
+    def _emit_slot(self, slot: int, finish_t: float, steps: int,
+                   tokens_row: np.ndarray) -> Result:
+        """Finish the request occupying ``slot`` right now (dense/monolithic
+        paths; the compacted path emits from the pending-finalize buffer)."""
+        req = self._slot_req[slot]
+        submit_t, admit_t = self._slot_times[slot]
+        self._slot_req[slot] = None
+        return self._make_result(req, submit_t, admit_t, finish_t, steps,
+                                 tokens_row)
+
     def _slot_stream_cb(self, slot: int) -> Optional[StreamFn]:
         """The callback streaming this slot, if any (request's, else engine's)."""
         req = self._slot_req[slot]
         return req.stream_cb if req.stream_cb is not None else self.stream_cb
 
+    # ------------------------------------------------------------- scheduling
+    def _tick_stride(self, active: List[int]) -> int:
+        """Solver steps the next tick should run.
+
+        Static strides pass through.  ``"auto"`` aims the tick at the
+        earliest drain among RUNNING slots (a drain is the next admission
+        opportunity, so overshooting it only pays frozen rows), rounded down
+        to a power of two so distinct compiled scan lengths stay O(log).
+        With an empty queue the cap is halved: nobody is waiting inside the
+        engine, so shorter ticks keep admission latency low for arrivals the
+        host has not submitted yet.
+        """
+        if self.scheduler_stride != "auto":
+            return self.scheduler_stride
+        remaining = min(self._slot_budget(s) - int(self._steps_host[s])
+                        for s in active)
+        cap = (self.auto_stride_max if self._queue
+               else max(1, self.auto_stride_max // 2))
+        remaining = max(1, min(remaining, cap))
+        return 1 << (remaining.bit_length() - 1)
+
+    def _flush_pending(self) -> List[Result]:
+        """Finish every pending drained request in one bucketed finalize
+        forward (slot-masked: only the drained rows run, padded to the
+        smallest ladder width — never the whole pool)."""
+        if not self._pending:
+            return []
+        rows = [p.row for p in self._pending]
+        tokens = self._pool.finalize_rows(rows)
+        passes, paid = self._pool.finalize_cost(len(rows))
+        self.finalize_passes += passes
+        self._finalize_rows += paid
+        finish_t = time.time()
+        out = [self._make_result(p.req, p.submit_t, p.admit_t, finish_t,
+                                 p.steps, tokens[j])
+               for j, p in enumerate(self._pending)]
+        self._pending.clear()
+        self._pending_age = 0
+        return out
+
     def step(self) -> List[Result]:
-        """One scheduler tick: admit, advance the pool by ``scheduler_stride``
-        solver steps in a single device launch, return newly finished."""
+        """One scheduler tick: admit, compact the RUNNING slots into a
+        bucket, advance it ``scheduler_stride`` solver steps in one device
+        launch, accumulate drains, and flush the batched finalize when due.
+        Returns newly finished requests (drain order)."""
         if not self._stepwise:
             return self._run_monolithic()
         self._admit()
         active = self.active_slots
         if not active:
-            return []
-        stride = self.scheduler_stride
-        self._state = advance_many(self._state, stride)
-        self.global_steps += stride
+            return self._flush_pending()
+        stride = self._tick_stride(active)
+        self.last_stride = stride
 
-        # One host fetch of the step counters per tick; the delta against the
-        # host mirror is exactly the solver steps each slot executed (slots
-        # that drained mid-stride froze and stop counting).
-        steps = np.asarray(self._state.step)
-        self._active_slot_steps += int((steps - self._steps_host).sum())
-        self._steps_host = steps.copy()  # writable: _admit zeroes freed slots
+        if self.compact:
+            sub, perm = self._pool.advance_compacted(active, self.free_slots,
+                                                     stride)
+            width = len(perm)
+            # One host fetch of the bucket's step counters per tick; the
+            # delta against the host mirror is exactly the solver steps each
+            # slot executed (a slot draining mid-stride freezes and stops
+            # counting).  Padding rows are frozen free slots: delta 0.
+            steps_sub = np.asarray(sub.step)
+            for j, slot in enumerate(perm[: len(active)]):
+                self._active_slot_steps += int(steps_sub[j]
+                                               - self._steps_host[slot])
+                self._steps_host[slot] = steps_sub[j]
+            x_view, row_of = sub.x, {int(s): j for j, s in enumerate(perm)}
+        else:
+            self._pool.advance_all(stride)
+            width = self.max_batch
+            steps_all = np.asarray(self._state.step)
+            self._active_slot_steps += int((steps_all - self._steps_host).sum())
+            self._steps_host = steps_all.copy()  # writable: _admit zeroes slots
+            x_view, row_of = self._state.x, {s: s for s in range(self.max_batch)}
+        self.global_steps += stride
+        self._paid_slot_steps += width * stride
 
         streaming = [(s, cb) for s, cb in
                      ((s, self._slot_stream_cb(s)) for s in active)
                      if cb is not None]
         if streaming:
-            # Tokens leave the device only when somebody is listening.
+            # Tokens leave the device only when somebody is listening — and
+            # only the executed bucket's rows, not the whole pool.
             self.stream_fetches += 1
-            x_host = np.asarray(jax.device_get(self._state.x))
+            x_host = np.asarray(jax.device_get(x_view))
             for slot, cb in streaming:
                 req = self._slot_req[slot]
-                cb(req.request_id, int(steps[slot]), x_host[slot, : req.seq_len])
+                cb(req.request_id, int(self._steps_host[slot]),
+                   x_host[row_of[slot], : req.seq_len])
 
-        done = [s for s in active if steps[s] >= self._slot_budget(s)]
+        done = [s for s in active
+                if self._steps_host[s] >= self._slot_budget(s)]
+        if self.compact:
+            # Capture the frozen rows, free the slots NOW (admission never
+            # waits on finalize), and finish them in a batched forward once
+            # finalize_batch drains accumulated or the pool idles.
+            for slot in done:
+                req = self._slot_req[slot]
+                submit_t, admit_t = self._slot_times[slot]
+                self._pending.append(_PendingFinish(
+                    req=req, submit_t=submit_t, admit_t=admit_t,
+                    row=x_view[row_of[slot]],
+                    steps=int(self._steps_host[slot])))
+                self._slot_req[slot] = None
+            if self._pending:
+                # Flush when the batch fills, the pool idles, OR the oldest
+                # drain has waited finalize_batch ticks — a long-running
+                # neighbor must not head-of-line-block a finished request's
+                # result (and its reported latency) indefinitely.
+                self._pending_age += 1
+                if (len(self._pending) >= self.finalize_batch
+                        or not self.active_slots
+                        or self._pending_age > self.finalize_batch):
+                    return self._flush_pending()
+            return []
         if not done:
             return []
-        # One whole-pool finalize forward per finishing step (shape-stable for
-        # jit); counted separately in stats() since it is off-grid work.
+        # Legacy dense pool: one whole-pool finalize forward per finishing
+        # tick (shape-stable for jit); counted as off-grid work in stats().
         self.finalize_passes += 1
+        self._finalize_rows += self.max_batch
         tokens = np.asarray(jax.device_get(self._finalize(self._state)))
         finish_t = time.time()
-        return [self._emit(slot, finish_t, tokens[slot]) for slot in done]
+        return [self._emit_slot(slot, finish_t, int(self._steps_host[slot]),
+                                tokens[slot]) for slot in done]
 
     def _run_monolithic(self) -> List[Result]:
         """Legacy whole-batch run for solvers without a stepwise form (fhs)."""
@@ -306,34 +468,45 @@ class ServingEngine:
         # sampler's n_steps, which whole-trajectory solvers ignore.
         self.global_steps += result.nfe
         self._active_slot_steps += len(active) * result.nfe
+        self._paid_slot_steps += self.max_batch * result.nfe
         finish_t = time.time()
-        out = []
-        for slot in active:
-            res = self._emit(slot, finish_t, tokens[slot])
-            res = dataclasses.replace(res, nfe=result.nfe, steps=result.nfe)
-            out.append(res)
-        return out
+        return [self._emit_slot(slot, finish_t, result.nfe, tokens[slot])
+                for slot in active]
 
     def run_all(self) -> List[Result]:
-        """Serve until the queue and every slot have drained (completion order)."""
+        """Serve until the queue, every slot, and the pending-finalize buffer
+        have drained (completion order)."""
         results: List[Result] = []
         while self._queue or self.active_slots:
             results.extend(self.step())
+        results.extend(self._flush_pending())
         return results
 
     def stats(self) -> dict:
-        """Pool-level accounting: forwards spent vs. slot-steps actually used."""
-        capacity = self.global_steps * self.max_batch
+        """Pool-level accounting: forwards actually paid vs. useful work.
+
+        ``paid_slot_steps`` is the in-grid rows x steps the device really
+        executed (bucket width x stride per tick — compaction shrinks it as
+        the pool empties); ``occupancy`` is useful slot-steps over that, so
+        it stays meaningful when the pool width changes mid-trajectory.
+        Finalize forwards are off-grid and tracked separately as
+        ``finalize_passes`` (launches) / ``finalize_rows`` (rows paid).
+        """
+        paid = self._paid_slot_steps
         return {
             "requests_served": self.requests_served,
             "global_steps": self.global_steps,
-            # in-grid solver forwards + the whole-pool finalize forwards
+            # in-grid solver forward launches + the batched finalize launches
             "score_evals": (self.global_steps * self._solver.nfe_per_step
                             + self.finalize_passes),
             "finalize_passes": self.finalize_passes,
+            "finalize_rows": self._finalize_rows,
             "active_slot_steps": self._active_slot_steps,
-            "occupancy": (self._active_slot_steps / capacity) if capacity else 0.0,
+            "paid_slot_steps": paid,
+            "occupancy": (self._active_slot_steps / paid) if paid else 0.0,
             "scheduler_stride": self.scheduler_stride,
+            "last_stride": self.last_stride,
+            "compact": self.compact,
             "stream_fetches": self.stream_fetches,
         }
 

@@ -1,10 +1,18 @@
-"""Serving engine: continuous batching, request lifecycle, AR generation path."""
+"""Serving engine: continuous batching, occupancy-aware (bucketed) execution,
+request lifecycle, AR generation path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SamplerConfig, loglinear_schedule, masked_process
+from repro.core import (
+    MaskedEngine,
+    SamplerConfig,
+    UniformEngine,
+    loglinear_schedule,
+    masked_process,
+    uniform_process,
+)
 from repro.models import init_params
 from repro.models.config import ModelConfig
 from repro.serve import (
@@ -276,9 +284,246 @@ def test_run_to_completion_mode(params):
     assert [r.request_id for r in results] == [0, 1]
     results += eng.run_all()
     assert [r.request_id for r in results] == [0, 1, 2]
-    # request 2 ran alone in the second run -> 4 pool steps, occupancy 3/4...
+    # request 2 ran alone in the second run, where compaction shrinks the
+    # pool to a width-1 bucket: 2*2 + 2*1 = 6 paid slot-steps, all useful.
     assert eng.stats()["global_steps"] == 4
+    assert eng.stats()["paid_slot_steps"] == 6
+    assert eng.stats()["occupancy"] == pytest.approx(1.0)
+
+    # The dense pool pays the empty neighbor row for the whole second run.
+    eng = make_engine(params, n_steps=2, max_batch=2, continuous=False,
+                      compact=False)
+    for i in range(3):
+        eng.submit(Request(request_id=i, seq_len=16, seed=i))
+    eng.run_all()
+    assert eng.stats()["paid_slot_steps"] == 8
     assert eng.stats()["occupancy"] == pytest.approx(0.75)
+
+
+# --------------------------------------------------------------------------- #
+# Occupancy-aware executor: bucketed compaction, batched finalize, auto stride
+# --------------------------------------------------------------------------- #
+
+_PI = jnp.asarray(np.random.default_rng(3).dirichlet(
+    np.ones(CFG.vocab_size) * 2.0), jnp.float32)
+
+
+def _iid_masked_engine():
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    return MaskedEngine(
+        process=proc,
+        score_fn=lambda toks, t: jnp.broadcast_to(
+            _PI, toks.shape + (CFG.vocab_size,)))
+
+
+def _iid_uniform_engine():
+    uproc = uniform_process(CFG.vocab_size, loglinear_schedule())
+
+    def ratio_fn(tokens, t):
+        # t may be a scalar or a per-slot [B] vector (serving pool).
+        a = jnp.asarray(uproc.schedule.alpha(t))
+        a = a.reshape(a.shape + (1,) * (tokens.ndim + 1 - a.ndim))
+        pt = jnp.broadcast_to(a * _PI + (1 - a) / CFG.vocab_size,
+                              tokens.shape + (CFG.vocab_size,))
+        own = jnp.take_along_axis(pt, tokens[..., None], axis=-1)
+        return pt / own
+
+    return UniformEngine(process=uproc, score_fn=ratio_fn)
+
+
+MASKED_SOLVERS = ["euler", "tau_leaping", "tweedie", "theta_rk2",
+                  "theta_trapezoidal", "parallel_decoding"]
+UNIFORM_SOLVERS = ["euler", "tau_leaping", "theta_rk2", "theta_trapezoidal"]
+
+
+@pytest.mark.parametrize(
+    "engine_kind,method",
+    [("masked", m) for m in MASKED_SOLVERS]
+    + [("uniform", m) for m in UNIFORM_SOLVERS])
+def test_compacted_scheduler_token_parity(engine_kind, method, params):
+    """The bucketed/compacted scheduler is bit-identical per request to the
+    dense pool for every stepwise solver x engine x stride (1 / K / auto)."""
+    solver_eng = (_iid_masked_engine() if engine_kind == "masked"
+                  else _iid_uniform_engine())
+    budgets_ok = method != "parallel_decoding"  # n_steps-coupled schedule
+
+    def serve(**kw):
+        eng = ServingEngine(
+            params, CFG, solver_eng.process,
+            SamplerConfig(method=method, n_steps=3, theta=0.4),
+            max_batch=3, seq_len=10, solver_engine=solver_eng, **kw)
+        for i in range(5):
+            n = ((2 if i % 2 else 5) if budgets_ok else None)
+            eng.submit(Request(request_id=i, seq_len=10, seed=i, n_steps=n))
+        return {r.request_id: r for r in eng.run_all()}
+
+    base = serve(compact=False)
+    for stride in (1, 2, "auto"):
+        got = serve(compact=True, scheduler_stride=stride, finalize_batch=2)
+        assert base.keys() == got.keys()
+        for rid in base:
+            assert (base[rid].tokens == got[rid].tokens).all(), (method, stride)
+            assert base[rid].steps == got[rid].steps
+            assert base[rid].nfe == got[rid].nfe
+
+
+def test_bucketed_compile_guard(params):
+    """The compacted executor compiles at most len(bucket_ladder) advance_many
+    executables per (context, stride), however occupancy fluctuates."""
+    from repro.core.solvers.state import advance_cache_size
+
+    solver_eng = _iid_masked_engine()
+    eng = ServingEngine(params, CFG, solver_eng.process,
+                        SamplerConfig(method="tau_leaping", n_steps=4),
+                        max_batch=8, seq_len=10, solver_engine=solver_eng,
+                        scheduler_stride=2)
+    assert eng._pool.bucket_ladder == (1, 2, 4, 8)
+    before = advance_cache_size()
+    # Trickle arrivals with mixed budgets so the active count (and therefore
+    # the bucket width) sweeps up and down across ticks.
+    for i in range(12):
+        eng.submit(Request(request_id=i, seq_len=10, seed=i,
+                           n_steps=1 + (i % 4)))
+        eng.step()
+    eng.run_all()
+    assert advance_cache_size() - before <= len(eng._pool.bucket_ladder)
+
+
+def test_budget_one_requests_compact(params):
+    """n_steps=1 requests admit, run their single step, and finalize —
+    identically on the dense and compacted pools (any stride)."""
+    def serve(**kw):
+        eng = make_engine(params, n_steps=4, max_batch=2, **kw)
+        for i in range(4):
+            eng.submit(Request(request_id=i, seq_len=16, seed=i, n_steps=1))
+        return {r.request_id: r for r in eng.run_all()}
+
+    base = serve(compact=False)
+    for kw in (dict(), dict(scheduler_stride=3), dict(scheduler_stride="auto")):
+        got = serve(compact=True, **kw)
+        assert base.keys() == got.keys()
+        for rid in base:
+            assert (base[rid].tokens == got[rid].tokens).all()
+            assert got[rid].steps == 1
+
+
+def test_all_slots_drain_same_tick(params):
+    """A whole pool draining at once finishes in ONE bucketed finalize
+    forward, not one pass per slot."""
+    eng = make_engine(params, n_steps=2, max_batch=3, scheduler_stride=2)
+    for i in range(3):
+        eng.submit(Request(request_id=i, seq_len=16, seed=i))
+    results = eng.run_all()
+    assert sorted(r.request_id for r in results) == [0, 1, 2]
+    stats = eng.stats()
+    assert stats["finalize_passes"] == 1
+    assert stats["finalize_rows"] == 3      # one width-3 bucket (ladder cap)
+    assert stats["global_steps"] == 2       # one stride-2 tick
+
+
+def test_admission_into_vacated_slot_mid_stride(params):
+    """A slot that drains mid-stride is freed at the tick boundary and
+    re-admits a queued request while its neighbor is mid-trajectory — tokens
+    stay bit-identical to the dense pool."""
+    def serve(**kw):
+        eng = make_engine(params, n_steps=4, max_batch=2, **kw)
+        eng.submit(Request(request_id=0, seq_len=16, seed=0, n_steps=2))
+        eng.submit(Request(request_id=1, seq_len=16, seed=1, n_steps=6))
+        eng.submit(Request(request_id=2, seq_len=16, seed=2, n_steps=3))
+        out = {}
+        ticks = 0
+        while eng.queued or eng.active_slots or eng.pending_finalize:
+            for r in eng.step():
+                out[r.request_id] = r
+            ticks += 1
+        return out, ticks, eng
+
+    base, _, _ = serve(compact=False)
+    got, ticks, eng = serve(compact=True, scheduler_stride=4)
+    assert base.keys() == got.keys()
+    for rid in base:
+        assert (base[rid].tokens == got[rid].tokens).all()
+    # request 0 drained 2 steps into the first stride-4 tick; request 2 was
+    # admitted into its slot at the next boundary and ran to its own budget.
+    assert got[0].steps == 2 and got[2].steps == 3
+    assert ticks <= 3
+
+
+def test_cross_tick_finalize_batching(params):
+    """finalize_batch > 1 accumulates drains across ticks and finishes them
+    in one forward; the pool idling forces a flush."""
+    eng = make_engine(params, n_steps=3, max_batch=2, finalize_batch=2)
+    eng.submit(Request(request_id=0, seq_len=16, seed=0, n_steps=1))
+    eng.submit(Request(request_id=1, seq_len=16, seed=1, n_steps=3))
+    assert eng.step() == []                  # req 0 drained -> pending, held
+    assert eng.pending_finalize == 1
+    assert eng.step() == []                  # req 1 mid-flight
+    results = eng.step()                     # req 1 drains -> batch of 2 flushes
+    assert [r.request_id for r in results] == [0, 1]
+    assert eng.pending_finalize == 0
+    assert eng.stats()["finalize_passes"] == 1
+    assert eng.stats()["finalize_rows"] == 2
+
+
+def test_pending_finalize_age_bound(params):
+    """A straggler neighbor cannot head-of-line-block a drained request's
+    result past finalize_batch ticks — the batch flushes part-full."""
+    eng = make_engine(params, n_steps=8, max_batch=2, finalize_batch=2)
+    eng.submit(Request(request_id=0, seq_len=16, seed=0, n_steps=1))
+    eng.submit(Request(request_id=1, seq_len=16, seed=1, n_steps=8))
+    assert eng.step() == []                  # req 0 drains, batch of 1 held
+    assert eng.step() == []                  # age 2 == finalize_batch: held
+    results = eng.step()                     # age 3 > finalize_batch: flush
+    assert [r.request_id for r in results] == [0]
+    assert eng.pending_finalize == 0
+    rest = eng.run_all()
+    assert [r.request_id for r in rest] == [1]
+
+
+def test_auto_stride_lands_on_drains(params):
+    """scheduler_stride='auto' strides to the earliest drain (pow2-rounded):
+    6-step budgets run as a 4-tick then a 2-tick, not 6 host round-trips."""
+    eng = make_engine(params, n_steps=6, max_batch=2, scheduler_stride="auto")
+    eng.submit(Request(request_id=0, seq_len=16, seed=0))
+    eng.submit(Request(request_id=1, seq_len=16, seed=1))
+    ticks = []
+    while eng.queued or eng.active_slots or eng.pending_finalize:
+        eng.step()
+        ticks.append(eng.last_stride)
+    assert ticks == [4, 2]                  # empty queue caps at auto_max // 2
+    assert eng.stats()["global_steps"] == 6
+    assert eng.stats()["occupancy"] == 1.0
+
+
+def test_paid_rows_track_width_changes(params):
+    """Occupancy counts forwards actually paid: when the pool narrows after a
+    drain, the bucket (and the paid rows) narrow with it."""
+    eng = make_engine(params, n_steps=4, max_batch=4)
+    eng.submit(Request(request_id=0, seq_len=16, seed=0))             # 4 steps
+    eng.submit(Request(request_id=1, seq_len=16, seed=1, n_steps=2))  # 2 steps
+    eng.run_all()
+    stats = eng.stats()
+    # ticks 1-2 ride a width-2 bucket, ticks 3-4 a width-1 bucket
+    assert stats["paid_slot_steps"] == 2 * 2 + 2 * 1
+    assert stats["active_slot_steps"] == 6
+    assert stats["occupancy"] == pytest.approx(1.0)
+    assert stats["finalize_rows"] == 2      # two width-1 finalize buckets
+
+    dense = make_engine(params, n_steps=4, max_batch=4, compact=False)
+    dense.submit(Request(request_id=0, seq_len=16, seed=0))
+    dense.submit(Request(request_id=1, seq_len=16, seed=1, n_steps=2))
+    dense.run_all()
+    assert dense.stats()["paid_slot_steps"] == 4 * 4
+    assert dense.stats()["occupancy"] == pytest.approx(6 / 16)
+
+
+def test_scheduler_config_validation(params):
+    with pytest.raises(ValueError, match="scheduler_stride"):
+        make_engine(params, scheduler_stride="fast")
+    with pytest.raises(ValueError, match="finalize_batch"):
+        make_engine(params, finalize_batch=0)
+    with pytest.raises(ValueError, match="finalize_batch"):
+        make_engine(params, max_batch=4, finalize_batch=5)
 
 
 def test_fhs_serves_monolithically(params):

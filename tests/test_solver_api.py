@@ -16,11 +16,13 @@ from repro.core import (
     DenseEngine,
     MaskedEngine,
     SamplerConfig,
+    SlotPool,
     Solver,
     UniformEngine,
     admit_slot,
     advance,
     advance_many,
+    default_bucket_ladder,
     finalize,
     get_solver,
     init_state,
@@ -457,35 +459,137 @@ def test_nfe_accounting(toy, pi, rng_key):
     assert res.nfe == 17
 
 
-def test_set_fused_jump_shim_deprecated_but_effective(pi, rng_key):
-    from repro.core.solvers.config import fused_jump_default, set_fused_jump
+def test_set_fused_jump_removed(pi, rng_key):
+    """The process-global toggle is gone: calling it is a hard error naming
+    the replacement, and no global default leaks into engine configuration."""
+    from repro.core import set_fused_jump
+    from repro.core.solvers import config as solver_config
 
+    with pytest.raises(RuntimeError, match="SamplerConfig\\(fused=True\\)"):
+        set_fused_jump(True)
+    with pytest.raises(RuntimeError):
+        set_fused_jump()        # any call signature errors, none mutate state
+    assert not hasattr(solver_config, "fused_jump_default")
+    assert not hasattr(solver_config, "_FUSED_JUMP_DEFAULT")
+    # the explicit replacements still work and agree bit-for-bit
     proc = masked_process(V, loglinear_schedule())
     cfg = SamplerConfig(method="tau_leaping", n_steps=4)
     engine = MaskedEngine(process=proc, score_fn=iid_score_fn(pi))
-    fused_ref = np.asarray(sample(rng_key, engine, cfg, batch=8, seq_len=12,
-                                  ).tokens)
-    try:
-        with pytest.warns(DeprecationWarning):
-            set_fused_jump(True)
-        assert fused_jump_default() is True
-        # the global default is folded into the engine at sample() time
-        via_global = np.asarray(
-            sample_masked(rng_key, proc, iid_score_fn(pi), cfg, 8, 12))
-        via_flag = np.asarray(
-            sample(rng_key, dataclasses_replace_fused(engine), cfg,
-                   batch=8, seq_len=12).tokens)
-        assert (via_global == via_flag).all()
-    finally:
-        with pytest.warns(DeprecationWarning):
-            set_fused_jump(False)
-    # non-fused reference still well-formed
-    assert ((fused_ref >= 0) & (fused_ref < V)).all()
+    via_config = np.asarray(
+        sample(rng_key, engine, SamplerConfig(method="tau_leaping", n_steps=4,
+                                              fused=True),
+               batch=8, seq_len=12).tokens)
+    via_engine = np.asarray(
+        sample(rng_key, dataclasses_replace_fused(engine), cfg,
+               batch=8, seq_len=12).tokens)
+    assert (via_config == via_engine).all()
 
 
 def dataclasses_replace_fused(engine):
     import dataclasses
     return dataclasses.replace(engine, fused=True)
+
+
+# --------------------------------------------------------------------------- #
+# SlotPool: pytree-generic compaction over SolverState
+# --------------------------------------------------------------------------- #
+
+
+def test_default_bucket_ladder():
+    assert default_bucket_ladder(1) == (1,)
+    assert default_bucket_ladder(6) == (1, 2, 4, 6)
+    assert default_bucket_ladder(8) == (1, 2, 4, 8)
+    with pytest.raises(ValueError):
+        default_bucket_ladder(0)
+
+
+def test_slot_pool_compacted_parity_per_engine(toy, pi, rng_key):
+    """Gather -> advance_many -> scatter is bit-identical to the dense per-slot
+    advance on every engine family (SlotPool is state-space generic)."""
+    proc = masked_process(V, loglinear_schedule())
+    engines = [
+        ("dense", DenseEngine(toy), None),
+        ("masked", MaskedEngine(process=proc, score_fn=iid_score_fn(pi)), 12),
+    ]
+    for name, eng, seq_len in engines:
+        cfg = SamplerConfig(method="theta_trapezoidal", n_steps=4, theta=0.4)
+        init = lambda: init_state(rng_key, eng, cfg, 4, seq_len, per_slot=True)
+
+        ref_state = init()
+        ref_state = admit_slot(ref_state, 0, jax.random.PRNGKey(1), n_steps=3)
+        ref_state = admit_slot(ref_state, 2, jax.random.PRNGKey(2), n_steps=5)
+        for _ in range(5):
+            ref_state = advance(ref_state)
+        ref = np.asarray(finalize(ref_state))
+
+        pool = SlotPool(init())
+        pool.admit(0, jax.random.PRNGKey(1), n_steps=3)
+        pool.admit(2, jax.random.PRNGKey(2), n_steps=5)
+        pool.advance_compacted([0, 2], [1, 3], 3)    # width-2 bucket
+        pool.advance_compacted([2], [0], 2)          # slot 0 drained: width 1
+        assert pool.slot_done()[[0, 2]].all()
+        got_rows = pool.finalize_rows([pool.state.x[0], pool.state.x[2]])
+        got_full = np.asarray(finalize(pool.state))
+        assert (ref[0] == got_rows[0]).all() and (ref[0] == got_full[0]).all(), name
+        assert (ref[2] == got_rows[1]).all() and (ref[2] == got_full[2]).all(), name
+
+
+def test_slot_pool_padding_rows_scatter_back_unchanged(pi, rng_key):
+    """Bucket padding gathers frozen free slots; their pool rows are
+    untouched by the compacted tick."""
+    proc = masked_process(V, loglinear_schedule())
+    eng = MaskedEngine(process=proc, score_fn=iid_score_fn(pi))
+    cfg = SamplerConfig(method="tau_leaping", n_steps=3)
+    pool = SlotPool(init_state(rng_key, eng, cfg, 4, 8, per_slot=True))
+    # Drain every slot so slot 3 is frozen padding material.
+    for _ in range(3):
+        pool.state = advance(pool.state)
+    before = np.asarray(pool.state.x)
+    for slot in (0, 1, 2):
+        pool.admit(slot, jax.random.PRNGKey(9 + slot))
+    # 3 actives in a capacity-4 pool -> width-4 bucket with slot 3 as padding.
+    sub, perm = pool.advance_compacted([0, 1, 2], [3], 2)
+    assert perm.tolist() == [0, 1, 2, 3]
+    after = np.asarray(pool.state.x)
+    assert (after[3] == before[3]).all()    # padding row written back as-is
+    assert np.asarray(sub.step)[3] == np.asarray(pool.state.step)[3]
+
+
+def test_slot_pool_finalize_rows_chunks_above_capacity(pi, rng_key):
+    """More pending rows than the capacity finalize as several ladder-width
+    forwards with per-row results intact."""
+    proc = masked_process(V, loglinear_schedule())
+    eng = MaskedEngine(process=proc, score_fn=iid_score_fn(pi))
+    cfg = SamplerConfig(method="tau_leaping", n_steps=2)
+    st = init_state(rng_key, eng, cfg, 3, 8, per_slot=True)
+    for _ in range(2):
+        st = advance(st)
+    ref = np.asarray(finalize(st))
+    pool = SlotPool(st)
+    rows = [st.x[i] for i in (0, 1, 2, 0, 1)]    # 5 rows > capacity 3
+    got = pool.finalize_rows(rows)
+    assert got.shape[0] == 5
+    for j, i in enumerate((0, 1, 2, 0, 1)):
+        assert (got[j] == ref[i]).all()
+
+
+def test_slot_pool_validation(toy, pi, rng_key):
+    proc = masked_process(V, loglinear_schedule())
+    eng = MaskedEngine(process=proc, score_fn=iid_score_fn(pi))
+    cfg = SamplerConfig(method="tau_leaping", n_steps=2)
+    with pytest.raises(ValueError, match="per-slot"):
+        SlotPool(init_state(rng_key, eng, cfg, 4, 8))
+    st = init_state(rng_key, eng, cfg, 4, 8, per_slot=True)
+    with pytest.raises(ValueError, match="bucket_ladder"):
+        SlotPool(st, bucket_ladder=(1, 2))           # must end at capacity
+    pool = SlotPool(st)
+    # a width-4 bucket around 3 actives needs 1 pad slot
+    with pytest.raises(ValueError, match="pad slots"):
+        pool.advance_compacted([0, 1, 2], [], 1)
+    with pytest.raises(ValueError, match="distinct"):
+        pool.advance_compacted([0, 1, 2], [2], 1)
+    with pytest.raises(ValueError, match="n_active"):
+        pool.bucket_width(0)
 
 
 def test_engine_capability_errors(toy, pi, rng_key):
