@@ -77,6 +77,11 @@ def main() -> None:
                     help="machine-readable mirror of the CSV rows "
                          "(default: benchmarks/BENCH_solvers.json, the "
                          "committed perf-trajectory file; '' disables)")
+    ap.add_argument("--serve-skip-cluster", action="store_true",
+                    help="serve_throughput section without the sharded-"
+                         "cluster sweep (the cluster-smoke CI job owns that "
+                         "leg; serve-smoke passes this to avoid running the "
+                         "same sweep twice per push)")
     args = ap.parse_args()
 
     from . import (  # noqa: PLC0415
@@ -110,10 +115,13 @@ def main() -> None:
         if args.full else image_nfe.run,
         "kernels": lambda: kernels_bench.run(quick=not args.full),
         "roofline": roofline_report.run,
-        "serve_throughput": serve_throughput.run if args.full else (
+        "serve_throughput": (
+            lambda: serve_throughput.run(
+                cluster=not args.serve_skip_cluster)) if args.full else (
             lambda: serve_throughput.run(
                 n_requests=16, max_batch=4, short_steps=3, long_steps=12,
-                seq_len=16, load=1.67, trace_seed=0)),
+                seq_len=16, load=1.67, trace_seed=0,
+                cluster=not args.serve_skip_cluster)),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -28,6 +28,14 @@ the legacy dense pool, pricing requests/sec by the *paid* score-forward rows
 — the dense pool pays all ``max_batch`` rows per tick however empty it is —
 and asserting per-request token parity between the two.
 
+``cluster_sweep`` replays skewed and Poisson traces through the sharded
+``ServingCluster`` (one pool per data-parallel worker behind a router):
+join-shortest-queue vs round-robin under pinned stragglers, round-robin
+rescued by queue-level rebalancing, and scale-out (N workers vs 1) at
+saturation — all priced by the *critical shard* (the largest per-worker
+total of paid score-forward rows; shards run in parallel, so the most loaded
+one gates completion) and parity-checked against single-pool serving.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput --smoke
 """
 from __future__ import annotations
@@ -41,6 +49,7 @@ import jax
 import numpy as np
 
 from repro.core import (
+    MaskedEngine,
     SamplerConfig,
     advance,
     get_solver,
@@ -49,33 +58,20 @@ from repro.core import (
 )
 from repro.models import init_params
 from repro.models.config import ModelConfig
-from repro.serve import Request, ServingEngine
+from repro.serve import (
+    Request,
+    Router,
+    ServingCluster,
+    ServingEngine,
+    make_score_fn,
+)
+from repro.serve.trace import poisson_trace, skewed_trace  # noqa: F401 - shared
 
 
 def _model(vocab: int) -> ModelConfig:
     return ModelConfig(name="serve-bench", family="dense", n_layers=2,
                        d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
                        d_ff=128, vocab_size=vocab, dtype="float32")
-
-
-def poisson_trace(n_requests: int, max_batch: int, short_steps: int,
-                  long_steps: int, p_long: float = 0.3, load: float = 1.67,
-                  seed: int = 0):
-    """(arrival_times, step_budgets): Poisson arrivals, straggler budgets.
-
-    ``load`` is the offered load as a multiple of pool capacity (capacity =
-    max_batch slots / mean work per request); heavy traffic (> 1) keeps a
-    backlog so both modes are throughput-bound and requests/sec measures
-    sustained service rate.  ``p_long`` of the requests are stragglers
-    carrying the large budget.
-    """
-    rng = np.random.default_rng(seed)
-    budgets = np.where(rng.uniform(size=n_requests) < p_long,
-                       long_steps, short_steps)
-    gaps = rng.exponential(budgets.mean() / (max_batch * load),
-                           size=n_requests - 1)
-    arrivals = np.concatenate([[0.0], np.cumsum(gaps)])
-    return arrivals, budgets
 
 
 def replay(engine: ServingEngine, arrivals: np.ndarray, budgets: np.ndarray,
@@ -116,16 +112,26 @@ def replay(engine: ServingEngine, arrivals: np.ndarray, budgets: np.ndarray,
 def run(n_requests: int = 32, max_batch: int = 6, short_steps: int = 6,
         long_steps: int = 36, seq_len: int = 32, vocab: int = 23,
         method: str = "theta_trapezoidal", load: float = 1.43,
-        trace_seed: int = 1, stride: int = 4) -> list[str]:
+        trace_seed: int = 1, stride: int = 4,
+        cluster: bool = True) -> list[str]:
     """Returns csv rows (one per mode, plus the compacted-vs-dense occupancy
-    sweep) and prints the human-readable report."""
+    sweep and — unless ``cluster=False`` — the sharded-cluster sweep) and
+    prints the human-readable report."""
     rows, _ = run_with_speedups(n_requests, max_batch, short_steps, long_steps,
                                 seq_len, vocab, method, load, trace_seed,
                                 stride)
     sweep_rows, _ = occupancy_sweep(loads=(0.25, 0.5, 1.0),
                                     n_requests=min(n_requests, 24),
                                     seq_len=min(seq_len, 24), method=method)
-    return rows + sweep_rows
+    rows = rows + sweep_rows
+    if cluster:
+        # >= 24 requests: shorter traces leave the scale-out leg
+        # tail-dominated (the fleet drains the backlog before saturating).
+        cluster_rows, _ = cluster_sweep(
+            n_requests=max(min(n_requests, 32), 24),
+            seq_len=min(seq_len, 16), method=method)
+        rows = rows + cluster_rows
+    return rows
 
 
 def run_with_speedups(n_requests: int = 32, max_batch: int = 6,
@@ -307,6 +313,221 @@ def occupancy_sweep(loads=(0.25, 0.5, 1.0), n_requests: int = 24,
     return rows, speedups
 
 
+# --------------------------------------------------------------------------- #
+# Sharded cluster: router policies, rebalancing, scale-out
+# --------------------------------------------------------------------------- #
+
+
+def replay_cluster(router: Router, arrivals: np.ndarray, budgets: np.ndarray,
+                   seq_len: int, nfe_per_step: int):
+    """Drive a Router over a trace on a *parallel* virtual clock.
+
+    One cluster tick = every worker advances one solver step concurrently
+    (workers live on disjoint data-parallel shards), so the virtual clock
+    moves one step-unit per tick and jumps to the next arrival when the whole
+    fleet is empty.  The run's *cost* is the *critical shard*: the largest
+    per-worker total of paid score-forward rows (solver forwards + finalize
+    rows).  Each shard is its own device group, so its busy time is its paid
+    rows x the per-row device time, shards overlap fully, and the cluster's
+    service completion is gated by its most loaded shard — the straggler-
+    pile-up a queue-blind router creates is priced exactly there.  Idle
+    waiting between arrivals is excluded, as in ``occupancy_sweep``'s
+    row-priced model.
+
+    Returns ``(results, cost_units, span)``: the finished requests, the
+    critical-shard cost in row-units, and the arrival-to-last-finish span in
+    step-units.
+    """
+    pending = collections.deque(
+        (i, float(t), int(n)) for i, (t, n) in enumerate(zip(arrivals, budgets)))
+    clock = 0.0
+    finish = {}
+    results = []
+    while pending or router.busy:
+        while pending and pending[0][1] <= clock:
+            i, _, n = pending.popleft()
+            router.submit(Request(request_id=i, seq_len=seq_len, seed=i,
+                                  n_steps=n))
+        if not router.busy:
+            clock = max(clock, pending[0][1])  # idle until the next arrival
+            continue
+        done = router.step()
+        clock += 1.0
+        for r in done:
+            finish[r.request_id] = clock
+            results.append(r)
+    cost = max(st["paid_slot_steps"] * nfe_per_step + st["finalize_rows"]
+               for st in (w.engine.stats() for w in router.workers))
+    span = max(finish.values()) - float(arrivals[0])
+    return results, cost, span
+
+
+def cluster_sweep(n_workers: int = 4, max_batch: int = 2,
+                  n_requests: int = 24, short_steps: int = 3,
+                  long_steps: int = 24, seq_len: int = 16, vocab: int = 23,
+                  method: str = "theta_trapezoidal", skew_load: float = 0.5,
+                  sat_load: float = 4.0, trace_seed: int = 3,
+                  min_jsq_speedup: float = 1.3,
+                  min_scaling: float = 3.0) -> tuple[list[str], dict]:
+    """Router policies on a skewed straggler trace + scale-out at saturation.
+
+    **Skew leg** (offered load ``skew_load`` <= 0.5 of cluster capacity):
+    every ``n_workers``-th request is a straggler, so round-robin pins ALL
+    stragglers onto worker 0 — its queue piles up while the other workers
+    drain shorts and idle.  ``join_shortest_queue`` / ``least_remaining_nfe``
+    see the pile-up and route around it; ``round_robin+rebalance`` shows
+    queue-level rebalancing rescuing the blind policy.  The gate:
+    JSQ >= ``min_jsq_speedup`` x round-robin requests/sec (0 disables).
+
+    **Scale-out leg**: the same Poisson straggler trace at ``sat_load`` x
+    capacity (a standing backlog) through 1 worker vs ``n_workers`` workers
+    under ``least_remaining_nfe`` (the budget-aware policy packs shards
+    tightest, so this leg measures the fleet, not placement luck); the gate:
+    >= ``min_scaling`` x requests/sec (0 disables).
+
+    Every run's per-request tokens are asserted bit-identical to single-pool
+    serving — routing, rebalancing, and shard count change WHEN a request
+    runs, never its ``(seed, request_id)`` PRNG stream.  Rates are priced by
+    the parallel critical path (see :func:`replay_cluster`) with one per-row
+    device time calibrated at full width, so the gates carry no wall-clock
+    noise.
+
+    Returns (csv rows, {"jsq_vs_rr": ..., "scaling": ...}).
+    """
+    cfg = _model(vocab)
+    process = masked_process(cfg.vocab_size, loglinear_schedule())
+    sampler = SamplerConfig(method=method, n_steps=short_steps, theta=0.4)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    nfe_per_step = get_solver(method).nfe_per_step
+    # One solver engine for every cluster in the sweep: all workers and all
+    # policy legs share a single interned run context (one jit-trace family).
+    solver_engine = MaskedEngine(process=process,
+                                 score_fn=make_score_fn(params, cfg))
+    capacity = n_workers * max_batch
+
+    skew = skewed_trace(n_requests, capacity, short_steps, long_steps,
+                        period=n_workers, load=skew_load, seed=trace_seed)
+    sat = poisson_trace(n_requests, capacity, short_steps, long_steps,
+                        load=sat_load, seed=trace_seed)
+    n_stragglers = int((skew[1] == long_steps).sum())
+    print(f"cluster trace: {n_requests} requests over {n_workers} workers x "
+          f"{max_batch} slots, {n_stragglers} stragglers ({long_steps} vs "
+          f"{short_steps} steps) pinned to every {n_workers}th arrival")
+
+    def single_pool_tokens(budgets):
+        """(engine, {request_id: tokens}) from ONE ServingEngine — the parity
+        oracle (tokens depend only on (seed, request_id, n_steps), so one
+        pool is the ground truth for any fleet shape)."""
+        eng = ServingEngine(params, cfg, process, sampler,
+                            max_batch=max_batch, seq_len=seq_len,
+                            solver_engine=solver_engine)
+        for i, n in enumerate(budgets):
+            eng.submit(Request(request_id=i, seq_len=seq_len, seed=i,
+                               n_steps=int(n)))
+        return eng, {r.request_id: r.tokens for r in eng.run_all()}
+
+    base_engine, skew_tokens = single_pool_tokens(skew[1])
+    _, sat_tokens = single_pool_tokens(sat[1])
+    oracle = {id(skew): skew_tokens, id(sat): sat_tokens}
+
+    # Per-row device time, calibrated once at full pool width (as in
+    # occupancy_sweep): one advance() = nfe_per_step forwards over max_batch.
+    adv = jax.jit(advance)
+    state = adv(base_engine._state)
+    t0 = time.perf_counter()
+    for _ in range(20):
+        state = adv(state)
+    np.asarray(state.step)
+    sec_per_row = ((time.perf_counter() - t0) / 20) / (max_batch * nfe_per_step)
+
+    def serve(workers: int, policy: str, rebalance: bool, trace):
+        base_tokens = oracle[id(trace)]
+        cluster = ServingCluster(params, cfg, process, sampler,
+                                 n_workers=workers, max_batch=max_batch,
+                                 seq_len=seq_len, policy=policy,
+                                 rebalance=rebalance,
+                                 solver_engine=solver_engine)
+        results, cost, span = replay_cluster(cluster, trace[0], trace[1],
+                                             seq_len, nfe_per_step)
+        assert len(results) == n_requests
+        for r in results:
+            assert (r.tokens == base_tokens[r.request_id]).all(), \
+                f"{policy}: cluster changed request {r.request_id}'s tokens"
+        stats = cluster.stats()
+        served = [w["served"] for w in stats.per_worker]
+        return {
+            "rate": n_requests / (cost * sec_per_row),
+            "cost": cost,
+            "span": span,
+            "rebalanced": stats.rebalanced,
+            "occupancy": stats.occupancy,
+            "spread": (max(served), min(served)),
+        }
+
+    rows, out = [], {}
+    legs = [("round_robin", False), ("join_shortest_queue", False),
+            ("least_remaining_nfe", False), ("round_robin", True)]
+    skew_runs = {}
+    for policy, rebalance in legs:
+        label = policy + ("+rebalance" if rebalance else "")
+        skew_runs[label] = m = serve(n_workers, policy, rebalance, skew)
+        print(f"  skew {label:>28}: {m['rate']:.2f} req/s "
+              f"({m['cost']:.0f} critical-path rows, span {m['span']:.0f} "
+              f"steps, served max/min {m['spread'][0]}/{m['spread'][1]}, "
+              f"{m['rebalanced']} rebalanced), tokens bit-identical")
+        rows.append(common.csv_row(
+            f"serve_throughput/cluster_skew/{label}",
+            m["cost"] * sec_per_row * 1e6 / n_requests,
+            f"req_per_s_service={m['rate']:.2f} "
+            f"critical_path_rows={m['cost']:.0f} span_steps={m['span']:.0f} "
+            f"served_max={m['spread'][0]} served_min={m['spread'][1]} "
+            f"rebalanced={m['rebalanced']}"))
+
+    out["jsq_vs_rr"] = (skew_runs["join_shortest_queue"]["rate"]
+                        / skew_runs["round_robin"]["rate"])
+    out["rebalance_vs_rr"] = (skew_runs["round_robin+rebalance"]["rate"]
+                              / skew_runs["round_robin"]["rate"])
+
+    one = serve(1, "least_remaining_nfe", False, sat)
+    many = serve(n_workers, "least_remaining_nfe", False, sat)
+    out["scaling"] = one["cost"] / many["cost"]
+    print(f"  saturation: {n_workers} workers {many['rate']:.2f} req/s vs "
+          f"1 worker {one['rate']:.2f} req/s -> {out['scaling']:.2f}x "
+          f"scale-out (critical path {many['cost']:.0f} vs {one['cost']:.0f} "
+          f"rows)")
+    print(f"  join_shortest_queue vs round_robin under skew: "
+          f"{out['jsq_vs_rr']:.2f}x req/s (rebalance rescues round_robin to "
+          f"{out['rebalance_vs_rr']:.2f}x)")
+    rows.append(common.csv_row(
+        f"serve_throughput/cluster_saturation/{n_workers}_workers",
+        many["cost"] * sec_per_row * 1e6 / n_requests,
+        f"req_per_s_service={many['rate']:.2f} "
+        f"critical_path_rows={many['cost']:.0f}"))
+    rows.append(common.csv_row(
+        "serve_throughput/cluster_saturation/1_worker",
+        one["cost"] * sec_per_row * 1e6 / n_requests,
+        f"req_per_s_service={one['rate']:.2f} "
+        f"critical_path_rows={one['cost']:.0f}"))
+    rows.append(common.csv_row(
+        "serve_throughput/cluster_speedups", 0.0,
+        f"jsq_vs_rr={out['jsq_vs_rr']:.2f}x "
+        f"rebalance_vs_rr={out['rebalance_vs_rr']:.2f}x "
+        f"scaling_{n_workers}w_vs_1w={out['scaling']:.2f}x"))
+
+    # RuntimeError (not SystemExit) so benchmarks.run records the failure and
+    # still writes the JSON mirror.
+    if min_jsq_speedup and out["jsq_vs_rr"] < min_jsq_speedup:
+        raise RuntimeError(
+            f"cluster sweep: join_shortest_queue speedup "
+            f"{out['jsq_vs_rr']:.2f}x < {min_jsq_speedup}x vs round_robin at "
+            f"load {skew_load}")
+    if min_scaling and out["scaling"] < min_scaling:
+        raise RuntimeError(
+            f"cluster sweep: {n_workers}-worker scale-out {out['scaling']:.2f}x "
+            f"< {min_scaling}x at saturation")
+    return rows, out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -316,7 +537,16 @@ def main() -> None:
     ap.add_argument("--stride", type=int, default=4)
     ap.add_argument("--skip-sweep", action="store_true",
                     help="skip the occupancy sweep (compacted vs dense pool)")
+    ap.add_argument("--skip-cluster", action="store_true",
+                    help="skip the sharded-cluster sweep (router policies)")
+    ap.add_argument("--cluster-only", action="store_true",
+                    help="run ONLY the sharded-cluster sweep")
     args = ap.parse_args()
+    if args.cluster_only:
+        kw = (dict(n_requests=24, seq_len=12) if args.smoke
+              else dict(n_requests=32, seq_len=16))
+        cluster_sweep(method=args.method, **kw)
+        return
     if args.smoke:
         _, speedups = run_with_speedups(
             n_requests=args.requests or 16, max_batch=4,
@@ -333,6 +563,13 @@ def main() -> None:
         sweep_kw = (dict(loads=(0.25, 0.5), n_requests=16, seq_len=16)
                     if args.smoke else {})
         occupancy_sweep(method=args.method, **sweep_kw)
+    if not args.skip_cluster:
+        # Gates (JSQ >= 1.3x round-robin under skew; N workers >= 3x one at
+        # saturation) live inside cluster_sweep — critical-shard row counts
+        # are deterministic, so these are wall-clock-noise free too.
+        cluster_kw = (dict(n_requests=24, seq_len=12) if args.smoke
+                      else dict(n_requests=32, seq_len=16))
+        cluster_sweep(method=args.method, **cluster_kw)
     ratio, stride_ratio = speedups
     if ratio < 1.5:
         raise SystemExit(f"continuous batching speedup {ratio:.2f}x < 1.5x")

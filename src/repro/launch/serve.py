@@ -2,10 +2,23 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch radd_small --reduced \
         --method theta_trapezoidal --nfe 32 --requests 8 --seq-len 128
+
+Cluster mode shards the request stream over N data-parallel pool workers
+behind a policy-driven router (one ``ServingEngine`` per worker, weights
+replicated, queue-level load balancing):
+
+    ... --workers 4 --router-policy join_shortest_queue --rebalance
+
+``--arrival-rate R`` switches from submit-everything-up-front to an open-loop
+Poisson arrival process (R requests/sec on the wall clock, gaps from the
+shared trace generator in ``repro.serve.trace``; ``--trace-seed`` fixes the
+gap sequence), so queue-delay and latency numbers reflect traffic instead of
+a pre-loaded backlog.
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
@@ -15,7 +28,41 @@ from repro.configs import get_config
 from repro.core import SamplerConfig, list_solvers, loglinear_schedule, masked_process
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params
-from repro.serve import Request, ServingEngine
+from repro.serve import (
+    Request,
+    ServingCluster,
+    ServingEngine,
+    list_policies,
+    poisson_arrivals,
+)
+
+
+def drive(target, requests, arrivals=None):
+    """Run ``requests`` through an engine or cluster.
+
+    ``arrivals=None`` submits everything up front (closed loop).  Otherwise
+    ``arrivals[i]`` is request i's wall-clock offset in seconds: the loop
+    submits each request when its arrival time passes, ticks while there is
+    work, and sleeps through genuinely idle gaps (open loop).
+    """
+    if arrivals is None:
+        for req in requests:
+            target.submit(req)
+        return target.run_all()
+    pending = collections.deque(zip(requests, arrivals))
+    results = []
+    t0 = time.monotonic()
+    while pending or target.busy:
+        now = time.monotonic() - t0
+        while pending and pending[0][1] <= now:
+            target.submit(pending.popleft()[0])
+        if not target.busy:
+            if pending:
+                time.sleep(max(0.0, pending[0][1]
+                               - (time.monotonic() - t0)))
+            continue
+        results.extend(target.step())
+    return results
 
 
 def main() -> None:
@@ -45,6 +92,23 @@ def main() -> None:
     ap.add_argument("--finalize-batch", type=int, default=1,
                     help="drained slots to accumulate (across ticks) before "
                          "one batched finalize forward finishes them")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="data-parallel pool workers; > 1 serves through the "
+                         "router-backed ServingCluster (max-batch is PER "
+                         "worker; weights are replicated per shard, logical "
+                         "workers share one device when the host is short)")
+    ap.add_argument("--router-policy", default="join_shortest_queue",
+                    choices=list_policies(),
+                    help="cluster placement policy for queued requests")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="re-route requests still QUEUED on a worker when "
+                         "backlogs diverge (RUNNING slots never move; tokens "
+                         "are identical either way)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrivals at this many requests "
+                         "per second (0 = submit every request up front)")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="RNG seed for the Poisson arrival gaps")
     args = ap.parse_args()
     stride = (args.scheduler_stride if args.scheduler_stride == "auto"
               else int(args.scheduler_stride))
@@ -54,40 +118,66 @@ def main() -> None:
     sampler = SamplerConfig.for_nfe(args.method, args.nfe, theta=args.theta)
     params, _ = init_params(jax.random.PRNGKey(args.seed), cfg)
 
+    engine_kw = dict(max_batch=args.max_batch, seq_len=args.seq_len,
+                     scheduler_stride=stride, compact=not args.dense_pool,
+                     finalize_batch=args.finalize_batch,
+                     continuous=not args.run_to_completion)
     mesh = make_host_mesh()
     with mesh:
-        engine = ServingEngine(params, cfg, process, sampler,
-                               max_batch=args.max_batch, seq_len=args.seq_len,
-                               continuous=not args.run_to_completion,
-                               scheduler_stride=stride,
-                               compact=not args.dense_pool,
-                               finalize_batch=args.finalize_batch)
-        t0 = time.time()
-        for i in range(args.requests):
-            engine.submit(Request(request_id=i, seq_len=args.seq_len,
-                                  seed=args.seed + i))
-        results = engine.run_all()
-    dt = time.time() - t0
+        if args.workers > 1:
+            # continuous/run-to-completion applies per worker pool.
+            target = ServingCluster(params, cfg, process, sampler,
+                                    n_workers=args.workers,
+                                    policy=args.router_policy,
+                                    rebalance=args.rebalance, mesh=mesh,
+                                    **engine_kw)
+        else:
+            target = ServingEngine(params, cfg, process, sampler,
+                                   **engine_kw)
+        requests = [Request(request_id=i, seq_len=args.seq_len,
+                            seed=args.seed + i) for i in range(args.requests)]
+        arrivals = (poisson_arrivals(args.requests, 1.0 / args.arrival_rate,
+                                     seed=args.trace_seed)
+                    if args.arrival_rate > 0 else None)
+        t0 = time.monotonic()
+        results = drive(target, requests, arrivals)
+    dt = time.monotonic() - t0
     toks = np.stack([r.tokens for r in results])
-    stats = engine.stats()
 
     # Latency here is end-to-end (submit -> finish), queue delay included.
     lat = np.asarray([r.latency_s for r in results])
     qd = np.asarray([r.queue_delay_s for r in results])
     nfe = sorted({r.nfe for r in results})
+    mode = "run-to-completion" if args.run_to_completion else "continuous"
+    if args.arrival_rate > 0:
+        mode += f", Poisson {args.arrival_rate:g} req/s"
     print(f"served {len(results)} requests in {dt:.2f}s "
           f"({args.method}, NFE/request={nfe}, shape={toks.shape}, "
-          f"mode={'continuous' if engine.continuous else 'run-to-completion'})")
+          f"mode={mode})")
     print(f"latency p50 {np.percentile(lat, 50):.2f}s  "
           f"p95 {np.percentile(lat, 95):.2f}s  "
           f"(queue delay p50 {np.percentile(qd, 50):.2f}s  "
           f"p95 {np.percentile(qd, 95):.2f}s)")
-    print(f"occupancy {stats['occupancy']:.1%} of {stats['paid_slot_steps']} "
-          f"paid slot-steps over {stats['global_steps']} pool steps "
-          f"(scheduler stride {stats['scheduler_stride']}, "
-          f"{'compacted' if stats['compact'] else 'dense'} pool, "
-          f"{stats['finalize_rows']} finalize rows in "
-          f"{stats['finalize_passes']} passes)")
+    if args.workers > 1:
+        st = target.stats()
+        print(f"cluster: {st.n_workers} workers, policy {st.policy}, "
+              f"occupancy {st.occupancy:.1%} of {st.paid_slot_steps} paid "
+              f"slot-steps, {st.rebalanced} rebalanced, "
+              f"{st.finalize_rows} finalize rows")
+        for w in st.per_worker:
+            print(f"  worker {w['worker_id']}: served {w['served']}, "
+                  f"occupancy {w['occupancy']:.1%}, "
+                  f"{w['paid_slot_steps']} paid slot-steps"
+                  + (f", device {w['device']}" if w["device"] else ""))
+    else:
+        stats = target.stats()
+        print(f"occupancy {stats['occupancy']:.1%} of "
+              f"{stats['paid_slot_steps']} paid slot-steps over "
+              f"{stats['global_steps']} pool steps "
+              f"(scheduler stride {stats['scheduler_stride']}, "
+              f"{'compacted' if stats['compact'] else 'dense'} pool, "
+              f"{stats['finalize_rows']} finalize rows in "
+              f"{stats['finalize_passes']} passes)")
     print("first sample head:", toks[0, :24].tolist())
 
 

@@ -1,3 +1,13 @@
+from .cluster import (
+    ClusterStats,
+    PoolWorker,
+    Router,
+    RouterPolicy,
+    ServingCluster,
+    get_policy,
+    list_policies,
+    register_policy,
+)
 from .engine import (
     FINISHED,
     QUEUED,
@@ -8,6 +18,10 @@ from .engine import (
     ar_generate,
     make_score_fn,
 )
+from .trace import poisson_arrivals, poisson_trace, skewed_trace
 
 __all__ = ["Request", "Result", "ServingEngine", "ar_generate", "make_score_fn",
-           "QUEUED", "RUNNING", "FINISHED"]
+           "QUEUED", "RUNNING", "FINISHED",
+           "ClusterStats", "PoolWorker", "Router", "RouterPolicy",
+           "ServingCluster", "get_policy", "list_policies", "register_policy",
+           "poisson_arrivals", "poisson_trace", "skewed_trace"]

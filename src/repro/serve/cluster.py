@@ -1,0 +1,440 @@
+"""Sharded serving cluster: one request pool per data-parallel shard, a
+router with queue-level load balancing on top.
+
+A single :class:`~repro.serve.ServingEngine` caps throughput at one pool's
+width no matter how many data-parallel shards the mesh has.  This module
+scales the same per-request guarantees across shards:
+
+* :class:`PoolWorker` — one ``ServingEngine`` per data-parallel replica.
+  Weights are replicated along ``"data"`` (``SERVE_RULES``), each worker's
+  pool is pinned to its shard's devices via
+  :func:`repro.sharding.rules.data_shard_devices`, and on hosts with fewer
+  devices than workers the same machinery runs as N *logical* workers on the
+  default device — the CPU CI path;
+* :class:`Router` — owns the global request queue.  Requests are dispatched
+  to workers **at tick boundaries** under a pluggable, registry-backed policy
+  (``round_robin`` / ``join_shortest_queue`` / ``least_remaining_nfe``; see
+  :func:`register_policy`, mirroring ``core/solvers/registry.py``);
+* **queue-level rebalancing** (``rebalance=True``) — a request still QUEUED
+  inside a worker may be re-routed to a less loaded worker while it waits.
+  RUNNING slots never move (a trajectory's state lives on its shard), and a
+  request's tokens depend only on its ``(seed, request_id)`` PRNG stream —
+  never on which worker, slot, or neighbor set served it — so cluster output
+  is **bit-identical** to single-pool serving for every routing policy and
+  any rebalancing schedule (parity-tested per solver x engine x policy);
+* :class:`ClusterStats` — aggregated accounting: per-worker occupancy and
+  paid slot-steps, cluster queue-delay and latency percentiles, dispatch and
+  rebalance counts.
+
+``launch/serve.py --workers N --router-policy join_shortest_queue`` serves
+through this path;
+``benchmarks/serve_throughput.py cluster_sweep`` replays skewed and Poisson
+traces through it and records JSQ-vs-round-robin and scale-out speedups in
+``BENCH_solvers.json``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import (
+    Any,
+    Callable,
+    Deque,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+    Type,
+    Union,
+)
+
+import jax
+import numpy as np
+
+from repro.core import DiffusionProcess, MaskedEngine, SamplerConfig
+from repro.models.config import ModelConfig
+from repro.sharding.rules import data_shard_devices
+
+from .engine import QUEUED, Request, Result, ServingEngine, make_score_fn
+
+Params = Any
+
+
+# --------------------------------------------------------------------------- #
+# Router-policy registry (mirrors core/solvers/registry.py)
+# --------------------------------------------------------------------------- #
+
+_POLICIES: Dict[str, "Type[RouterPolicy]"] = {}
+
+
+def register_policy(name: str, *, override: bool = False) -> Callable:
+    """Class decorator registering a :class:`RouterPolicy` under ``name``."""
+
+    def decorate(cls):
+        if name in _POLICIES and not override:
+            raise ValueError(
+                f"router policy {name!r} already registered to "
+                f"{_POLICIES[name].__name__}; pass override=True to replace")
+        cls.name = name
+        _POLICIES[name] = cls
+        return cls
+
+    return decorate
+
+
+def get_policy(name: str) -> "Type[RouterPolicy]":
+    """Look up a registered policy class; raises ValueError for unknown names."""
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown router policy {name!r}; registered: "
+            f"{tuple(_POLICIES)}") from None
+
+
+def list_policies() -> Tuple[str, ...]:
+    """Registered policy names, in registration order."""
+    return tuple(_POLICIES)
+
+
+class RouterPolicy:
+    """Placement rule: which worker a dispatched request joins.
+
+    Policies see the live workers (their queues, slots, and remaining work)
+    and the request being placed; they decide placement ONLY — tokens are
+    placement-invariant, so a policy is purely a latency/throughput knob.
+    Stateful policies (round-robin's cursor) keep state on the instance; the
+    Router owns one instance for its lifetime.
+    """
+
+    name: str = "?"
+
+    def select(self, workers: Sequence["PoolWorker"],
+               req: Request) -> "PoolWorker":
+        raise NotImplementedError
+
+
+@register_policy("round_robin")
+class RoundRobinPolicy(RouterPolicy):
+    """Cycle through workers in order, blind to queue state — the baseline
+    (and the victim of skewed straggler traces)."""
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def select(self, workers, req):
+        worker = workers[self._next % len(workers)]
+        self._next += 1
+        return worker
+
+
+@register_policy("join_shortest_queue")
+class JoinShortestQueuePolicy(RouterPolicy):
+    """Join the worker with the fewest requests on it (queued + running),
+    ties to the lowest worker id — the classic JSQ load balancer."""
+
+    def select(self, workers, req):
+        return min(workers, key=lambda w: (w.backlog, w.worker_id))
+
+
+@register_policy("least_remaining_nfe")
+class LeastRemainingNFEPolicy(RouterPolicy):
+    """Join the worker owing the fewest solver steps (remaining budgets of
+    RUNNING slots + full budgets of its queue) — budget-aware JSQ: a queue of
+    two stragglers weighs more than a queue of three quick drafts."""
+
+    def select(self, workers, req):
+        return min(workers, key=lambda w: (w.remaining_work, w.worker_id))
+
+
+# --------------------------------------------------------------------------- #
+# PoolWorker
+# --------------------------------------------------------------------------- #
+
+
+class PoolWorker:
+    """One data-parallel serving replica: a ``ServingEngine`` pinned to its
+    shard's anchor device (``device=None`` = logical worker on the default
+    device).  The router talks to workers only through this wrapper."""
+
+    def __init__(self, worker_id: int, engine: ServingEngine,
+                 device: Any = None):
+        self.worker_id = worker_id
+        self.engine = engine
+        self.device = device
+        #: requests this worker finished (router-maintained).
+        self.served = 0
+        engine.place(device)
+
+    @property
+    def backlog(self) -> int:
+        """Requests on this worker: queued locally + occupying a slot."""
+        return self.engine.queued + len(self.engine.active_slots)
+
+    @property
+    def remaining_work(self) -> int:
+        """Solver steps this worker still owes (see
+        :meth:`ServingEngine.remaining_work`)."""
+        return self.engine.remaining_work()
+
+    @property
+    def busy(self) -> bool:
+        return self.engine.busy
+
+    def tick(self) -> List[Result]:
+        """One scheduler tick of this worker's engine."""
+        return self.engine.step()
+
+
+# --------------------------------------------------------------------------- #
+# ClusterStats
+# --------------------------------------------------------------------------- #
+
+
+def _pct(values: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(values), q)) if values else 0.0
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    """Aggregated cluster accounting (``Router.stats()``)."""
+
+    n_workers: int
+    policy: str
+    #: requests finished across all workers.
+    requests_served: int
+    #: requests handed from the global queue to a worker.
+    dispatched: int
+    #: queued requests moved between workers by rebalancing.
+    rebalanced: int
+    #: requests still waiting in the global queue (pre-dispatch).
+    global_queued: int
+    #: sum over workers of bucket-width x steps actually executed.
+    paid_slot_steps: int
+    #: sum over workers of useful (occupied-slot) steps executed.
+    active_slot_steps: int
+    #: cluster occupancy: useful slot-steps / paid slot-steps.
+    occupancy: float
+    #: sum over workers of rows paid by batched finalize forwards.
+    finalize_rows: int
+    #: submit -> admission percentiles over finished requests (seconds).
+    queue_delay_p50_s: float
+    queue_delay_p95_s: float
+    #: submit -> finish percentiles over finished requests (seconds).
+    latency_p50_s: float
+    latency_p95_s: float
+    #: per-worker detail: worker_id, served, backlog + the engine's stats().
+    per_worker: List[dict]
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# --------------------------------------------------------------------------- #
+# Router
+# --------------------------------------------------------------------------- #
+
+
+class Router:
+    """Global request queue + policy-driven dispatch over a worker fleet.
+
+    ``submit`` stamps the request into the global queue; each :meth:`step`
+    (one cluster tick) dispatches queued requests to workers under the
+    policy, optionally rebalances worker queues, then ticks every worker.
+    Original submit timestamps ride along on every hop, so queue-delay and
+    latency accounting always span submit -> admission/finish regardless of
+    how many times a request was re-routed.
+    """
+
+    def __init__(self, workers: Sequence[PoolWorker],
+                 policy: Union[str, RouterPolicy] = "join_shortest_queue",
+                 rebalance: bool = False):
+        if not workers:
+            raise ValueError("Router requires at least one PoolWorker")
+        ids = [w.worker_id for w in workers]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate worker_ids: {ids}")
+        self.workers = list(workers)
+        self.policy = (get_policy(policy)() if isinstance(policy, str)
+                       else policy)
+        self.rebalance = rebalance
+        self._queue: Deque[Tuple[Request, float]] = collections.deque()
+        self.dispatched = 0
+        self.rebalanced = 0
+        self.requests_served = 0
+        self._queue_delays: List[float] = []
+        self._latencies: List[float] = []
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, req: Request) -> None:
+        """Stamp ``req`` into the global queue (dispatch happens at the next
+        tick boundary, when the policy sees current worker state).  Requests
+        no worker could serve are rejected HERE, like the single-engine
+        submit — never mid-dispatch after they already left the queue (the
+        fleet is homogeneous, so any worker's checks stand for all)."""
+        self.workers[0].engine.validate(req)
+        req.status = QUEUED
+        self._queue.append((req, time.monotonic()))
+
+    @property
+    def queued(self) -> int:
+        """Requests in the global queue + queued inside workers."""
+        return len(self._queue) + sum(w.engine.queued for w in self.workers)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._queue) or any(w.busy for w in self.workers)
+
+    # ------------------------------------------------------------ scheduling
+    def _dispatch(self) -> None:
+        """Drain the global queue onto workers under the policy (tick
+        boundary: the policy sees the fleet as it is right now)."""
+        while self._queue:
+            req, submit_t = self._queue.popleft()
+            worker = self.policy.select(self.workers, req)
+            worker.engine.submit(req, submit_t=submit_t)
+            self.dispatched += 1
+
+    def _rebalance(self) -> int:
+        """Even out worker queues: move QUEUED requests (newest first) from
+        the most loaded worker to the least loaded until backlogs are within
+        one of each other.  RUNNING slots never move, so this cannot change
+        any request's tokens — only its queue delay."""
+        moved = 0
+        while True:
+            donors = [w for w in self.workers if w.engine.queued > 0]
+            if not donors:
+                break
+            src = max(donors, key=lambda w: (w.backlog, -w.worker_id))
+            dst = min(self.workers, key=lambda w: (w.backlog, w.worker_id))
+            if src is dst or src.backlog - dst.backlog < 2:
+                break
+            ((req, submit_t),) = src.engine.steal_queued(1)
+            dst.engine.submit(req, submit_t=submit_t)
+            moved += 1
+        self.rebalanced += moved
+        return moved
+
+    def step(self) -> List[Result]:
+        """One cluster tick: dispatch, (optionally) rebalance, tick every
+        worker.  Returns the requests that finished this tick, stamped with
+        the worker that served them (``Result.worker``)."""
+        self._dispatch()
+        if self.rebalance:
+            self._rebalance()
+        out: List[Result] = []
+        for worker in self.workers:
+            for res in worker.tick():
+                res.worker = worker.worker_id
+                worker.served += 1
+                self.requests_served += 1
+                self._queue_delays.append(res.queue_delay_s)
+                self._latencies.append(res.latency_s)
+                out.append(res)
+        return out
+
+    def run_all(self) -> List[Result]:
+        """Serve until the global queue and every worker have drained
+        (completion order across the fleet)."""
+        results: List[Result] = []
+        while self.busy:
+            results.extend(self.step())
+        return results
+
+    # ------------------------------------------------------------- accounting
+    def stats(self) -> ClusterStats:
+        per_worker = []
+        paid = active = fin_rows = 0
+        for w in self.workers:
+            st = w.engine.stats()
+            paid += st["paid_slot_steps"]
+            active += st["active_slot_steps"]
+            fin_rows += st["finalize_rows"]
+            per_worker.append(dict(worker_id=w.worker_id, served=w.served,
+                                   backlog=w.backlog,
+                                   device=str(w.device) if w.device else None,
+                                   **st))
+        return ClusterStats(
+            n_workers=len(self.workers),
+            policy=self.policy.name,
+            requests_served=self.requests_served,
+            dispatched=self.dispatched,
+            rebalanced=self.rebalanced,
+            global_queued=len(self._queue),
+            paid_slot_steps=paid,
+            active_slot_steps=active,
+            occupancy=(active / paid) if paid else 0.0,
+            finalize_rows=fin_rows,
+            queue_delay_p50_s=_pct(self._queue_delays, 50),
+            queue_delay_p95_s=_pct(self._queue_delays, 95),
+            latency_p50_s=_pct(self._latencies, 50),
+            latency_p95_s=_pct(self._latencies, 95),
+            per_worker=per_worker,
+        )
+
+
+# --------------------------------------------------------------------------- #
+# ServingCluster: Router + factory-built workers
+# --------------------------------------------------------------------------- #
+
+
+class ServingCluster(Router):
+    """Build ``n_workers`` PoolWorkers over replicated weights and route
+    across them.
+
+    Device placement follows the serve-mode sharding rules: weights are
+    replicated along ``"data"`` (one ``jax.device_put`` copy per shard's
+    anchor device from :func:`data_shard_devices`), and each worker's pool
+    state is committed to its device so every tick executes on that shard.
+    On hosts without enough devices the fleet degrades to logical workers on
+    the default device — same scheduler, same results, CPU CI's path.
+
+    ``engine_kw`` (e.g. ``scheduler_stride``, ``compact``,
+    ``finalize_batch``, ``solver_engine``) is forwarded to every worker's
+    ``ServingEngine``.  When no worker is device-pinned and no
+    ``solver_engine`` was injected, one shared solver engine (and therefore
+    one jit-trace family) backs the whole fleet.
+    """
+
+    def __init__(self, params: Params, cfg: ModelConfig,
+                 process: DiffusionProcess, sampler: SamplerConfig,
+                 n_workers: int, *, max_batch: int = 8, seq_len: int = 256,
+                 policy: Union[str, RouterPolicy] = "join_shortest_queue",
+                 rebalance: bool = False, mesh: Any = None,
+                 devices: Optional[Sequence[Any]] = None,
+                 extra_inputs: Optional[dict] = None, **engine_kw):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        if devices is None:
+            devices = data_shard_devices(n_workers, mesh=mesh)
+        elif len(devices) != n_workers:
+            raise ValueError(f"devices must have one entry per worker, got "
+                             f"{len(devices)} for {n_workers} workers")
+        injected = engine_kw.get("solver_engine") is not None
+        if all(d is None for d in devices) and not injected:
+            # Logical fleet on one device: share a single solver engine
+            # (the same default ServingEngine would build per worker) so all
+            # workers hit the same interned run context — one compiled
+            # advance family instead of one per worker.
+            shared = MaskedEngine(process=process,
+                                  score_fn=make_score_fn(params, cfg,
+                                                         extra_inputs))
+            engine_kw = dict(engine_kw, solver_engine=shared)
+            injected = True
+        workers = []
+        for wid, device in enumerate(devices):
+            if device is None or injected:
+                # An injected solver engine's score_fn decides its own
+                # placement — replicating params here would allocate dead
+                # per-shard weight copies nothing reads.
+                params_w = params
+            else:
+                # Weight replication along "data": one copy per shard anchor.
+                params_w = jax.device_put(params, device)
+            engine = ServingEngine(params_w, cfg, process, sampler,
+                                   max_batch=max_batch, seq_len=seq_len,
+                                   extra_inputs=extra_inputs, **engine_kw)
+            workers.append(PoolWorker(wid, engine, device=device))
+        super().__init__(workers, policy=policy, rebalance=rebalance)

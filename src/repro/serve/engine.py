@@ -115,6 +115,9 @@ class Result:
     #: solver steps the trajectory ran (the request's n_steps budget if set,
     #: else the sampler config's; whole-batch evals for fhs).
     steps: int = 0
+    #: id of the cluster worker that served the request (-1: single-engine
+    #: serving — the Router stamps this).
+    worker: int = -1
 
 
 #: a drained request waiting for its batched finalize forward: the slot is
@@ -234,7 +237,11 @@ class ServingEngine:
         self._finalize_rows = 0
 
     # ------------------------------------------------------------- lifecycle
-    def submit(self, req: Request) -> None:
+    def validate(self, req: Request) -> None:
+        """Raise ValueError if this engine could never serve ``req`` — the
+        submit-time checks, callable without queuing (the cluster Router
+        validates at ITS submit boundary so a bad request fails fast instead
+        of mid-dispatch)."""
         if req.seq_len > self.seq_len:
             raise ValueError(f"request seq_len {req.seq_len} > engine {self.seq_len}")
         if req.n_steps is not None and req.n_steps < 1:
@@ -247,8 +254,51 @@ class ServingEngine:
                 f"solver {self.sampler.method!r} does not support per-request "
                 f"n_steps (requested {req.n_steps}, engine runs "
                 f"{self.sampler.n_steps})")
+
+    def submit(self, req: Request, submit_t: Optional[float] = None) -> None:
+        """Queue ``req``.  ``submit_t`` (a ``time.monotonic()`` stamp) lets a
+        router preserve the *original* submit time when it re-routes a queued
+        request between workers, so queue-delay/latency accounting spans the
+        whole wait, not just the last hop."""
+        self.validate(req)
         req.status = QUEUED
-        self._queue.append((req, time.time()))
+        self._queue.append((req, time.monotonic() if submit_t is None
+                            else submit_t))
+
+    def steal_queued(self, n: int = 1) -> List[Tuple[Request, float]]:
+        """Pop up to ``n`` QUEUED requests off the *back* of the local queue
+        (newest first — the oldest waiters keep their head-of-line position
+        here), returning ``(request, submit_t)`` pairs for re-submission to
+        another worker.  RUNNING slots are never stolen: a trajectory's state
+        lives on this worker's shard, so only waiting requests may move."""
+        out = []
+        for _ in range(min(n, len(self._queue))):
+            out.append(self._queue.pop())
+        return out
+
+    def remaining_work(self) -> int:
+        """Solver steps this engine still owes: the remaining budgets of its
+        RUNNING slots plus the full budgets of its QUEUED requests (the
+        ``least_remaining_nfe`` router policy's load signal)."""
+        queued = sum(self.sampler.n_steps if req.n_steps is None else
+                     req.n_steps for req, _ in self._queue)
+        if not self._stepwise:
+            # Monolithic solvers (fhs) ignore step budgets; approximate each
+            # running request by the config's budget.
+            return queued + len(self.active_slots) * self.sampler.n_steps
+        running = sum(self._slot_budget(s) - int(self._steps_host[s])
+                      for s in self.active_slots)
+        return queued + running
+
+    def place(self, device) -> None:
+        """Commit the engine's pool state to ``device`` (cluster workers pin
+        one data-parallel shard each; params placement — the replicated
+        weights — is the caller's job, via ``jax.device_put`` before
+        ``make_score_fn``).  No-op for ``device=None`` (logical workers
+        sharing the host device) and for monolithic solvers."""
+        if device is None or not self._stepwise:
+            return
+        self._pool.state = jax.device_put(self._pool.state, device)
 
     @staticmethod
     def request_key(req: Request) -> jax.Array:
@@ -272,6 +322,12 @@ class ServingEngine:
         """Drained requests whose batched finalize has not flushed yet."""
         return len(self._pending)
 
+    @property
+    def busy(self) -> bool:
+        """Work left anywhere: queued, running, or awaiting finalize (the
+        same shape the cluster Router exposes, so drivers can poll either)."""
+        return bool(self._queue or self.active_slots or self._pending)
+
     def _slot_budget(self, slot: int) -> int:
         req = self._slot_req[slot]
         return self.sampler.n_steps if req.n_steps is None else req.n_steps
@@ -281,7 +337,7 @@ class ServingEngine:
         boundary; run-to-completion: only once the whole pool has drained)."""
         if not self.continuous and self.active_slots:
             return
-        now = time.time()
+        now = time.monotonic()
         for slot in range(self.max_batch):
             if not self._queue:
                 break
@@ -357,7 +413,7 @@ class ServingEngine:
         passes, paid = self._pool.finalize_cost(len(rows))
         self.finalize_passes += passes
         self._finalize_rows += paid
-        finish_t = time.time()
+        finish_t = time.monotonic()
         out = [self._make_result(p.req, p.submit_t, p.admit_t, finish_t,
                                  p.steps, tokens[j])
                for j, p in enumerate(self._pending)]
@@ -448,7 +504,7 @@ class ServingEngine:
         self.finalize_passes += 1
         self._finalize_rows += self.max_batch
         tokens = np.asarray(jax.device_get(self._finalize(self._state)))
-        finish_t = time.time()
+        finish_t = time.monotonic()
         return [self._emit_slot(slot, finish_t, int(self._steps_host[slot]),
                                 tokens[slot]) for slot in done]
 
@@ -469,7 +525,7 @@ class ServingEngine:
         self.global_steps += result.nfe
         self._active_slot_steps += len(active) * result.nfe
         self._paid_slot_steps += self.max_batch * result.nfe
-        finish_t = time.time()
+        finish_t = time.monotonic()
         return [self._emit_slot(slot, finish_t, result.nfe, tokens[slot])
                 for slot in active]
 

@@ -1,0 +1,81 @@
+"""Arrival-trace generators shared by the serving benchmarks and launchers.
+
+A *trace* is ``(arrival_times, step_budgets)``: when each request shows up and
+how many solver steps it asks for.  Times are in abstract *step units* — the
+serving benchmarks advance a virtual clock one unit per executed solver step —
+so a trace is hardware-independent; the launcher's Poisson arrival mode
+rescales the same gaps to wall seconds via ``--arrival-rate``.
+
+Two shapes of traffic:
+
+* :func:`poisson_trace` — memoryless arrivals with i.i.d. straggler budgets
+  (``p_long`` of the requests carry a several-fold larger NFE budget), the
+  regime where run-to-completion batching and naive routing leave capacity
+  idle;
+* :func:`skewed_trace` — the same arrivals, but stragglers land at fixed
+  positions ``i % period == 0``.  With ``period = n_workers`` a round-robin
+  router pins **every** straggler onto worker 0, the adversarial case for
+  queue-blind placement that ``join_shortest_queue`` (and queue-level
+  rebalancing) should win.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def poisson_arrivals(n_requests: int, mean_gap: float,
+                     seed: int = 0) -> np.ndarray:
+    """[n] arrival times: exponential gaps with the given mean, first at 0."""
+    if n_requests < 1:
+        raise ValueError(f"n_requests must be >= 1, got {n_requests}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_gap, size=n_requests - 1)
+    return np.concatenate([[0.0], np.cumsum(gaps)])
+
+
+def poisson_trace(n_requests: int, max_batch: int, short_steps: int,
+                  long_steps: int, p_long: float = 0.3, load: float = 1.67,
+                  seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """(arrival_times, step_budgets): Poisson arrivals, straggler budgets.
+
+    ``load`` is the offered load as a multiple of pool capacity (capacity =
+    max_batch slots / mean work per request); heavy traffic (> 1) keeps a
+    backlog so serving is throughput-bound and requests/sec measures the
+    sustained service rate.  ``p_long`` of the requests are stragglers
+    carrying the large budget.  ``max_batch`` is the TOTAL slot count the
+    trace is offered to (a cluster's capacity is ``n_workers x
+    per-worker max_batch``).
+
+    Budgets and gaps come from ONE sequential RNG stream — bit-identical to
+    the generator this function replaced in ``benchmarks/serve_throughput.py``,
+    so the committed benchmark history stays comparable.
+    """
+    rng = np.random.default_rng(seed)
+    budgets = np.where(rng.uniform(size=n_requests) < p_long,
+                       long_steps, short_steps)
+    gaps = rng.exponential(budgets.mean() / (max_batch * load),
+                           size=n_requests - 1)
+    arrivals = np.concatenate([[0.0], np.cumsum(gaps)])
+    return arrivals, budgets
+
+
+def skewed_trace(n_requests: int, max_batch: int, short_steps: int,
+                 long_steps: int, period: int, load: float = 0.5,
+                 seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """(arrival_times, step_budgets): Poisson arrivals, stragglers pinned to
+    every ``period``-th request (positions ``i % period == 0``).
+
+    The budget *positions* are what make the trace adversarial: a round-robin
+    router over ``period`` workers routes request i to worker ``i % period``,
+    so every straggler stacks up on worker 0 while the others drain shorts and
+    idle.  Queue-aware policies see the pile-up and route around it.
+    """
+    if period < 1:
+        raise ValueError(f"period must be >= 1, got {period}")
+    budgets = np.where(np.arange(n_requests) % period == 0,
+                       long_steps, short_steps).astype(np.int64)
+    arrivals = poisson_arrivals(
+        n_requests, budgets.mean() / (max_batch * load), seed=seed)
+    return arrivals, budgets

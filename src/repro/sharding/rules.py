@@ -16,10 +16,11 @@ GSPMD handles non-divisible dimensions by padding (e.g. 36 heads over 16-way
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: N817
 
 Params = Any
@@ -134,6 +135,44 @@ def batch_sharding(mesh: Mesh, batch_size: int, ndim: int = 2) -> NamedSharding:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+def data_shard_devices(n_workers: int,
+                       mesh: Optional[Mesh] = None) -> List[Any]:
+    """One anchor device per data-parallel serving shard (pool worker).
+
+    Serving replicates weights along ``"data"`` (``SERVE_RULES``: the latency
+    path) and runs one request pool per data shard, so a cluster of
+    ``n_workers`` pools wants one device group per worker.  Resolution order:
+
+    * **mesh with a "data" axis**: the device grid is sliced along ``"data"``
+      and each worker anchors to a shard's first device (the shard's
+      remaining devices are its model-parallel row — the worker's jitted
+      computations run relative to that anchor).  More workers than data
+      shards cycle over the shard anchors — workers time-share shards, but
+      never land on a model-parallel peer inside someone else's shard;
+    * **flat host devices** (no mesh / no "data" axis, >= n_workers devices
+      — the ``xla_force_host_platform_device_count`` CI path): one device
+      each, in enumeration order;
+    * **fallback** (fewer devices than workers): ``None`` per worker —
+      *logical* workers time-sharing the default device, which keeps the
+      router/rebalancing machinery fully exercised on single-device CPU CI.
+    """
+    if n_workers < 1:
+        raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+    if mesh is not None and "data" in mesh.axis_names:
+        axis = mesh.axis_names.index("data")
+        grid = np.moveaxis(np.asarray(mesh.devices), axis, 0)
+        anchors = grid.reshape(grid.shape[0], -1)[:, 0]
+        if len(anchors) > 1 or n_workers == 1:
+            return [anchors[i % len(anchors)] for i in range(n_workers)]
+        # Degenerate 1-wide "data" axis (e.g. the host mesh): fall through to
+        # the flat-device paths below rather than stacking every worker on
+        # one anchor.
+    devices = jax.devices()
+    if len(devices) >= n_workers:
+        return list(devices[:n_workers])
+    return [None] * n_workers
 
 
 def constrain_batch(x: jnp.ndarray, mesh: Mesh) -> jnp.ndarray:

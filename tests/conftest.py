@@ -1,8 +1,18 @@
 import os
 import sys
 
-# Tests run on the single real CPU device (the dry-run is the only consumer of
-# the 512-device flag, and it sets XLA_FLAGS itself in a fresh process).
+# Tests default to the single real CPU device (the 512-device dry-run sets
+# XLA_FLAGS itself in a fresh process).  Cluster tests can opt into a fake
+# multi-device host: REPRO_FORCE_HOST_DEVICES=8 splits the CPU into 8 XLA
+# devices via the same flag launch/dryrun.py uses — it must be set before
+# jax initializes, hence here, guarded, ahead of the jax import.
+_n_fake = os.environ.get("REPRO_FORCE_HOST_DEVICES")
+if _n_fake:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={int(_n_fake)} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
@@ -18,3 +28,15 @@ def rng_key():
 @pytest.fixture(scope="session")
 def np_rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def multi_device():
+    """The host's device list, when there is more than one — cluster tests
+    use this to pin one pool worker per device.  Single-device runs (the
+    default) skip; CI's cluster-smoke job sets REPRO_FORCE_HOST_DEVICES=8."""
+    devices = jax.devices()
+    if len(devices) < 2:
+        pytest.skip("needs >1 device; set REPRO_FORCE_HOST_DEVICES=8 "
+                    "(fake host devices) to enable")
+    return devices

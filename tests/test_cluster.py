@@ -1,0 +1,388 @@
+"""Sharded serving cluster: router policies, queue-level rebalancing,
+per-shard device pinning, and bit-identical parity with single-pool serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MaskedEngine,
+    SamplerConfig,
+    UniformEngine,
+    loglinear_schedule,
+    masked_process,
+    uniform_process,
+)
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serve import (
+    PoolWorker,
+    Request,
+    Router,
+    RouterPolicy,
+    ServingCluster,
+    ServingEngine,
+    get_policy,
+    list_policies,
+    register_policy,
+)
+from repro.sharding.rules import data_shard_devices
+
+CFG = ModelConfig(name="clus", family="dense", n_layers=2, d_model=64,
+                  n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                  vocab_size=23, dtype="float32")
+
+POLICIES = ["round_robin", "join_shortest_queue", "least_remaining_nfe"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)[0]
+
+
+def make_cluster(params, n_workers=2, n_steps=3, max_batch=2, seq_len=12,
+                 **kw):
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    return ServingCluster(params, CFG, proc,
+                          SamplerConfig(method="theta_trapezoidal",
+                                        n_steps=n_steps, theta=0.5),
+                          n_workers=n_workers, max_batch=max_batch,
+                          seq_len=seq_len, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Policy registry
+# --------------------------------------------------------------------------- #
+
+
+def test_policy_registry():
+    assert set(POLICIES) <= set(list_policies())
+    assert get_policy("round_robin").name == "round_robin"
+    with pytest.raises(ValueError, match="unknown router policy"):
+        get_policy("fastest_ever")
+    with pytest.raises(ValueError, match="already registered"):
+        @register_policy("round_robin")
+        class Dup(RouterPolicy):  # noqa: F811
+            pass
+
+
+def test_custom_policy_registers_and_routes(params):
+    @register_policy("always_last", override=True)
+    class AlwaysLast(RouterPolicy):
+        def select(self, workers, req):
+            return workers[-1]
+
+    cl = make_cluster(params, n_workers=3, policy="always_last")
+    for i in range(3):
+        cl.submit(Request(request_id=i, seq_len=12, seed=i))
+    cl.run_all()
+    assert [w["served"] for w in cl.stats().per_worker] == [0, 0, 3]
+
+
+# --------------------------------------------------------------------------- #
+# Parity: cluster tokens == single-pool tokens, per solver x engine x policy
+# --------------------------------------------------------------------------- #
+
+_PI = jnp.asarray(np.random.default_rng(3).dirichlet(
+    np.ones(CFG.vocab_size) * 2.0), jnp.float32)
+
+
+def _iid_masked_engine():
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    return MaskedEngine(
+        process=proc,
+        score_fn=lambda toks, t: jnp.broadcast_to(
+            _PI, toks.shape + (CFG.vocab_size,)))
+
+
+def _iid_uniform_engine():
+    uproc = uniform_process(CFG.vocab_size, loglinear_schedule())
+
+    def ratio_fn(tokens, t):
+        a = jnp.asarray(uproc.schedule.alpha(t))
+        a = a.reshape(a.shape + (1,) * (tokens.ndim + 1 - a.ndim))
+        pt = jnp.broadcast_to(a * _PI + (1 - a) / CFG.vocab_size,
+                              tokens.shape + (CFG.vocab_size,))
+        own = jnp.take_along_axis(pt, tokens[..., None], axis=-1)
+        return pt / own
+
+    return UniformEngine(process=uproc, score_fn=ratio_fn)
+
+
+MASKED_SOLVERS = ["euler", "tau_leaping", "tweedie", "theta_rk2",
+                  "theta_trapezoidal", "parallel_decoding"]
+UNIFORM_SOLVERS = ["euler", "tau_leaping", "theta_rk2", "theta_trapezoidal"]
+
+
+@pytest.mark.parametrize(
+    "engine_kind,method",
+    [("masked", m) for m in MASKED_SOLVERS]
+    + [("uniform", m) for m in UNIFORM_SOLVERS])
+def test_cluster_token_parity(engine_kind, method, params):
+    """An N-worker cluster is bit-identical per request to ONE ServingEngine
+    for every stepwise solver x engine x router policy (rebalancing on):
+    routing decides WHERE a request runs, its (seed, request_id) stream
+    decides the tokens."""
+    solver_eng = (_iid_masked_engine() if engine_kind == "masked"
+                  else _iid_uniform_engine())
+    budgets_ok = method != "parallel_decoding"  # n_steps-coupled schedule
+    sampler = SamplerConfig(method=method, n_steps=3, theta=0.4)
+    proc = solver_eng.process
+
+    def requests():
+        return [Request(request_id=i, seq_len=10, seed=i,
+                        n_steps=((2 if i % 2 else 5) if budgets_ok else None))
+                for i in range(6)]
+
+    base_eng = ServingEngine(params, CFG, proc, sampler, max_batch=2,
+                             seq_len=10, solver_engine=solver_eng)
+    for req in requests():
+        base_eng.submit(req)
+    base = {r.request_id: r for r in base_eng.run_all()}
+
+    for policy in POLICIES:
+        cl = ServingCluster(params, CFG, proc, sampler, n_workers=3,
+                            max_batch=2, seq_len=10, policy=policy,
+                            rebalance=True, solver_engine=solver_eng)
+        for req in requests():
+            cl.submit(req)
+        got = {r.request_id: r for r in cl.run_all()}
+        assert base.keys() == got.keys(), (method, policy)
+        for rid in base:
+            assert (base[rid].tokens == got[rid].tokens).all(), (method, policy)
+            assert base[rid].steps == got[rid].steps
+            assert base[rid].nfe == got[rid].nfe
+
+
+def test_cluster_serves_fhs_monolithically(params):
+    """Whole-trajectory solvers route through the cluster too (each worker
+    falls back to its monolithic batch path)."""
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    cl = ServingCluster(params, CFG, proc, SamplerConfig(method="fhs"),
+                        n_workers=2, max_batch=2, seq_len=8)
+    for i in range(4):
+        cl.submit(Request(request_id=i, seq_len=8, seed=i))
+    results = cl.run_all()
+    assert sorted(r.request_id for r in results) == [0, 1, 2, 3]
+    for r in results:
+        assert r.nfe == 8  # fhs: one eval per position
+        assert (r.tokens < CFG.vocab_size).all()
+
+
+# --------------------------------------------------------------------------- #
+# Routing + rebalancing semantics
+# --------------------------------------------------------------------------- #
+
+
+def test_round_robin_cycles_workers(params):
+    cl = make_cluster(params, n_workers=3, policy="round_robin")
+    for i in range(6):
+        cl.submit(Request(request_id=i, seq_len=12, seed=i))
+    cl.run_all()
+    assert [w["served"] for w in cl.stats().per_worker] == [2, 2, 2]
+
+
+def test_jsq_avoids_backlogged_worker(params):
+    """A worker buried under a straggler queue is skipped by JSQ while a
+    blind round-robin keeps feeding it."""
+    cl = make_cluster(params, n_workers=2, max_batch=1, n_steps=2,
+                      policy="join_shortest_queue")
+    # Bury worker 0 (both policies send the first request there), then
+    # submit a burst: JSQ must spread by queue length.
+    cl.submit(Request(request_id=0, seq_len=12, seed=0, n_steps=8))
+    cl.step()
+    for i in range(1, 4):
+        cl.submit(Request(request_id=i, seq_len=12, seed=i, n_steps=2))
+    cl.step()
+    per = {w.worker_id: w.backlog for w in cl.workers}
+    assert per[1] >= 2        # the burst went to the idle worker
+    assert per[0] <= 2        # worker 0 only has its straggler (+ at most 1)
+    cl.run_all()
+
+
+def test_least_remaining_nfe_weighs_budgets(params):
+    """Budget-aware placement: one 12-step straggler outweighs several
+    1-step drafts, so new arrivals join the worker with more requests but
+    less remaining work."""
+    cl = make_cluster(params, n_workers=2, max_batch=1, n_steps=2,
+                      policy="least_remaining_nfe")
+    cl.submit(Request(request_id=0, seq_len=12, seed=0, n_steps=12))
+    cl.submit(Request(request_id=1, seq_len=12, seed=1, n_steps=1))
+    results = cl.step()   # w0: straggler RUNNING; w1: draft RUNNING
+    cl.submit(Request(request_id=2, seq_len=12, seed=2, n_steps=1))
+    cl.submit(Request(request_id=3, seq_len=12, seed=3, n_steps=1))
+    results += cl.step()
+    # Both follow-ups picked worker 1 (12 remaining steps on w0 vs <= 3).
+    assert cl.workers[0].engine.queued == 0
+    results += cl.run_all()
+    assert sorted(r.request_id for r in results) == [0, 1, 2, 3]
+    assert [w["served"] for w in cl.stats().per_worker][0] == 1
+
+
+def test_rebalance_moves_queued_only(params):
+    """Rebalancing drains a pile-up onto idle workers but never touches
+    RUNNING slots."""
+    cl = make_cluster(params, n_workers=2, max_batch=1, n_steps=2,
+                      policy="round_robin", rebalance=False)
+    # Round-robin a straggler onto each worker, then pile 4 queued requests
+    # onto worker 0 by toggling rebalance off/on around manual submits.
+    cl.submit(Request(request_id=0, seq_len=12, seed=0, n_steps=8))
+    cl.submit(Request(request_id=1, seq_len=12, seed=1, n_steps=8))
+    cl.step()
+    for i in range(2, 6):
+        cl.workers[0].engine.submit(Request(request_id=i, seq_len=12, seed=i,
+                                            n_steps=2))
+    assert cl.workers[0].engine.queued == 4
+    running_before = {w.worker_id: list(w.engine.active_slots)
+                      for w in cl.workers}
+    cl.rebalance = True
+    cl.step()
+    # Backlogs leveled (5 vs 1 -> 3 vs 3), running slots untouched.
+    assert cl.rebalanced == 2
+    assert abs(cl.workers[0].backlog - cl.workers[1].backlog) <= 1
+    for w in cl.workers:
+        assert list(w.engine.active_slots) == running_before[w.worker_id]
+    results = cl.run_all()
+    assert sorted(r.request_id for r in results) == list(range(6))
+
+
+def test_rebalance_preserves_submit_time_accounting(params):
+    """A re-routed request's queue delay spans its ORIGINAL submit, not the
+    last hop (monotonic stamps ride along on steal/submit)."""
+    cl = make_cluster(params, n_workers=2, max_batch=1, n_steps=2,
+                      policy="round_robin", rebalance=True)
+    for i in range(4):
+        cl.submit(Request(request_id=i, seq_len=12, seed=i, n_steps=2))
+    results = cl.run_all()
+    for r in results:
+        assert r.latency_s >= r.queue_delay_s >= 0.0
+    # Later requests waited at least as long as the first admitted ones.
+    by_id = {r.request_id: r for r in results}
+    assert by_id[3].queue_delay_s >= by_id[0].queue_delay_s
+
+
+def test_steal_queued_pops_newest_first(params):
+    eng = ServingEngine(params, CFG,
+                        masked_process(CFG.vocab_size, loglinear_schedule()),
+                        SamplerConfig(method="theta_trapezoidal", n_steps=2,
+                                      theta=0.5),
+                        max_batch=1, seq_len=12)
+    for i in range(3):
+        eng.submit(Request(request_id=i, seq_len=12, seed=i))
+    stolen = eng.steal_queued(2)
+    assert [req.request_id for req, _ in stolen] == [2, 1]
+    assert eng.queued == 1
+    assert eng.steal_queued(5) and eng.queued == 0
+    assert eng.steal_queued(1) == []
+
+
+def test_remaining_work_counts_running_and_queued(params):
+    eng = ServingEngine(params, CFG,
+                        masked_process(CFG.vocab_size, loglinear_schedule()),
+                        SamplerConfig(method="theta_trapezoidal", n_steps=4,
+                                      theta=0.5),
+                        max_batch=1, seq_len=12)
+    assert eng.remaining_work() == 0
+    eng.submit(Request(request_id=0, seq_len=12, seed=0, n_steps=6))
+    eng.submit(Request(request_id=1, seq_len=12, seed=1))        # default 4
+    assert eng.remaining_work() == 10
+    eng.step()                       # admits req 0, runs 1 of its 6 steps
+    assert eng.remaining_work() == 9
+
+
+def test_cluster_stats_aggregates(params):
+    cl = make_cluster(params, n_workers=2, n_steps=2, policy="round_robin")
+    for i in range(4):
+        cl.submit(Request(request_id=i, seq_len=12, seed=i))
+    cl.run_all()
+    st = cl.stats()
+    assert st.n_workers == 2 and st.policy == "round_robin"
+    assert st.requests_served == 4 and st.dispatched == 4
+    assert st.global_queued == 0
+    assert st.paid_slot_steps == sum(w["paid_slot_steps"]
+                                     for w in st.per_worker)
+    assert 0.0 < st.occupancy <= 1.0
+    assert st.latency_p95_s >= st.latency_p50_s >= 0.0
+    assert st.queue_delay_p95_s >= st.queue_delay_p50_s >= 0.0
+    assert {w["worker_id"] for w in st.per_worker} == {0, 1}
+    assert st.as_dict()["n_workers"] == 2
+    # Results carry the worker that served them.
+    cl2 = make_cluster(params, n_workers=2, n_steps=2)
+    cl2.submit(Request(request_id=0, seq_len=12, seed=0))
+    (res,) = cl2.run_all()
+    assert res.worker in (0, 1)
+
+
+def test_router_validation(params):
+    with pytest.raises(ValueError, match="at least one"):
+        Router([])
+    eng = ServingEngine(params, CFG,
+                        masked_process(CFG.vocab_size, loglinear_schedule()),
+                        SamplerConfig(method="theta_trapezoidal", n_steps=2,
+                                      theta=0.5), max_batch=1, seq_len=12)
+    with pytest.raises(ValueError, match="duplicate"):
+        Router([PoolWorker(0, eng), PoolWorker(0, eng)])
+    with pytest.raises(ValueError, match="n_workers"):
+        make_cluster(params, n_workers=0)
+    with pytest.raises(ValueError, match="devices"):
+        make_cluster(params, n_workers=2, devices=[None])
+
+
+def test_router_submit_validates_like_engine(params):
+    """A request no worker could serve is rejected at Router.submit — not
+    mid-dispatch after it already left the global queue."""
+    cl = make_cluster(params, n_workers=2, seq_len=12)
+    with pytest.raises(ValueError, match="seq_len"):
+        cl.submit(Request(request_id=0, seq_len=64))
+    with pytest.raises(ValueError, match="n_steps"):
+        cl.submit(Request(request_id=1, seq_len=12, n_steps=0))
+    assert cl.queued == 0 and cl.run_all() == []
+
+
+# --------------------------------------------------------------------------- #
+# Device pinning (opt-in: REPRO_FORCE_HOST_DEVICES=8)
+# --------------------------------------------------------------------------- #
+
+
+def test_workers_pinned_to_distinct_devices(params, multi_device):
+    """With a multi-device host each worker's pool state (and its results)
+    live on that worker's own shard device; tokens still match single-pool
+    serving bit for bit."""
+    cl = make_cluster(params, n_workers=2, n_steps=2)
+    devs = [d for d in data_shard_devices(2)]
+    assert devs == list(multi_device[:2])
+    placed = [next(iter(w.engine._state.x.devices())) for w in cl.workers]
+    assert placed == devs
+    for i in range(4):
+        cl.submit(Request(request_id=i, seq_len=12, seed=i))
+    results = {r.request_id: r for r in cl.run_all()}
+    assert {r.worker for r in results.values()} == {0, 1}
+
+    eng = ServingEngine(params, CFG,
+                        masked_process(CFG.vocab_size, loglinear_schedule()),
+                        SamplerConfig(method="theta_trapezoidal", n_steps=2,
+                                      theta=0.5), max_batch=2, seq_len=12)
+    for i in range(4):
+        eng.submit(Request(request_id=i, seq_len=12, seed=i))
+    for r in eng.run_all():
+        assert (r.tokens == results[r.request_id].tokens).all()
+
+
+def test_data_shard_devices_from_mesh(multi_device):
+    """Mesh-aware anchors: the device grid's "data" axis is split across
+    workers (serve rules replicate weights along "data")."""
+    from jax.sharding import Mesh
+
+    n = min(4, len(multi_device))
+    mesh = Mesh(np.asarray(multi_device[:n]).reshape(n, 1), ("data", "model"))
+    devs = data_shard_devices(n, mesh=mesh)
+    assert devs == list(multi_device[:n])
+    # Fewer workers than shards: distinct anchors from the data axis.
+    devs2 = data_shard_devices(max(n // 2, 1), mesh=mesh)
+    assert len(set(devs2)) == len(devs2)
+    # More workers than shards: cycle over the shard anchors — workers
+    # time-share shards rather than grabbing model-parallel peer devices.
+    mesh2 = Mesh(np.asarray(multi_device[:n]).reshape(2, n // 2),
+                 ("data", "model"))
+    anchors = [multi_device[0], multi_device[n // 2]]
+    assert data_shard_devices(4, mesh=mesh2) == anchors + anchors

@@ -480,6 +480,41 @@ def test_pending_finalize_age_bound(params):
     assert [r.request_id for r in rest] == [1]
 
 
+def test_pending_age_resets_after_flush(params):
+    """Each age-bound (head-of-line) flush starts a fresh age window: the
+    next drain is held again for up to finalize_batch ticks, it does not
+    inherit the previous batch's age."""
+    eng = make_engine(params, n_steps=8, max_batch=2, finalize_batch=2)
+    eng.submit(Request(request_id=0, seq_len=16, seed=0, n_steps=1))
+    eng.submit(Request(request_id=1, seq_len=16, seed=1, n_steps=8))
+    assert eng.step() == []                  # req 0 drains, held (age 1)
+    assert eng.step() == []                  # age 2 == finalize_batch: held
+    assert [r.request_id for r in eng.step()] == [0]   # age 3: flushed
+    # A new drain right after the flush opens its own window.
+    eng.submit(Request(request_id=2, seq_len=16, seed=2, n_steps=1))
+    assert eng.step() == []                  # req 2 admitted + drains
+    assert eng.pending_finalize == 1
+    assert eng.step() == []                  # held again: age 2, not 5
+    assert [r.request_id for r in eng.step()] == [2]
+    assert [r.request_id for r in eng.run_all()] == [1]
+
+
+def test_finalize_cost_accounting_matches_flush(params):
+    """stats()['finalize_passes'/'finalize_rows'] mirror SlotPool.finalize_cost
+    for a flush larger than one bucket (capacity-chunked, ladder-padded)."""
+    eng = make_engine(params, n_steps=2, max_batch=4, finalize_batch=3,
+                      scheduler_stride=2)
+    # 3 requests drain in one stride-2 tick -> one flush of 3 rows.
+    for i in range(3):
+        eng.submit(Request(request_id=i, seq_len=16, seed=i))
+    results = eng.run_all()
+    assert sorted(r.request_id for r in results) == [0, 1, 2]
+    passes, paid = eng._pool.finalize_cost(3)
+    assert (passes, paid) == (1, 4)          # one width-4 bucket (ladder 1,2,4)
+    assert eng.stats()["finalize_passes"] == passes
+    assert eng.stats()["finalize_rows"] == paid
+
+
 def test_auto_stride_lands_on_drains(params):
     """scheduler_stride='auto' strides to the earliest drain (pow2-rounded):
     6-step budgets run as a 4-tick then a 2-tick, not 6 host round-trips."""

@@ -14,7 +14,12 @@ from repro.launch.roofline import (
     shape_bytes,
 )
 from repro.launch.specs import SHAPES, abstract_params, shape_supported
-from repro.sharding.rules import batch_spec, logical_to_spec, rules_for
+from repro.sharding.rules import (
+    batch_spec,
+    data_shard_devices,
+    logical_to_spec,
+    rules_for,
+)
 
 ASSIGNED = [a for a in ARCH_IDS if a not in ("radd_small", "maskgit_small")]
 
@@ -45,6 +50,44 @@ def test_batch_spec_fallbacks():
     mesh = fake_mesh()
     assert batch_spec(mesh, 8) == P(("data",))
     assert batch_spec(mesh, 1) == P(None)  # long_500k fallback
+
+
+def test_batch_spec_non_divisible_batch_replicates():
+    """A batch the mesh's data ways don't divide falls back to replication
+    (pjit argument shardings need exact divisibility)."""
+    mesh = fake_mesh()                           # data=2
+    assert batch_spec(mesh, 3) == P(None)
+    assert batch_spec(mesh, 7) == P(None)
+    # pod mesh: ("pod","data") when fully divisible, data-only when just the
+    # pod product fails, replication when nothing divides.
+    pod = fake_mesh(shape=(2, 2, 1), axes=("pod", "data", "model"))
+    assert batch_spec(pod, 8) == P(("pod", "data"))
+    assert batch_spec(pod, 2) == P("data")       # 4 ways fail, data's 2 fit
+    assert batch_spec(pod, 3) == P(None)
+
+
+def test_logical_to_spec_reused_mesh_axis_in_tuple_target():
+    """A tuple target whose mesh axes were already consumed replicates
+    instead of double-assigning an axis."""
+    mesh = fake_mesh(shape=(2, 2, 1), axes=("pod", "data", "model"))
+    rules = {"a": ("pod", "data"), "b": "data", "c": "model"}
+    spec = logical_to_spec(("a", "b", "c"), rules, mesh, (4, 4, 1))
+    assert spec == P(("pod", "data"), None, "model")
+    # Same rules, reversed order: "b" claims "data" first, so the tuple
+    # target "a" (which includes "data") must fully replicate.
+    spec = logical_to_spec(("b", "a", "c"), rules, mesh, (4, 4, 1))
+    assert spec == P("data", None, "model")
+
+
+def test_data_shard_devices_fallbacks():
+    """Worker anchors degrade gracefully: flat devices without a mesh,
+    logical (None) workers when the host is short."""
+    devs = jax.devices()
+    assert data_shard_devices(1) == [devs[0]]
+    many = data_shard_devices(len(devs) + 1)
+    assert many == [None] * (len(devs) + 1)
+    with pytest.raises(ValueError, match="n_workers"):
+        data_shard_devices(0)
 
 
 @pytest.mark.parametrize("arch", ASSIGNED)
