@@ -17,6 +17,7 @@ EXPERIMENTS.md-scale numbers.
   kernels            -> kernel microbenches + bytes-touched model
   roofline           -> §Roofline table from the dry-run artifact
   serve_throughput   -> continuous batching / strided executor requests/sec
+  serve_fabric       -> multi-host fabric failure recovery / req/s retention
 """
 from __future__ import annotations
 
@@ -122,6 +123,13 @@ def main() -> None:
                 n_requests=16, max_batch=4, short_steps=3, long_steps=12,
                 seq_len=16, load=1.67, trace_seed=0,
                 cluster=not args.serve_skip_cluster)),
+        # Own section (not folded into serve_throughput) so the fabric-smoke
+        # CI job's `--only serve_fabric` run merges into BENCH_solvers.json
+        # without clobbering the serve_throughput rows.
+        "serve_fabric": (lambda: serve_throughput.fabric_sweep(
+            n_requests=32, seq_len=16)[0]) if args.full else (
+            lambda: serve_throughput.fabric_sweep(
+                n_requests=24, seq_len=12)[0]),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -36,6 +36,14 @@ saturation — all priced by the *critical shard* (the largest per-worker
 total of paid score-forward rows; shards run in parallel, so the most loaded
 one gates completion) and parity-checked against single-pool serving.
 
+``fabric_sweep`` replays a saturated trace through the multi-host
+``ServingFabric`` and kills 1 of 4 workers mid-backlog: recovery time
+(kill -> the victim's replayed requests drained, in fabric ticks), req/s
+retention of the degraded fleet vs failure-free baseline, and the elastic-
+rejoin leg — every leg asserting zero lost requests and tokens bit-identical
+to single-pool serving (failure recovery replays original (seed, request_id)
+streams).
+
     PYTHONPATH=src python -m benchmarks.serve_throughput --smoke
 """
 from __future__ import annotations
@@ -59,10 +67,12 @@ from repro.core import (
 from repro.models import init_params
 from repro.models.config import ModelConfig
 from repro.serve import (
+    FabricRouter,
     Request,
     Router,
     ServingCluster,
     ServingEngine,
+    ServingFabric,
     make_score_fn,
 )
 from repro.serve.trace import poisson_trace, skewed_trace  # noqa: F401 - shared
@@ -528,6 +538,205 @@ def cluster_sweep(n_workers: int = 4, max_batch: int = 2,
     return rows, out
 
 
+# --------------------------------------------------------------------------- #
+# Multi-host fabric: failure recovery time and degraded-fleet throughput
+# --------------------------------------------------------------------------- #
+
+
+def replay_fabric(fab: FabricRouter, arrivals: np.ndarray,
+                  budgets: np.ndarray, seq_len: int,
+                  kill_tick: int | None = None, victim: int | None = None):
+    """Drive a FabricRouter over a trace on the parallel tick clock.
+
+    Same virtual clock as :func:`replay_cluster` — one fabric tick = every
+    live worker advances one solver step concurrently, so one tick costs one
+    step-unit regardless of fleet size and a degraded fleet pays its price in
+    *more ticks* to drain the same backlog.  When a ``kill_tick``/``victim``
+    is given, the victim's in-flight ledger is snapshotted just before the
+    kill fires so recovery time (kill -> last victim request finished, in
+    ticks) can be measured.
+
+    Returns ``(results, span_ticks, recovery_ticks)``; ``recovery_ticks`` is
+    None for failure-free runs.
+    """
+    pending = collections.deque(
+        (i, float(t), int(n)) for i, (t, n) in enumerate(zip(arrivals, budgets)))
+    clock = 0.0
+    finish = {}
+    results = []
+    victim_reqs, kill_clock = None, None
+    while pending or fab.busy:
+        while pending and pending[0][1] <= clock:
+            i, _, n = pending.popleft()
+            fab.submit(Request(request_id=i, seq_len=seq_len, seed=i,
+                               n_steps=n))
+        if not fab.busy:
+            clock = max(clock, pending[0][1])  # idle until the next arrival
+            continue
+        if (kill_tick is not None and victim_reqs is None
+                and fab.tick + 1 >= kill_tick):
+            # The work the dying worker will take down with it.
+            victim_reqs = set(fab._handles[victim].assigned)
+            kill_clock = clock
+        done = fab.step()
+        clock += 1.0
+        for r in done:
+            finish[r.request_id] = clock
+            results.append(r)
+    span = max(finish.values()) - float(arrivals[0])
+    recovery = (max(finish[rid] for rid in victim_reqs) - kill_clock
+                if victim_reqs else None)
+    return results, span, recovery
+
+
+def fabric_sweep(n_workers: int = 4, max_batch: int = 2,
+                 n_requests: int = 32, short_steps: int = 3,
+                 long_steps: int = 24, seq_len: int = 16, vocab: int = 23,
+                 method: str = "theta_trapezoidal", load: float = 4.0,
+                 trace_seed: int = 4, kill_tick: int = 4,
+                 heartbeat_timeout: int = 2,
+                 min_retention: float = 0.5) -> tuple[list[str], dict]:
+    """Fabric under fire: recovery time and req/s retention with 1 of
+    ``n_workers`` workers dead.
+
+    Three legs over one saturated Poisson straggler trace (a standing
+    backlog, so throughput measures the fleet, not the arrival rate):
+
+    * **baseline** — failure-free ``n_workers``-worker fabric;
+    * **degraded** — the same trace with worker 0 killed at ``kill_tick``
+      (mid-backlog: its queue and running slots are lost).  Detection is the
+      heartbeat timeout, recovery replays the ledger; measured: recovery time
+      in ticks (kill -> the last request the victim held finishes) and req/s
+      **retention** vs baseline — a pure tick ratio, wall-clock-noise free;
+    * **rejoin** — degraded plus a replacement worker joining 3 ticks after
+      detection, showing elastic join claws capacity back.
+
+    Every leg asserts ZERO lost requests and per-request tokens bit-identical
+    to a failure-free single-pool run — failure recovery replays the original
+    ``(seed, request_id)`` streams, so a crash is invisible in the samples.
+    The gate: degraded retention >= ``min_retention`` (0 disables) — with a
+    standing backlog, losing 1 of 4 workers should cost at most ~a quarter of
+    throughput plus the replay bubble, not collapse it.
+
+    Returns (csv rows, {"retention": ..., "rejoin_retention": ...,
+    "recovery_ticks": ..., "detection_ticks": ...}).
+    """
+    cfg = _model(vocab)
+    process = masked_process(cfg.vocab_size, loglinear_schedule())
+    sampler = SamplerConfig(method=method, n_steps=short_steps, theta=0.4)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    solver_engine = MaskedEngine(process=process,
+                                 score_fn=make_score_fn(params, cfg))
+    capacity = n_workers * max_batch
+    arrivals, budgets = poisson_trace(n_requests, capacity, short_steps,
+                                      long_steps, load=load, seed=trace_seed)
+    n_stragglers = int((budgets == long_steps).sum())
+    print(f"fabric trace: {n_requests} requests over {n_workers} workers x "
+          f"{max_batch} slots at {load:.1f}x load, {n_stragglers} stragglers "
+          f"({long_steps} vs {short_steps} steps); kill worker 0 at tick "
+          f"{kill_tick}, heartbeat timeout {heartbeat_timeout} ticks")
+
+    # Parity oracle: one pool, ground truth for any fleet/failure shape.
+    oracle_eng = ServingEngine(params, cfg, process, sampler,
+                               max_batch=max_batch, seq_len=seq_len,
+                               solver_engine=solver_engine)
+    for i, n in enumerate(budgets):
+        oracle_eng.submit(Request(request_id=i, seq_len=seq_len, seed=i,
+                                  n_steps=int(n)))
+    oracle = {r.request_id: r.tokens for r in oracle_eng.run_all()}
+
+    # One per-step device time prices tick-units for every leg.
+    adv = jax.jit(advance)
+    state = adv(oracle_eng._state)
+    t0 = time.perf_counter()
+    for _ in range(20):
+        state = adv(state)
+    np.asarray(state.step)
+    sec_per_step = (time.perf_counter() - t0) / 20
+
+    def serve(label, *, kill=False, rejoin=False):
+        fab = ServingFabric(params, cfg, process, sampler,
+                            n_workers=n_workers, max_batch=max_batch,
+                            seq_len=seq_len, policy="least_remaining_nfe",
+                            rebalance=True,
+                            heartbeat_timeout=heartbeat_timeout,
+                            solver_engine=solver_engine)
+        if kill:
+            fab.kill_worker(0, at_tick=kill_tick)
+        if rejoin:
+            # Replacement lands shortly after the death can be detected.
+            fab.schedule_join(kill_tick + heartbeat_timeout + 3)
+        results, span, recovery = replay_fabric(
+            fab, arrivals, budgets, seq_len,
+            kill_tick=kill_tick if kill else None, victim=0 if kill else None)
+        st = fab.stats()
+        assert len(results) == n_requests, \
+            f"{label}: lost {n_requests - len(results)} requests"
+        for r in results:
+            assert (r.tokens == oracle[r.request_id]).all(), \
+                f"{label}: recovery changed request {r.request_id}'s tokens"
+        if kill:
+            assert st.deaths == 1 and st.recovered > 0, label
+        detection = (next(h.died_tick for h in fab.workers
+                          if not h.alive) - kill_tick) if kill else None
+        return {
+            "rate": n_requests / (span * sec_per_step),
+            "span": span,
+            "recovery": recovery,
+            "detection": detection,
+            "recovered": st.recovered,
+            "stats": st,
+        }
+
+    rows, out = [], {}
+    legs = [("baseline", dict()),
+            ("degraded_1of4_dead", dict(kill=True)),
+            ("kill_then_rejoin", dict(kill=True, rejoin=True))]
+    runs = {}
+    for label, kw in legs:
+        runs[label] = m = serve(label, **kw)
+        extra = ""
+        if m["recovery"] is not None:
+            extra = (f" (detected +{m['detection']} ticks, recovered "
+                     f"{m['recovered']} requests, backlog drained "
+                     f"{m['recovery']:.0f} ticks after kill)")
+        print(f"  {label:>20}: {m['rate']:.2f} req/s, span {m['span']:.0f} "
+              f"ticks, tokens bit-identical{extra}")
+        rows.append(common.csv_row(
+            f"serve_throughput/fabric/{label}",
+            m["span"] * sec_per_step * 1e6 / n_requests,
+            f"req_per_s_service={m['rate']:.2f} span_ticks={m['span']:.0f}"
+            + (f" recovery_ticks={m['recovery']:.0f} "
+               f"detection_ticks={m['detection']} "
+               f"recovered={m['recovered']}" if m["recovery"] is not None
+               else "")))
+
+    out["retention"] = (runs["degraded_1of4_dead"]["rate"]
+                        / runs["baseline"]["rate"])
+    out["rejoin_retention"] = (runs["kill_then_rejoin"]["rate"]
+                               / runs["baseline"]["rate"])
+    out["recovery_ticks"] = runs["degraded_1of4_dead"]["recovery"]
+    out["detection_ticks"] = runs["degraded_1of4_dead"]["detection"]
+    print(f"  req/s retention with 1 of {n_workers} workers dead: "
+          f"{out['retention']:.2f}x baseline (rejoin claws back to "
+          f"{out['rejoin_retention']:.2f}x); recovery "
+          f"{out['recovery_ticks']:.0f} ticks, detection "
+          f"+{out['detection_ticks']} ticks")
+    rows.append(common.csv_row(
+        "serve_throughput/fabric_recovery", 0.0,
+        f"retention_1of{n_workers}_dead={out['retention']:.2f}x "
+        f"rejoin_retention={out['rejoin_retention']:.2f}x "
+        f"recovery_ticks={out['recovery_ticks']:.0f} "
+        f"detection_ticks={out['detection_ticks']}"))
+    # RuntimeError (not SystemExit) so benchmarks.run records the failure and
+    # still writes the JSON mirror.
+    if min_retention and out["retention"] < min_retention:
+        raise RuntimeError(
+            f"fabric sweep: degraded retention {out['retention']:.2f}x < "
+            f"{min_retention}x with 1 of {n_workers} workers dead")
+    return rows, out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -541,7 +750,16 @@ def main() -> None:
                     help="skip the sharded-cluster sweep (router policies)")
     ap.add_argument("--cluster-only", action="store_true",
                     help="run ONLY the sharded-cluster sweep")
+    ap.add_argument("--skip-fabric", action="store_true",
+                    help="skip the multi-host fabric sweep (failure recovery)")
+    ap.add_argument("--fabric-only", action="store_true",
+                    help="run ONLY the multi-host fabric sweep")
     args = ap.parse_args()
+    if args.fabric_only:
+        kw = (dict(n_requests=24, seq_len=12) if args.smoke
+              else dict(n_requests=32, seq_len=16))
+        fabric_sweep(method=args.method, **kw)
+        return
     if args.cluster_only:
         kw = (dict(n_requests=24, seq_len=12) if args.smoke
               else dict(n_requests=32, seq_len=16))
@@ -570,6 +788,13 @@ def main() -> None:
         cluster_kw = (dict(n_requests=24, seq_len=12) if args.smoke
                       else dict(n_requests=32, seq_len=16))
         cluster_sweep(method=args.method, **cluster_kw)
+    if not args.skip_fabric:
+        # Gate (degraded retention >= 0.5x baseline with 1 of 4 workers dead)
+        # lives inside fabric_sweep — tick counts are deterministic, so it is
+        # wall-clock-noise free too.
+        fabric_kw = (dict(n_requests=24, seq_len=12) if args.smoke
+                     else dict(n_requests=32, seq_len=16))
+        fabric_sweep(method=args.method, **fabric_kw)
     ratio, stride_ratio = speedups
     if ratio < 1.5:
         raise SystemExit(f"continuous batching speedup {ratio:.2f}x < 1.5x")

@@ -14,6 +14,18 @@ Poisson arrival process (R requests/sec on the wall clock, gaps from the
 shared trace generator in ``repro.serve.trace``; ``--trace-seed`` fixes the
 gap sequence), so queue-delay and latency numbers reflect traffic instead of
 a pre-loaded backlog.
+
+Fabric mode serves through the multi-host fabric instead — heartbeat-
+monitored workers behind a transport, with failure recovery and elastic
+join:
+
+    ... --workers 4 --fabric process --heartbeat-timeout 3
+
+``--fabric loopback`` keeps the workers in-process (deterministic, the chaos
+path); ``--fabric process`` runs one engine-owning OS process per worker.
+``--kill-worker ID@TICK`` (repeatable) crash-injects mid-run: the dead
+worker's requests are replayed with their original (seed, request_id) keys,
+so served tokens are bit-identical to the failure-free run.
 """
 from __future__ import annotations
 
@@ -32,6 +44,7 @@ from repro.serve import (
     Request,
     ServingCluster,
     ServingEngine,
+    ServingFabric,
     list_policies,
     poisson_arrivals,
 )
@@ -109,7 +122,25 @@ def main() -> None:
                          "per second (0 = submit every request up front)")
     ap.add_argument("--trace-seed", type=int, default=0,
                     help="RNG seed for the Poisson arrival gaps")
+    ap.add_argument("--fabric", default="off",
+                    choices=["off", "loopback", "process"],
+                    help="serve through the multi-host fabric: 'loopback' = "
+                         "in-process workers (deterministic, fault-"
+                         "injectable), 'process' = one engine-owning OS "
+                         "process per worker (weights rebuilt per host from "
+                         "--seed; dead workers are detected by heartbeat "
+                         "timeout and their requests replayed bit-"
+                         "identically)")
+    ap.add_argument("--heartbeat-timeout", type=int, default=3,
+                    help="fabric ticks without a heartbeat before a worker "
+                         "is declared dead and its requests replayed")
+    ap.add_argument("--kill-worker", action="append", default=[],
+                    metavar="ID@TICK",
+                    help="fabric fault injection: crash worker ID at fabric "
+                         "tick TICK (repeatable, e.g. --kill-worker 0@10)")
     args = ap.parse_args()
+    if args.kill_worker and args.fabric == "off":
+        ap.error("--kill-worker requires --fabric loopback|process")
     stride = (args.scheduler_stride if args.scheduler_stride == "auto"
               else int(args.scheduler_stride))
 
@@ -124,8 +155,19 @@ def main() -> None:
                      continuous=not args.run_to_completion)
     mesh = make_host_mesh()
     with mesh:
-        if args.workers > 1:
+        if args.fabric != "off":
             # continuous/run-to-completion applies per worker pool.
+            target = ServingFabric(params, cfg, process, sampler,
+                                   n_workers=args.workers,
+                                   transport=args.fabric,
+                                   policy=args.router_policy,
+                                   rebalance=args.rebalance,
+                                   heartbeat_timeout=args.heartbeat_timeout,
+                                   param_seed=args.seed, **engine_kw)
+            for spec in args.kill_worker:
+                wid, _, tick = spec.partition("@")
+                target.kill_worker(int(wid), at_tick=int(tick or 0) or None)
+        elif args.workers > 1:
             target = ServingCluster(params, cfg, process, sampler,
                                     n_workers=args.workers,
                                     policy=args.router_policy,
@@ -140,7 +182,11 @@ def main() -> None:
                                      seed=args.trace_seed)
                     if args.arrival_rate > 0 else None)
         t0 = time.monotonic()
-        results = drive(target, requests, arrivals)
+        try:
+            results = drive(target, requests, arrivals)
+        finally:
+            if args.fabric != "off":
+                target.close()
     dt = time.monotonic() - t0
     toks = np.stack([r.tokens for r in results])
 
@@ -158,7 +204,19 @@ def main() -> None:
           f"p95 {np.percentile(lat, 95):.2f}s  "
           f"(queue delay p50 {np.percentile(qd, 50):.2f}s  "
           f"p95 {np.percentile(qd, 95):.2f}s)")
-    if args.workers > 1:
+    if args.fabric != "off":
+        st = target.stats()
+        print(f"fabric[{args.fabric}]: {st.n_workers}/{st.n_spawned} workers "
+              f"live, policy {st.policy}, {st.tick} ticks, "
+              f"{st.heartbeats} heartbeats (timeout "
+              f"{st.heartbeat_timeout} ticks), {st.deaths} deaths, "
+              f"{st.recovered} requests replayed, {st.joins} joins, "
+              f"{st.rebalanced} rebalanced")
+        for w in st.per_worker:
+            state = ("live" if w["alive"]
+                     else f"died tick {w['died_tick']}")
+            print(f"  worker {w['worker_id']}: served {w['served']} ({state})")
+    elif args.workers > 1:
         st = target.stats()
         print(f"cluster: {st.n_workers} workers, policy {st.policy}, "
               f"occupancy {st.occupancy:.1%} of {st.paid_slot_steps} paid "

@@ -18,10 +18,29 @@ from .engine import (
     ar_generate,
     make_score_fn,
 )
-from .trace import poisson_arrivals, poisson_trace, skewed_trace
+from .fabric import FabricRouter, FabricStats, ServingFabric, WorkerHandle
+from .trace import (
+    FailureEvent,
+    failure_schedule,
+    poisson_arrivals,
+    poisson_trace,
+    skewed_trace,
+)
+from .transport import (
+    Heartbeat,
+    HostEngineSpec,
+    LoopbackTransport,
+    ProcessTransport,
+    TickReport,
+    Transport,
+)
 
 __all__ = ["Request", "Result", "ServingEngine", "ar_generate", "make_score_fn",
            "QUEUED", "RUNNING", "FINISHED",
            "ClusterStats", "PoolWorker", "Router", "RouterPolicy",
            "ServingCluster", "get_policy", "list_policies", "register_policy",
-           "poisson_arrivals", "poisson_trace", "skewed_trace"]
+           "poisson_arrivals", "poisson_trace", "skewed_trace",
+           "FailureEvent", "failure_schedule",
+           "Transport", "TickReport", "Heartbeat", "LoopbackTransport",
+           "ProcessTransport", "HostEngineSpec",
+           "FabricRouter", "FabricStats", "ServingFabric", "WorkerHandle"]

@@ -268,15 +268,20 @@ class Router:
         self._latencies: List[float] = []
 
     # ------------------------------------------------------------- lifecycle
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, submit_t: Optional[float] = None) -> None:
         """Stamp ``req`` into the global queue (dispatch happens at the next
         tick boundary, when the policy sees current worker state).  Requests
         no worker could serve are rejected HERE, like the single-engine
         submit — never mid-dispatch after they already left the queue (the
-        fleet is homogeneous, so any worker's checks stand for all)."""
+        fleet is homogeneous, so any worker's checks stand for all).
+
+        ``submit_t`` mirrors :meth:`ServingEngine.submit`: replayed or
+        re-routed requests keep their original stamp, so queue-delay and
+        latency accounting span the ORIGINAL submit even after recovery."""
         self.workers[0].engine.validate(req)
         req.status = QUEUED
-        self._queue.append((req, time.monotonic()))
+        self._queue.append((req, time.monotonic() if submit_t is None
+                            else submit_t))
 
     @property
     def queued(self) -> int:

@@ -1,0 +1,482 @@
+"""Multi-host serving fabric: heartbeat-monitored workers, failure recovery
+with bit-exact replay, elastic join/leave.
+
+:class:`FabricRouter` extends the cluster :class:`~repro.serve.cluster.Router`
+from "policy-routed in-process workers" to a fleet it can only reach through a
+:class:`~repro.serve.transport.Transport` — and that can therefore *fail*:
+
+* **heartbeats + liveness timeout** — every fabric tick collects a
+  :class:`~repro.serve.transport.TickReport` per worker; a worker whose
+  reports carry no heartbeat for more than ``heartbeat_timeout`` consecutive
+  ticks is declared dead and fenced (``transport.kill`` — a declared-dead
+  worker can never answer again, so no result races the replay);
+* **dispatch ledger** — every request handed to a worker is remembered as
+  ``(request, original submit stamp, worker)`` until its result arrives.
+  When a worker dies, its unfinished ledger entries are requeued at the
+  *front* of the global queue with their **original** ``(seed, request_id)``
+  keys and submit stamps: tokens come from the request's private PRNG stream,
+  so the recovered run is **bit-identical** to a failure-free run (the
+  parity bar `tests/test_cluster.py` set, re-asserted per chaos scenario in
+  `tests/test_fabric.py`), and queue-delay/latency accounting still spans the
+  original submit;
+* **elastic join/leave** — :meth:`FabricRouter.add_worker` registers a fresh
+  worker mid-run (``transport.spawn``) and immediately hands it rebalanced
+  QUEUED work; ``schedule_join`` plays the same move at a future tick, which
+  is how a :func:`repro.serve.trace.failure_schedule` rejoin is wired up;
+* **first-class fault injection** — :meth:`kill_worker(id, at_tick)` crashes
+  a worker now or at a scheduled tick (the transport loses its state; the
+  router finds out the honest way, via missed heartbeats), and the loopback
+  transport adds exact heartbeat drop/delay schedules.  Robustness is a test
+  input, not an accident.
+
+Router policies are reused unchanged: they see :class:`WorkerHandle` views
+whose ``backlog`` is the router's own ledger count (exact and deterministic)
+and whose ``remaining_work`` is the last heartbeat's figure plus budgets
+dispatched since — the same signals, observed from across the wire.
+
+``ServingFabric`` builds the whole stack (engines -> transport ->
+FabricRouter) in one call; ``launch/serve.py --fabric loopback|process``
+serves through it, and ``benchmarks/serve_throughput.py fabric_sweep``
+measures kill-to-drained recovery and req/s retention with a dead worker.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.core import DiffusionProcess, MaskedEngine, SamplerConfig
+from repro.models.config import ModelConfig
+
+from .cluster import PoolWorker, Router, RouterPolicy, _pct
+from .engine import QUEUED, Params, Request, Result, ServingEngine, make_score_fn
+from .transport import (
+    Heartbeat,
+    HostEngineSpec,
+    LoopbackTransport,
+    ProcessTransport,
+    Transport,
+)
+
+
+class WorkerHandle:
+    """The router's view of one (possibly remote) worker.
+
+    Duck-types the :class:`PoolWorker` surface the router policies read —
+    ``worker_id`` / ``backlog`` / ``remaining_work`` — from the router's own
+    bookkeeping instead of an engine reference: ``backlog`` counts this
+    worker's unfinished ledger entries (exact, deterministic), and
+    ``remaining_work`` is the last heartbeat's figure plus the budgets
+    dispatched since it.  Handles persist after death (``alive=False``) so
+    stats keep the full fleet history.
+    """
+
+    def __init__(self, worker_id: int, joined_tick: int = 0):
+        self.worker_id = worker_id
+        self.joined_tick = joined_tick
+        self.died_tick: Optional[int] = None
+        self.alive = True
+        self.served = 0
+        #: request_ids of unfinished ledger entries assigned here.
+        self.assigned: set = set()
+        #: last-heartbeat queue depth, adjusted for dispatches/steals since.
+        self.queued_est = 0
+        self.last_hb: Optional[Heartbeat] = None
+        self.last_hb_tick = joined_tick
+        self._pending_work = 0
+
+    @property
+    def backlog(self) -> int:
+        return len(self.assigned)
+
+    @property
+    def remaining_work(self) -> int:
+        base = self.last_hb.remaining_work if self.last_hb is not None else 0
+        return base + self._pending_work
+
+    def observe(self, hb: Heartbeat, tick: int) -> None:
+        self.last_hb = hb
+        self.last_hb_tick = tick
+        self.queued_est = hb.queued
+        self._pending_work = 0
+
+
+@dataclasses.dataclass
+class _LedgerEntry:
+    req: Request
+    submit_t: float
+    worker: int
+    dispatched_tick: int
+
+
+@dataclasses.dataclass
+class FabricStats:
+    """Aggregated fabric accounting (``FabricRouter.stats()``)."""
+
+    #: live / ever-registered worker counts.
+    n_workers: int
+    n_spawned: int
+    policy: str
+    heartbeat_timeout: int
+    tick: int
+    requests_served: int
+    dispatched: int
+    rebalanced: int
+    #: requests replayed off dead workers (original keys + submit stamps).
+    recovered: int
+    #: workers declared dead (heartbeat timeout).
+    deaths: int
+    #: workers registered after construction (elastic join).
+    joins: int
+    #: results that arrived for requests no longer ledgered to that worker.
+    stale_results: int
+    #: heartbeats observed across the fleet.
+    heartbeats: int
+    #: requests in the global queue (pre-dispatch).
+    global_queued: int
+    #: dispatched requests whose results have not arrived.
+    in_flight: int
+    queue_delay_p50_s: float
+    queue_delay_p95_s: float
+    latency_p50_s: float
+    latency_p95_s: float
+    #: per-handle detail incl. the last heartbeat's engine stats.
+    per_worker: List[dict]
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class FabricRouter(Router):
+    """Router over a Transport: heartbeats, failure recovery, elastic fleet.
+
+    One :meth:`step` is one fabric tick: scheduled faults/joins fire, the
+    global queue dispatches under the policy, queues optionally rebalance,
+    the transport ticks every reachable worker, results settle against the
+    ledger, and the liveness check declares (and fences) silent workers dead
+    — requeueing their unfinished work with original keys and stamps.
+
+    ``heartbeat_timeout`` counts *fabric ticks* since the last heartbeat, so
+    loopback chaos runs are deterministic; the process transport maps real
+    silence (missed reply windows) onto the same tick clock.
+    """
+
+    def __init__(self, transport: Transport,
+                 policy: Union[str, RouterPolicy] = "join_shortest_queue",
+                 rebalance: bool = False, heartbeat_timeout: int = 3,
+                 default_n_steps: int = 0):
+        if heartbeat_timeout < 1:
+            raise ValueError(f"heartbeat_timeout must be >= 1 tick, got "
+                             f"{heartbeat_timeout}")
+        handles = [WorkerHandle(wid) for wid in transport.alive_ids]
+        super().__init__(handles, policy=policy, rebalance=rebalance)
+        self.transport = transport
+        self.heartbeat_timeout = heartbeat_timeout
+        #: budget assumed for requests without an explicit n_steps (feeds the
+        #: optimistic remaining_work between heartbeats).
+        self.default_n_steps = default_n_steps
+        self.tick = 0
+        self._handles: Dict[int, WorkerHandle] = {h.worker_id: h
+                                                  for h in handles}
+        self._ledger: Dict[int, _LedgerEntry] = {}
+        self._kill_at: List[Tuple[int, int]] = []   # (tick, worker_id)
+        self._join_at: List[int] = []               # ticks
+        self.recovered = 0
+        self.deaths = 0
+        self.joins = 0
+        self.stale_results = 0
+        self.heartbeats = 0
+
+    # ------------------------------------------------------------- fleet view
+    @property
+    def live_workers(self) -> List[WorkerHandle]:
+        return [h for h in self.workers if h.alive]
+
+    @property
+    def queued(self) -> int:
+        """Global queue + the fleet's last-known worker queue depths."""
+        return len(self._queue) + sum(h.queued_est for h in self.live_workers)
+
+    @property
+    def busy(self) -> bool:
+        """Work is outstanding: queued globally or dispatched-but-unfinished
+        (the ledger covers every request a worker holds, alive or dead)."""
+        return bool(self._queue or self._ledger)
+
+    # ------------------------------------------------------- fault injection
+    def kill_worker(self, worker_id: int,
+                    at_tick: Optional[int] = None) -> None:
+        """Crash ``worker_id`` now (``at_tick=None``) or at a future fabric
+        tick: its transport state is lost immediately, but the router only
+        learns through the heartbeat timeout — detection is never a
+        side-channel."""
+        if at_tick is None or at_tick <= self.tick:
+            self.transport.kill(worker_id)
+        else:
+            self._kill_at.append((at_tick, worker_id))
+
+    def schedule_join(self, at_tick: int) -> None:
+        """Register a fresh worker when the fabric reaches ``at_tick``."""
+        self._join_at.append(at_tick)
+
+    def apply_failure_schedule(self, events) -> None:
+        """Wire a :func:`repro.serve.trace.failure_schedule` into kill /
+        rejoin schedules (rejoins spawn *new* workers — a crashed host's
+        replacement, not its ghost)."""
+        for ev in events:
+            self.kill_worker(ev.worker_id, at_tick=ev.kill_tick)
+            if ev.rejoin_tick is not None:
+                self.schedule_join(ev.rejoin_tick)
+
+    def add_worker(self) -> WorkerHandle:
+        """Elastic join: spawn a worker, register its handle, and immediately
+        move rebalanced QUEUED work onto it (one rebalance pass runs even when
+        steady-state ``rebalance`` is off — an empty newcomer is the point)."""
+        wid = self.transport.spawn()
+        handle = WorkerHandle(wid, joined_tick=self.tick)
+        handle.last_hb_tick = self.tick
+        self.workers.append(handle)
+        self._handles[wid] = handle
+        self.joins += 1
+        self._rebalance()
+        return handle
+
+    # ------------------------------------------------------------ scheduling
+    def submit(self, req: Request, submit_t: Optional[float] = None) -> None:
+        """Stamp ``req`` into the global queue (``submit_t`` lets callers
+        preserve an original stamp when replaying through the fabric)."""
+        import time  # noqa: PLC0415 - keep wall clock out of module scope
+
+        self.transport.validate(req)
+        req.status = QUEUED
+        self._queue.append((req, time.monotonic() if submit_t is None
+                            else submit_t))
+
+    def _req_budget(self, req: Request) -> int:
+        return self.default_n_steps if req.n_steps is None else req.n_steps
+
+    def _dispatch(self) -> None:
+        live = self.live_workers
+        if not live:
+            return  # nobody to serve; requests wait for a join
+        while self._queue:
+            req, submit_t = self._queue.popleft()
+            handle = self.policy.select(live, req)
+            self.transport.submit(handle.worker_id, req, submit_t)
+            self._ledger[req.request_id] = _LedgerEntry(
+                req=req, submit_t=submit_t, worker=handle.worker_id,
+                dispatched_tick=self.tick)
+            handle.assigned.add(req.request_id)
+            handle.queued_est += 1
+            handle._pending_work += self._req_budget(req)
+            self.dispatched += 1
+
+    def _rebalance(self) -> int:
+        """Even out worker backlogs by stealing QUEUED requests back through
+        the transport (same policy as the cluster Router: newest first,
+        RUNNING slots never move, original stamps preserved) and re-ledgering
+        them on the receiving worker."""
+        moved = 0
+        while True:
+            live = self.live_workers
+            if len(live) < 2:
+                break
+            donors = [h for h in live if h.queued_est > 0]
+            if not donors:
+                break
+            src = max(donors, key=lambda h: (h.backlog, -h.worker_id))
+            dst = min(live, key=lambda h: (h.backlog, h.worker_id))
+            if src is dst or src.backlog - dst.backlog < 2:
+                break
+            stolen = self.transport.steal_queued(src.worker_id, 1)
+            if not stolen:
+                # Heartbeat told us there was a queue but the worker says
+                # otherwise (raced a drain, or it is silently dead): stop
+                # trusting the estimate this tick.
+                src.queued_est = 0
+                continue
+            ((req, submit_t),) = stolen
+            self.transport.submit(dst.worker_id, req, submit_t)
+            entry = self._ledger.get(req.request_id)
+            if entry is not None:
+                entry.worker = dst.worker_id
+            src.assigned.discard(req.request_id)
+            dst.assigned.add(req.request_id)
+            src.queued_est = max(0, src.queued_est - 1)
+            dst.queued_est += 1
+            budget = self._req_budget(req)
+            src._pending_work = max(0, src._pending_work - budget)
+            dst._pending_work += budget
+            moved += 1
+        self.rebalanced += moved
+        return moved
+
+    def _declare_dead(self, handle: WorkerHandle) -> None:
+        """Fence a silent worker and replay its unfinished requests: original
+        request objects (same ``(seed, request_id)`` PRNG stream, same step
+        budget -> bit-identical tokens) and original submit stamps (honest
+        queue-delay/latency accounting), requeued at the FRONT of the global
+        queue in their dispatch order so recovery work goes out first."""
+        handle.alive = False
+        handle.died_tick = self.tick
+        self.deaths += 1
+        self.transport.kill(handle.worker_id)  # fence: no late results
+        entries = [e for e in self._ledger.values()
+                   if e.worker == handle.worker_id]
+        for entry in reversed(entries):  # appendleft reverses back
+            entry.req.status = QUEUED
+            self._queue.appendleft((entry.req, entry.submit_t))
+            del self._ledger[entry.req.request_id]
+        handle.assigned.clear()
+        handle.queued_est = 0
+        self.recovered += len(entries)
+
+    def step(self) -> List[Result]:
+        """One fabric tick (see class docs).  Returns the requests whose
+        results settled this tick, stamped with the worker that served them."""
+        self.tick += 1
+        for at_tick, wid in [kv for kv in self._kill_at
+                             if kv[0] <= self.tick]:
+            self._kill_at.remove((at_tick, wid))
+            self.transport.kill(wid)
+        for at_tick in [t for t in self._join_at if t <= self.tick]:
+            self._join_at.remove(at_tick)
+            self.add_worker()
+        self._dispatch()
+        if self.rebalance:
+            self._rebalance()
+        out: List[Result] = []
+        for wid, report in self.transport.tick().items():
+            handle = self._handles.get(wid)
+            if handle is None:
+                continue
+            if report.heartbeat is not None and handle.alive:
+                handle.observe(report.heartbeat, self.tick)
+                self.heartbeats += 1
+            for res in report.results:
+                entry = self._ledger.get(res.request_id)
+                if entry is None or entry.worker != wid:
+                    # Finished elsewhere already (or was replayed after this
+                    # worker was fenced): tokens are placement-invariant, so
+                    # dropping the duplicate loses nothing.
+                    self.stale_results += 1
+                    continue
+                del self._ledger[res.request_id]
+                handle.assigned.discard(res.request_id)
+                res.worker = wid
+                handle.served += 1
+                self.requests_served += 1
+                self._queue_delays.append(res.queue_delay_s)
+                self._latencies.append(res.latency_s)
+                out.append(res)
+        for handle in self.live_workers:
+            if self.tick - handle.last_hb_tick > self.heartbeat_timeout:
+                self._declare_dead(handle)
+        return out
+
+    def run_all(self) -> List[Result]:
+        """Serve until queue and ledger drain.  Raises if work remains but
+        the fleet is extinct with no scheduled join — a stall, not progress."""
+        results: List[Result] = []
+        while self.busy:
+            if not self.live_workers and not self._join_at:
+                raise RuntimeError(
+                    f"fabric stalled at tick {self.tick}: "
+                    f"{len(self._queue)} queued + {len(self._ledger)} in "
+                    f"flight, but no live workers and no scheduled joins")
+            results.extend(self.step())
+        return results
+
+    def close(self) -> None:
+        self.transport.close()
+
+    # ------------------------------------------------------------- accounting
+    def stats(self) -> FabricStats:
+        per_worker = []
+        for h in self.workers:
+            per_worker.append(dict(
+                worker_id=h.worker_id, alive=h.alive, served=h.served,
+                backlog=h.backlog, joined_tick=h.joined_tick,
+                died_tick=h.died_tick, last_heartbeat_tick=h.last_hb_tick,
+                queued=h.queued_est, remaining_work=h.remaining_work,
+                engine=dict(h.last_hb.stats) if h.last_hb else {}))
+        return FabricStats(
+            n_workers=len(self.live_workers),
+            n_spawned=len(self.workers),
+            policy=self.policy.name,
+            heartbeat_timeout=self.heartbeat_timeout,
+            tick=self.tick,
+            requests_served=self.requests_served,
+            dispatched=self.dispatched,
+            rebalanced=self.rebalanced,
+            recovered=self.recovered,
+            deaths=self.deaths,
+            joins=self.joins,
+            stale_results=self.stale_results,
+            heartbeats=self.heartbeats,
+            global_queued=len(self._queue),
+            in_flight=len(self._ledger),
+            queue_delay_p50_s=_pct(self._queue_delays, 50),
+            queue_delay_p95_s=_pct(self._queue_delays, 95),
+            latency_p50_s=_pct(self._latencies, 50),
+            latency_p95_s=_pct(self._latencies, 95),
+            per_worker=per_worker,
+        )
+
+
+def ServingFabric(params: Params, cfg: ModelConfig, process: DiffusionProcess,
+                  sampler: SamplerConfig, n_workers: int, *,
+                  transport: str = "loopback", max_batch: int = 8,
+                  seq_len: int = 256,
+                  policy: Union[str, RouterPolicy] = "join_shortest_queue",
+                  rebalance: bool = False, heartbeat_timeout: int = 3,
+                  extra_inputs: Optional[dict] = None, param_seed: int = 0,
+                  tick_timeout_s: float = 60.0, warmup: bool = True,
+                  **engine_kw) -> FabricRouter:
+    """Build a FabricRouter over ``n_workers`` on the chosen transport.
+
+    ``transport="loopback"`` builds in-process PoolWorkers sharing one solver
+    engine (one jit-trace family, like the logical ``ServingCluster`` fleet)
+    plus a spawn factory for elastic join — the deterministic test/chaos
+    path.  ``transport="process"`` ships a :class:`HostEngineSpec` to one OS
+    process per worker: each host rebuilds bit-identical params from
+    ``param_seed`` (caller-supplied ``params`` are used by the loopback
+    fleet; keep the seeds consistent when comparing the two), owns its JAX
+    runtime, and anchors to its shard device — custom ``solver_engine`` /
+    ``extra_inputs`` injections cannot cross the pipe and are loopback-only.
+    """
+    if n_workers < 1:
+        raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+    if transport == "loopback":
+        if engine_kw.get("solver_engine") is None:
+            shared = MaskedEngine(process=process,
+                                  score_fn=make_score_fn(params, cfg,
+                                                         extra_inputs))
+            engine_kw = dict(engine_kw, solver_engine=shared)
+
+        def make_worker(wid: int) -> PoolWorker:
+            engine = ServingEngine(params, cfg, process, sampler,
+                                   max_batch=max_batch, seq_len=seq_len,
+                                   extra_inputs=extra_inputs, **engine_kw)
+            return PoolWorker(wid, engine)
+
+        tp: Transport = LoopbackTransport(
+            [make_worker(wid) for wid in range(n_workers)],
+            spawn_worker=make_worker)
+    elif transport == "process":
+        if engine_kw.get("solver_engine") is not None:
+            raise ValueError("solver_engine injection cannot cross a process "
+                             "transport (loopback-only)")
+        if extra_inputs:
+            raise ValueError("extra_inputs cannot cross a process transport "
+                             "(loopback-only)")
+        spec = HostEngineSpec(cfg=cfg, sampler=sampler, param_seed=param_seed,
+                              max_batch=max_batch, seq_len=seq_len,
+                              engine_kw=dict(engine_kw) or None,
+                              warmup=warmup)
+        tp = ProcessTransport(spec, n_workers, tick_timeout_s=tick_timeout_s)
+    else:
+        raise ValueError(f"unknown transport {transport!r}; expected "
+                         f"'loopback' or 'process'")
+    return FabricRouter(tp, policy=policy, rebalance=rebalance,
+                        heartbeat_timeout=heartbeat_timeout,
+                        default_n_steps=sampler.n_steps)

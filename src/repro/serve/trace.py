@@ -20,7 +20,8 @@ Two shapes of traffic:
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -79,3 +80,48 @@ def skewed_trace(n_requests: int, max_batch: int, short_steps: int,
     arrivals = poisson_arrivals(
         n_requests, budgets.mean() / (max_batch * load), seed=seed)
     return arrivals, budgets
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """One scheduled fault: kill ``worker_id`` at ``kill_tick``; when
+    ``rejoin_tick`` is set, a replacement worker joins the fleet then."""
+
+    worker_id: int
+    kill_tick: int
+    rejoin_tick: Optional[int] = None
+
+
+def failure_schedule(n_workers: int, n_failures: int, horizon: int,
+                     p_rejoin: float = 0.5, min_tick: int = 1,
+                     seed: int = 0) -> List[FailureEvent]:
+    """Seeded chaos schedule: ``n_failures`` worker kills over ``horizon``
+    fabric ticks, each with probability ``p_rejoin`` of a replacement joining
+    later in the run.
+
+    Victims are drawn without replacement (a worker dies at most once per
+    schedule), kill ticks are uniform over ``[min_tick, horizon)``, and a
+    rejoin lands uniformly in ``(kill_tick, horizon]`` — strictly after the
+    kill.  Events come back sorted by ``kill_tick``, and the whole schedule
+    is a pure function of its arguments: one seed reproduces one chaos run,
+    the same contract as :func:`poisson_trace` / :func:`skewed_trace`.
+    """
+    if n_failures < 0:
+        raise ValueError(f"n_failures must be >= 0, got {n_failures}")
+    if n_failures > n_workers:
+        raise ValueError(f"cannot kill {n_failures} of {n_workers} workers "
+                         f"(victims are drawn without replacement)")
+    if horizon <= min_tick:
+        raise ValueError(f"horizon ({horizon}) must exceed min_tick "
+                         f"({min_tick})")
+    rng = np.random.default_rng(seed)
+    victims = rng.choice(n_workers, size=n_failures, replace=False)
+    events = []
+    for wid in victims:
+        kill_tick = int(rng.integers(min_tick, horizon))
+        rejoin: Optional[int] = None
+        if rng.uniform() < p_rejoin:
+            rejoin = int(rng.integers(kill_tick + 1, horizon + 1))
+        events.append(FailureEvent(worker_id=int(wid), kill_tick=kill_tick,
+                                   rejoin_tick=rejoin))
+    return sorted(events, key=lambda ev: (ev.kill_tick, ev.worker_id))

@@ -1,0 +1,508 @@
+"""Worker transports for the multi-host serving fabric.
+
+A :class:`Transport` carries the fabric's four verbs — submit, steal, tick,
+kill/spawn — between a :class:`~repro.serve.fabric.FabricRouter` and its
+worker fleet, without the router ever assuming where a worker runs:
+
+* :class:`LoopbackTransport` — every worker is an in-process
+  :class:`~repro.serve.cluster.PoolWorker`, driven one deterministic tick at
+  a time.  This is the test and fault-injection harness: heartbeat **drop**
+  and **delay** schedules are exact (keyed on the transport tick), a ``kill``
+  discards the worker's engine the way a host crash discards its memory, and
+  nothing depends on the wall clock — chaos runs replay bit-identically;
+* :class:`ProcessTransport` — one :func:`_host_worker_main` loop per **OS
+  process** (``multiprocessing`` ``spawn``, so each host owns a fresh JAX
+  runtime), talking over pipes with async dispatch: submissions are
+  fire-and-forget, one ``tick`` round-trip per fabric tick collects results
+  plus a heartbeat, and a worker that misses its reply window simply has no
+  heartbeat that tick — the router's liveness timeout does the rest.  Each
+  host builds its own engine from a picklable :class:`HostEngineSpec` and
+  anchors it to its shard's device via
+  :func:`repro.sharding.rules.resolve_anchor_device`.
+
+Every transport speaks the same tick protocol: ``tick()`` returns
+``{worker_id: TickReport}`` where a report carries the requests that finished
+on that worker this tick and (when one arrived) a :class:`Heartbeat` with the
+worker's queue depth, backlog, remaining solver work, and engine counters.
+A worker the router believes alive but whose reports stop carrying
+heartbeats is *declared dead by the router, never by the transport* — the
+failure detector is policy, the transport only moves bytes.
+
+Tokens never depend on the transport: a request's samples come from its
+``(seed, request_id)`` PRNG stream, so replaying it on another worker (or
+another process) after a crash reproduces the original tokens bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .cluster import PoolWorker
+from .engine import Request, Result
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    """One liveness-plus-load report from a worker.
+
+    ``tick`` is the transport tick the heartbeat was *delivered* on (delayed
+    heartbeats arrive late, carrying stale load figures — exactly what a
+    router on a congested network would see).
+    """
+
+    worker_id: int
+    tick: int
+    #: requests queued on the worker (not yet in a slot).
+    queued: int
+    #: queued + running (+ awaiting finalize) — the worker's total backlog.
+    backlog: int
+    #: solver steps the worker still owes (queued budgets + running remainders).
+    remaining_work: int
+    #: the worker engine's ``stats()`` snapshot (accounting rides along free).
+    stats: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class TickReport:
+    """What one worker sent back for one fabric tick."""
+
+    results: List[Result]
+    heartbeat: Optional[Heartbeat]
+
+
+class Transport:
+    """Protocol between a FabricRouter and its workers (see module docs).
+
+    Implementations must make every verb safe against dead workers: a submit
+    or steal aimed at a crashed worker is silently dropped / empty — the
+    router's dispatch ledger replays whatever a dead worker swallowed.
+    """
+
+    @property
+    def alive_ids(self) -> List[int]:
+        """Worker ids the transport can still reach (killed ones excluded)."""
+        raise NotImplementedError
+
+    def validate(self, req: Request) -> None:
+        """Raise ValueError if no worker of this fleet could ever serve ``req``
+        (the router's submit-time check)."""
+        raise NotImplementedError
+
+    def submit(self, worker_id: int, req: Request,
+               submit_t: float) -> None:
+        """Fire-and-forget dispatch of ``req`` (original submit stamp riding
+        along) to ``worker_id``.  Dropped silently if the worker is dead."""
+        raise NotImplementedError
+
+    def steal_queued(self, worker_id: int,
+                     n: int = 1) -> List[Tuple[Request, float]]:
+        """Pop up to ``n`` QUEUED requests back off a worker (rebalancing /
+        elastic join).  Empty for dead or unreachable workers."""
+        raise NotImplementedError
+
+    def tick(self) -> Dict[int, TickReport]:
+        """Advance every reachable worker one scheduler tick and collect
+        ``{worker_id: TickReport}``."""
+        raise NotImplementedError
+
+    def kill(self, worker_id: int) -> None:
+        """Hard-stop a worker, losing its in-memory state (crash injection,
+        and the router's fence when it declares a worker dead).  Idempotent."""
+        raise NotImplementedError
+
+    def spawn(self) -> int:
+        """Start a fresh worker (elastic join); returns its new worker id."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Tear the fleet down (no-op where there is nothing to release)."""
+
+
+# --------------------------------------------------------------------------- #
+# LoopbackTransport: in-process, deterministic, fault-injectable
+# --------------------------------------------------------------------------- #
+
+
+class LoopbackTransport(Transport):
+    """In-process fleet with tick-exact fault injection.
+
+    ``workers`` are live :class:`PoolWorker` instances; ``spawn_worker(id)``
+    (optional) builds new ones for elastic join.  Faults:
+
+    * :meth:`kill` — the engine reference is dropped on the spot: queued
+      requests and running trajectories on that worker are gone, as in a host
+      crash.  The worker stops producing heartbeats, so the router's liveness
+      timeout will notice;
+    * :meth:`drop_heartbeats` — suppress the heartbeats of given transport
+      ticks (results still flow: a worker with a flaky control plane keeps
+      serving);
+    * :meth:`delay_heartbeats` — deliver heartbeats ``delay`` ticks late,
+      carrying their stale load figures.
+
+    All schedules key on ``tick_index``, so a chaos scenario is a pure
+    function of its schedule — no wall clock anywhere.
+    """
+
+    def __init__(self, workers: Sequence[PoolWorker],
+                 spawn_worker: Optional[Callable[[int], PoolWorker]] = None):
+        ids = [w.worker_id for w in workers]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate worker_ids: {ids}")
+        self._workers: Dict[int, Optional[PoolWorker]] = {
+            w.worker_id: w for w in workers}
+        self._spawn_worker = spawn_worker
+        self._next_id = max(ids, default=-1) + 1
+        self.tick_index = 0
+        self._drop_hb: Dict[int, set] = {}
+        self._delay_hb: Dict[int, int] = {}
+        #: (deliver_tick, heartbeat) buffer for delayed heartbeats.
+        self._delayed: List[Tuple[int, Heartbeat]] = []
+
+    # ------------------------------------------------------- fault injection
+    def drop_heartbeats(self, worker_id: int, ticks: Iterable[int]) -> None:
+        """Suppress ``worker_id``'s heartbeat on each transport tick in
+        ``ticks`` (1-based: the first ``tick()`` call is tick 1)."""
+        self._drop_hb.setdefault(worker_id, set()).update(int(t) for t in ticks)
+
+    def delay_heartbeats(self, worker_id: int, delay: int) -> None:
+        """Deliver ``worker_id``'s heartbeats ``delay`` ticks late from now
+        on (0 restores immediate delivery)."""
+        if delay < 0:
+            raise ValueError(f"delay must be >= 0, got {delay}")
+        if delay:
+            self._delay_hb[worker_id] = delay
+        else:
+            self._delay_hb.pop(worker_id, None)
+
+    # ------------------------------------------------------------- transport
+    @property
+    def alive_ids(self) -> List[int]:
+        return [wid for wid, w in self._workers.items() if w is not None]
+
+    def worker(self, worker_id: int) -> Optional[PoolWorker]:
+        """The live PoolWorker behind ``worker_id`` (None once killed) —
+        test/introspection hook, not part of the Transport protocol."""
+        return self._workers.get(worker_id)
+
+    def validate(self, req: Request) -> None:
+        for w in self._workers.values():
+            if w is not None:
+                w.engine.validate(req)
+                return
+
+    def submit(self, worker_id: int, req: Request, submit_t: float) -> None:
+        w = self._workers.get(worker_id)
+        if w is not None:  # a send to a crashed host goes nowhere
+            w.engine.submit(req, submit_t=submit_t)
+
+    def steal_queued(self, worker_id: int,
+                     n: int = 1) -> List[Tuple[Request, float]]:
+        w = self._workers.get(worker_id)
+        return w.engine.steal_queued(n) if w is not None else []
+
+    def _heartbeat(self, w: PoolWorker) -> Heartbeat:
+        eng = w.engine
+        return Heartbeat(
+            worker_id=w.worker_id, tick=self.tick_index, queued=eng.queued,
+            backlog=eng.queued + len(eng.active_slots) + eng.pending_finalize,
+            remaining_work=eng.remaining_work(), stats=eng.stats())
+
+    def tick(self) -> Dict[int, TickReport]:
+        self.tick_index += 1
+        reports: Dict[int, TickReport] = {}
+        for wid, w in self._workers.items():
+            if w is None:
+                continue
+            results = w.tick()
+            hb: Optional[Heartbeat] = None
+            if self.tick_index not in self._drop_hb.get(wid, ()):
+                hb = self._heartbeat(w)
+                delay = self._delay_hb.get(wid, 0)
+                if delay:
+                    self._delayed.append((self.tick_index + delay, hb))
+                    hb = None
+            reports[wid] = TickReport(results, hb)
+        # Deliver delayed heartbeats that are due this tick (stale load
+        # figures and all) — even from workers killed in the meantime: a
+        # packet already in flight still arrives.
+        due = [hb for t, hb in self._delayed if t <= self.tick_index]
+        self._delayed = [(t, hb) for t, hb in self._delayed
+                         if t > self.tick_index]
+        for hb in due:
+            rep = reports.setdefault(hb.worker_id, TickReport([], None))
+            rep.heartbeat = hb
+        return reports
+
+    def kill(self, worker_id: int) -> None:
+        if worker_id in self._workers:
+            self._workers[worker_id] = None  # state lost, like a host crash
+
+    def spawn(self) -> int:
+        if self._spawn_worker is None:
+            raise RuntimeError("LoopbackTransport has no spawn_worker factory; "
+                              "pass one to enable elastic join")
+        wid = self._next_id
+        self._next_id += 1
+        self._workers[wid] = self._spawn_worker(wid)
+        return wid
+
+    def close(self) -> None:
+        self._workers = {wid: None for wid in self._workers}
+
+
+# --------------------------------------------------------------------------- #
+# ProcessTransport: one HostWorker loop per OS process
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class HostEngineSpec:
+    """Everything a spawned host process needs to build its ServingEngine.
+
+    Must stay picklable (``spawn`` ships it to the child), so it carries
+    config values — not params, processes, or closures.  The child
+    reconstructs params from ``init_params(PRNGKey(param_seed))`` and the
+    masked log-linear diffusion process from the model config: deterministic,
+    so every incarnation of a worker (including a post-crash respawn) owns
+    bit-identical weights.  Custom solver engines / score functions are a
+    loopback-only feature.
+    """
+
+    cfg: Any            # repro.models.config.ModelConfig
+    sampler: Any        # repro.core.SamplerConfig
+    param_seed: int = 0
+    max_batch: int = 8
+    seq_len: int = 256
+    #: extra ServingEngine kwargs (scheduler_stride, compact, ...); primitives
+    #: only.
+    engine_kw: Optional[dict] = None
+    #: serve one throwaway request at startup so jit compilation happens
+    #: before the first fabric tick (keeps tick reply latency flat).
+    warmup: bool = True
+
+    def build_engine(self, device: Any = None):
+        """Build (and optionally device-anchor) the engine — runs in the
+        child process, where jax initialized fresh from the inherited env."""
+        import jax  # noqa: PLC0415 - child-process import
+
+        from repro.core import (  # noqa: PLC0415
+            loglinear_schedule,
+            masked_process,
+        )
+        from repro.models import init_params  # noqa: PLC0415
+
+        from .engine import ServingEngine  # noqa: PLC0415
+
+        params, _ = init_params(jax.random.PRNGKey(self.param_seed), self.cfg)
+        if device is not None:
+            params = jax.device_put(params, device)
+        process = masked_process(self.cfg.vocab_size, loglinear_schedule())
+        engine = ServingEngine(params, self.cfg, process, self.sampler,
+                               max_batch=self.max_batch, seq_len=self.seq_len,
+                               **(self.engine_kw or {}))
+        engine.place(device)
+        return engine
+
+
+def _host_worker_main(conn, spec: HostEngineSpec, worker_id: int,
+                      device_index: int) -> None:
+    """The HostWorker loop: build the engine, then serve pipe commands until
+    the pipe closes or a stop arrives.  Runs in its own process — jax (and
+    the device set, from the inherited XLA flags) initializes here."""
+    from repro.sharding.rules import resolve_anchor_device  # noqa: PLC0415
+
+    from .engine import Request  # noqa: PLC0415
+
+    engine = spec.build_engine(resolve_anchor_device(device_index))
+    if spec.warmup:
+        engine.submit(Request(request_id=1_000_000_000 + worker_id,
+                              seq_len=spec.seq_len, seed=0))
+        engine.run_all()
+        engine.reset_stats()
+    try:
+        while True:
+            msg = conn.recv()
+            cmd = msg[0]
+            if cmd == "submit":
+                _, req, submit_t = msg
+                engine.submit(req, submit_t=submit_t)
+            elif cmd == "tick":
+                results = engine.step()
+                hb = Heartbeat(
+                    worker_id=worker_id, tick=0, queued=engine.queued,
+                    backlog=(engine.queued + len(engine.active_slots)
+                             + engine.pending_finalize),
+                    remaining_work=engine.remaining_work(),
+                    stats=engine.stats())
+                conn.send(("tick", results, hb))
+            elif cmd == "steal":
+                conn.send(("steal", engine.steal_queued(msg[1])))
+            elif cmd == "stop":
+                break
+    except (EOFError, OSError, KeyboardInterrupt):
+        pass  # parent went away (or killed us): nothing left to serve
+    finally:
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+
+@dataclasses.dataclass
+class _ProcWorker:
+    proc: Any
+    conn: Any
+    #: a tick command is in flight; no new command may be sent until its
+    #: reply is drained (the pipe protocol is strict request/reply).
+    awaiting: bool = False
+    alive: bool = True
+
+
+class ProcessTransport(Transport):
+    """One engine-owning OS process per worker, pipes for the control plane.
+
+    ``tick()`` fans a tick command out to every reachable worker, then drains
+    replies against one shared ``tick_timeout_s`` deadline: workers compute
+    their scheduler tick concurrently (each in its own process, on its own
+    device anchor), and a worker that misses the window simply contributes no
+    heartbeat — the router's tick-based liveness timeout turns repeated
+    silence into a death declaration, at which point :meth:`kill` terminates
+    the process (fencing: a worker declared dead can never answer again) and
+    the router replays its ledger.  Killed or crashed pipes fail fast — a
+    closed pipe polls ready and raises, so dead workers never cost the
+    timeout.
+    """
+
+    def __init__(self, spec: HostEngineSpec, n_workers: int,
+                 tick_timeout_s: float = 60.0, start_method: str = "spawn"):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        self._spec = spec
+        self.tick_timeout_s = tick_timeout_s
+        self._ctx = mp.get_context(start_method)
+        self._workers: Dict[int, _ProcWorker] = {}
+        self._next_id = 0
+        self.tick_index = 0
+        for _ in range(n_workers):
+            self.spawn()
+
+    @property
+    def alive_ids(self) -> List[int]:
+        return [wid for wid, w in self._workers.items() if w.alive]
+
+    def validate(self, req: Request) -> None:
+        if req.seq_len > self._spec.seq_len:
+            raise ValueError(f"request seq_len {req.seq_len} > engine "
+                             f"{self._spec.seq_len}")
+        if req.n_steps is not None and req.n_steps < 1:
+            raise ValueError(f"request n_steps must be >= 1, got {req.n_steps}")
+        if req.stream_cb is not None:
+            raise ValueError("per-request stream_cb cannot cross a process "
+                             "transport; stream from a loopback fabric")
+
+    def spawn(self) -> int:
+        wid = self._next_id
+        self._next_id += 1
+        parent_conn, child_conn = self._ctx.Pipe()
+        proc = self._ctx.Process(
+            target=_host_worker_main,
+            # device_index == worker id: resolve_anchor_device wraps it onto
+            # the child's device set, so respawns cycle the same anchors.
+            args=(child_conn, self._spec, wid, wid),
+            daemon=True, name=f"fabric-host-{wid}")
+        proc.start()
+        child_conn.close()
+        self._workers[wid] = _ProcWorker(proc=proc, conn=parent_conn)
+        return wid
+
+    def submit(self, worker_id: int, req: Request, submit_t: float) -> None:
+        w = self._workers.get(worker_id)
+        if w is None or not w.alive:
+            return
+        try:
+            w.conn.send(("submit", req, submit_t))
+        except (BrokenPipeError, OSError):
+            pass  # crashed mid-send: the ledger replays it after detection
+
+    def steal_queued(self, worker_id: int,
+                     n: int = 1) -> List[Tuple[Request, float]]:
+        w = self._workers.get(worker_id)
+        if w is None or not w.alive or w.awaiting:
+            return []  # never interleave with an in-flight tick reply
+        try:
+            w.conn.send(("steal", n))
+            if w.conn.poll(self.tick_timeout_s):
+                tag, items = w.conn.recv()
+                if tag == "steal":
+                    return items
+        except (EOFError, BrokenPipeError, OSError):
+            pass
+        return []
+
+    def tick(self) -> Dict[int, TickReport]:
+        self.tick_index += 1
+        polled: List[int] = []
+        for wid, w in self._workers.items():
+            if not w.alive:
+                continue
+            if not w.awaiting:
+                try:
+                    w.conn.send(("tick",))
+                    w.awaiting = True
+                except (BrokenPipeError, OSError):
+                    pass  # no reply will come; report stays heartbeat-less
+            # Still polled while awaiting: a straggler's late reply counts
+            # for the tick it arrives on.
+            polled.append(wid)
+        deadline = time.monotonic() + self.tick_timeout_s
+        reports: Dict[int, TickReport] = {}
+        for wid in polled:
+            w = self._workers[wid]
+            report = TickReport([], None)
+            if w.awaiting:
+                try:
+                    if w.conn.poll(max(0.0, deadline - time.monotonic())):
+                        tag, results, hb = w.conn.recv()
+                        if tag == "tick":
+                            hb.tick = self.tick_index  # delivery tick
+                            report = TickReport(results, hb)
+                            w.awaiting = False
+                except (EOFError, BrokenPipeError, OSError):
+                    w.awaiting = False  # pipe is dead: silence from here on
+            reports[wid] = report
+        return reports
+
+    def kill(self, worker_id: int) -> None:
+        w = self._workers.get(worker_id)
+        if w is None or not w.alive:
+            return
+        w.alive = False
+        try:
+            w.conn.close()
+        except OSError:
+            pass
+        w.proc.terminate()
+        w.proc.join(timeout=5)
+
+    def close(self) -> None:
+        for w in self._workers.values():
+            if not w.alive:
+                continue
+            try:
+                w.conn.send(("stop",))
+            except (BrokenPipeError, OSError):
+                pass
+        for wid, w in self._workers.items():
+            if not w.alive:
+                continue
+            w.proc.join(timeout=5)
+            if w.proc.is_alive():
+                w.proc.terminate()
+                w.proc.join(timeout=5)
+            w.alive = False
+            try:
+                w.conn.close()
+            except OSError:
+                pass

@@ -175,6 +175,24 @@ def data_shard_devices(n_workers: int,
     return [None] * n_workers
 
 
+def resolve_anchor_device(index: Optional[int]) -> Any:
+    """Resolve a worker's anchor-device INDEX to a device, in-process.
+
+    The fabric's process transport cannot pickle a Device across the spawn
+    boundary, so the parent ships an index and each host worker resolves it
+    against its OWN ``jax.devices()`` enumeration (identical across processes
+    for a given XLA_FLAGS, e.g. the forced-host-device CI path).  ``None`` —
+    or an empty device list — means default placement, the logical-worker
+    fallback of :func:`data_shard_devices`.
+    """
+    if index is None:
+        return None
+    devices = jax.devices()
+    if not devices:
+        return None
+    return devices[index % len(devices)]
+
+
 def constrain_batch(x: jnp.ndarray, mesh: Mesh) -> jnp.ndarray:
     """Activation constraint: batch over (pod, data), rest unconstrained."""
     spec = batch_spec(mesh, x.shape[0])
