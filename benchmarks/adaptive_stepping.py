@@ -1,0 +1,200 @@
+"""NFE vs quality for the adaptive theta-trapezoidal solver.
+
+Two legs, both gated (an assertion failure fails the section):
+
+* **quality** — the 8-state dense toy chain with exact marginals.  Fixed-step
+  theta-trapezoidal at each step count vs the adaptive solver at a few
+  tolerances (attempt cap 64, so the controller — not the cap — picks the
+  step count).  Reports TV distance to the exact marginal and the realized
+  mean accepted steps; the gate is that adaptive at the reference tolerance
+  matches the fixed reference's TV while spending >= ``step_margin`` fewer
+  accepted steps.
+
+* **serving** — a mixed-difficulty batch through the ServingEngine.  The
+  fixed engine must run *every* request at the worst-case NFE cap (the cap
+  is sized for the hardest request); the adaptive engine carries per-request
+  tolerances and each slot drains when its controller lands.  Gates: every
+  request served, zero lost, and ``fixed mean NFE / adaptive mean NFE >=
+  nfe_margin`` (the ISSUE's 1.3x bar).
+
+    PYTHONPATH=src python -m benchmarks.adaptive_stepping
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from .common import csv_row
+
+import jax
+import numpy as np
+
+from repro.core import (
+    DenseCTMC,
+    DenseEngine,
+    SamplerConfig,
+    advance_many,
+    finalize,
+    init_state,
+    loglinear_schedule,
+    masked_process,
+    sample,
+    uniform_rate_matrix,
+)
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serve import Request, ServingEngine
+
+ADAPTIVE = "adaptive_theta_trapezoidal"
+FIXED = "theta_trapezoidal"
+
+
+def _toy(n_states: int = 8, t_max: float = 8.0, seed: int = 0) -> DenseCTMC:
+    rng = np.random.default_rng(seed)
+    p0 = rng.dirichlet(np.ones(n_states) * 2.0)
+    return DenseCTMC(q=uniform_rate_matrix(n_states), p0=p0, t_max=t_max)
+
+
+def _tv(tokens, exact: np.ndarray) -> float:
+    freq = np.bincount(np.asarray(tokens).reshape(-1), minlength=len(exact))
+    return float(0.5 * np.abs(freq / freq.sum() - exact).sum())
+
+
+def _run_adaptive(key, engine, cfg: SamplerConfig, batch: int):
+    """(tokens, mean accepted steps, rejected total, all landed) for one run.
+
+    ``sample()`` only reports the worst-case NFE for adaptive configs, so
+    drive the per-slot state directly and read the controller's counters.
+    """
+    state = init_state(key, engine, cfg, batch, per_slot=True)
+    state = advance_many(state, cfg.n_steps)
+    tokens = finalize(state)
+    acc = np.asarray(state.ctrl.accepted)
+    rej = int(np.asarray(state.ctrl.rejected).sum())
+    landed = bool(np.asarray(state.t <= state.times[-1]).all())
+    return tokens, float(acc.mean()), rej, landed
+
+
+def quality_leg(n_samples: int = 8192, fixed_grid=(8, 16, 32),
+                rtol_grid=(0.5, 1.0), cap: int = 64, theta: float = 0.5,
+                tv_margin: float = 0.03, step_margin: float = 1.2,
+                seed: int = 0) -> list[str]:
+    toy = _toy()
+    engine = DenseEngine(toy)
+    key = jax.random.PRNGKey(seed)
+    t_end = float(np.asarray(
+        engine.time_grid(SamplerConfig(n_steps=fixed_grid[0]))[-1]))
+    exact = toy.marginal_np(t_end)
+    rows = []
+    ref_steps = max(fixed_grid)
+    tv_ref = None
+    for steps in fixed_grid:
+        cfg = SamplerConfig(method=FIXED, n_steps=steps, theta=theta)
+        t0 = time.time()
+        out = sample(key, engine, cfg, batch=n_samples)
+        tv = _tv(out.tokens, exact)
+        if steps == ref_steps:
+            tv_ref = tv
+        rows.append(csv_row(f"adaptive_stepping/fixed/steps{steps}",
+                            (time.time() - t0) * 1e6,
+                            f"tv={tv:.4f},steps={steps}"))
+    for rtol in rtol_grid:
+        cfg = SamplerConfig(method=ADAPTIVE, n_steps=cap, theta=theta,
+                            rtol=rtol)
+        t0 = time.time()
+        tokens, acc, rej, landed = _run_adaptive(key, engine, cfg, n_samples)
+        tv = _tv(tokens, exact)
+        rows.append(csv_row(
+            f"adaptive_stepping/adaptive/rtol{rtol:g}",
+            (time.time() - t0) * 1e6,
+            f"tv={tv:.4f},mean_steps={acc:.1f},rejected={rej},"
+            f"landed={landed}"))
+        assert landed, f"rtol={rtol}: some slot exhausted the {cap}-step cap"
+        if rtol == rtol_grid[0]:
+            assert tv <= tv_ref + tv_margin, (
+                f"adaptive rtol={rtol} TV {tv:.4f} vs fixed-{ref_steps} "
+                f"{tv_ref:.4f} (+{tv_margin} margin)")
+            assert acc * step_margin <= ref_steps, (
+                f"adaptive rtol={rtol} spent {acc:.1f} steps; needs "
+                f"{step_margin}x under the fixed {ref_steps}")
+            rows.append(csv_row(
+                "adaptive_stepping/quality_gate", 0.0,
+                f"ok,step_ratio={ref_steps / acc:.2f},"
+                f"tv_adaptive={tv:.4f},tv_fixed={tv_ref:.4f}"))
+    return rows
+
+
+def serving_leg(n_requests: int = 12, max_batch: int = 4, seq_len: int = 16,
+                cap_nfe: int = 32, rtols=(1.0, 2.0, 4.0),
+                nfe_margin: float = 1.3, seed: int = 0) -> list[str]:
+    cfg = ModelConfig(name="adaptive-bench", family="dense", n_layers=2,
+                      d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                      d_ff=128, vocab_size=23, dtype="float32")
+    process = masked_process(cfg.vocab_size, loglinear_schedule())
+    params, _ = init_params(jax.random.PRNGKey(seed), cfg)
+    rows = []
+
+    # Fixed-step baseline: the cap is sized for the hardest request, so every
+    # request pays it.
+    fixed = ServingEngine(params, cfg, process,
+                          SamplerConfig.for_nfe(FIXED, cap_nfe),
+                          max_batch=max_batch, seq_len=seq_len)
+    for i in range(n_requests):
+        fixed.submit(Request(request_id=i, seq_len=seq_len, seed=i))
+    t0 = time.time()
+    res_f = fixed.run_all()
+    stats_f = fixed.stats()
+    mean_f = stats_f["mean_nfe_per_request"]
+    rows.append(csv_row("adaptive_stepping/serve/fixed",
+                        (time.time() - t0) * 1e6,
+                        f"served={len(res_f)},mean_nfe={mean_f:.1f}"))
+
+    # Adaptive engine: same requests with mixed per-request tolerances; each
+    # slot drains when its controller lands, freeing the row early.
+    adap = ServingEngine(params, cfg, process,
+                         SamplerConfig.for_nfe(ADAPTIVE, cap_nfe),
+                         max_batch=max_batch, seq_len=seq_len)
+    for i in range(n_requests):
+        adap.submit(Request(request_id=i, seq_len=seq_len, seed=i,
+                            rtol=rtols[i % len(rtols)]))
+    t0 = time.time()
+    res_a = adap.run_all()
+    stats_a = adap.stats()
+    mean_a = stats_a["mean_nfe_per_request"]
+    per_req = sorted(r.nfe for r in res_a)
+    rows.append(csv_row(
+        "adaptive_stepping/serve/adaptive",
+        (time.time() - t0) * 1e6,
+        f"served={len(res_a)},mean_nfe={mean_a:.1f},"
+        f"nfe_min={per_req[0]},nfe_max={per_req[-1]},"
+        f"accepted={stats_a['accepted_steps']},"
+        f"rejected={stats_a['rejected_steps']}"))
+
+    assert len(res_a) == n_requests, "adaptive engine lost requests"
+    ratio = mean_f / mean_a
+    assert ratio >= nfe_margin, (
+        f"adaptive mean NFE {mean_a:.1f} vs fixed {mean_f:.1f}: "
+        f"{ratio:.2f}x < required {nfe_margin}x")
+    rows.append(csv_row("adaptive_stepping/serve/nfe_gate", 0.0,
+                        f"ok,nfe_ratio={ratio:.2f}"))
+    return rows
+
+
+def run(n_samples: int = 8192, n_requests: int = 12, cap_nfe: int = 32,
+        full: bool = False) -> list[str]:
+    rows = quality_leg(n_samples=32_768 if full else n_samples,
+                       fixed_grid=(8, 16, 32, 64) if full else (8, 16, 32))
+    rows += serving_leg(n_requests=24 if full else n_requests,
+                        cap_nfe=cap_nfe)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("\n".join(run(full=args.full)))
+
+
+if __name__ == "__main__":
+    main()

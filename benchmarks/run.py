@@ -18,10 +18,12 @@ EXPERIMENTS.md-scale numbers.
   roofline           -> §Roofline table from the dry-run artifact
   serve_throughput   -> continuous batching / strided executor requests/sec
   serve_fabric       -> multi-host fabric failure recovery / req/s retention
+  adaptive_stepping  -> adaptive theta pair: TV-vs-NFE + dynamic-NFE serving
 """
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import json
 import os
 import sys
@@ -72,6 +74,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of section names")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated section-name globs (fnmatch, e.g. "
+                         "'serve_*,kernels'); composes with --only")
+    ap.add_argument("--list-sections", action="store_true",
+                    help="print the section names and exit")
     ap.add_argument("--json-out",
                     default=os.path.join(os.path.dirname(__file__),
                                          "BENCH_solvers.json"),
@@ -86,6 +93,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (  # noqa: PLC0415
+        adaptive_stepping,
         image_nfe,
         kernels_bench,
         roofline_report,
@@ -130,10 +138,20 @@ def main() -> None:
             n_requests=32, seq_len=16)[0]) if args.full else (
             lambda: serve_throughput.fabric_sweep(
                 n_requests=24, seq_len=12)[0]),
+        # TV-vs-NFE parity gate + the dynamic-NFE serving gate (fixed mean
+        # NFE / adaptive mean NFE >= 1.3x on a mixed-tolerance batch).
+        "adaptive_stepping": lambda: adaptive_stepping.run(full=args.full),
     }
+    if args.list_sections:
+        print("\n".join(sections))
+        return
     if args.only:
         keep = set(args.only.split(","))
         sections = {k: v for k, v in sections.items() if k in keep}
+    if args.sections:
+        pats = args.sections.split(",")
+        sections = {k: v for k, v in sections.items()
+                    if any(fnmatch.fnmatch(k, p) for p in pats)}
 
     print("name,us_per_call,derived")
     failures = 0

@@ -19,13 +19,17 @@ from .dense import (
 from .solvers import (
     METHODS,
     TWO_STAGE,
+    AdaptiveThetaTrapezoidalSolver,
+    ControllerState,
     DenseEngine,
     Engine,
+    ErrorEstimator,
     MaskedEngine,
     SampleResult,
     SamplerConfig,
     SlotPool,
     Solver,
+    StepController,
     SolverState,
     UniformEngine,
     admit_slot,
@@ -68,6 +72,9 @@ __all__ = [
     "admit_slot", "slot_done", "budget_supported",
     # occupancy-aware slot pool
     "SlotPool", "default_bucket_ladder",
+    # adaptive stepping
+    "AdaptiveThetaTrapezoidalSolver", "ControllerState", "ErrorEstimator",
+    "StepController",
     # legacy solver API (kept: bit-identical wrappers over the new entrypoint)
     "METHODS", "TWO_STAGE", "SamplerConfig", "dense_step", "fhs_sample",
     "masked_step", "rk2_coefficients", "sample_dense", "sample_masked",

@@ -82,6 +82,14 @@ from .compat import (
     set_fused_jump,
     uniform_step,
 )
+# Imported after compat so the legacy METHODS snapshot keeps its historical
+# contents; adaptive_theta_trapezoidal appends to the live registry only.
+from .adaptive import (
+    AdaptiveThetaTrapezoidalSolver,
+    ControllerState,
+    ErrorEstimator,
+    StepController,
+)
 
 __all__ = [
     # registry
@@ -100,6 +108,9 @@ __all__ = [
     "EulerSolver", "TauLeapingSolver", "TweedieSolver", "ThetaRK2Solver",
     "ThetaTrapezoidalSolver", "ParallelDecodingSolver", "FHSSolver",
     "fhs_sample", "parallel_decoding_step",
+    # adaptive stepping
+    "AdaptiveThetaTrapezoidalSolver", "ControllerState", "ErrorEstimator",
+    "StepController",
     # entrypoint
     "sample", "SampleResult",
     # legacy wrappers

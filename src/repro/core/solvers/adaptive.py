@@ -1,0 +1,420 @@
+"""Adaptive step sizes from the embedded theta pair.
+
+The paper's two second-stage rules — theta-RK-2 (Alg. 4) and theta-trapezoidal
+(Alg. 2) — share stage 1 exactly (tau-leap of ``theta * dt`` with mu_{s_n}),
+so the pair is a *free* embedded error estimate: one extra intensity
+combination per step, zero extra score evaluations.  This module turns that
+into an adaptive solver:
+
+* :class:`ErrorEstimator` runs the shared two-stage step once, produces the
+  theta-trapezoidal candidate state, and scores a per-slot local-error proxy
+  over the jump intensities.  Unclipped, the RK-2 combination
+  ``(c1 mu_n + c2 mu*)`` and the trapezoidal effective intensity
+  ``theta mu_n + (1 - theta)(a1 mu* - a2 mu_n)`` coincide *elementwise*
+  (coefficient identity: ``(1-theta) a1 == c2`` and
+  ``theta - (1-theta) a2 == c1``), so their clipped difference fires exactly
+  where the positive-part clip binds — the stiff regions where the
+  extrapolated rate went negative.  That signal alone vanishes on smooth
+  stretches, so it is blended with the embedded first-order defect
+  ``|theta mu_n + (1-theta) mu_trap - mu_n|`` (the distance to the plain
+  tau-leap intensity, O(dt) on smooth trajectories) to keep growth in check.
+
+* :class:`StepController` is a textbook PI controller over that error:
+  grow/shrink the next ``dt`` by ``safety * r^k_i * (r / r_prev)^k_p``
+  clipped to ``[shrink_min, grow_max] * dt`` and ``[dt_min, dt_max]``.
+  Ordinary control never discards work: the step actually taken is the
+  proposal clamped by the deterministic pre-step leap bound
+  (:meth:`ErrorEstimator.leap_dt`, computed from the current rates before
+  any noise is drawn), and rejection fires only past
+  ``reject_threshold * rtol`` — a catastrophe guard.  Rejecting at ``rtol``
+  itself would preferentially re-roll realized wild transitions and bias
+  the sampled law, since the embedded error depends on the step's own
+  stage-1 jump.  Steps are clamped to land exactly on ``t_end``
+  (``t1 = max(t0 - dt, times[-1])`` — bitwise the grid's endpoint).
+
+* :class:`AdaptiveThetaTrapezoidalSolver` (registered as
+  ``adaptive_theta_trapezoidal``) packages both behind the stepwise state
+  machine: per-slot ``dt`` / tolerance / accept counters live in a
+  :class:`ControllerState` pytree riding on ``SolverState.ctrl``, and
+  ``advance`` dispatches here whenever that field is present.  Everything is
+  per-slot and deterministic given the slot key — attempt ``i`` of a slot
+  always folds the same key, accepted or not — so serving-side replay and
+  compaction keep their bit-exactness guarantees, and ``config.n_steps``
+  becomes the *attempt cap* (a worst-case NFE budget) instead of the step
+  count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..schedules import theta_section
+from .base import Solver
+from .config import rk2_coefficients, trapezoidal_coefficients
+from .registry import register_solver
+from .rng import fold_key, split_key
+from .state import advance, finalize, init_state, run_context
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------------- #
+# Controller state (per-slot leaves, rides on SolverState.ctrl)
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class ControllerState:
+    """Per-slot adaptive-stepping state, registered as a pytree.
+
+    All leaves are [B]; a row is reset by ``admit_slot`` exactly like the
+    other per-slot fields, and the SlotPool gathers/scatters it alongside
+    them on the compacted path.
+    """
+
+    #: proposed step size for the slot's next attempt.
+    dt: Array
+    #: previous accepted inverse-error ratio (PI derivative term memory).
+    r_prev: Array
+    #: per-slot relative tolerance (per-request override of config.rtol).
+    rtol: Array
+    #: accepted / rejected attempt counters (realized-NFE accounting).
+    accepted: Array
+    rejected: Array
+
+
+jax.tree_util.register_pytree_node(
+    ControllerState,
+    lambda c: ((c.dt, c.r_prev, c.rtol, c.accepted, c.rejected), None),
+    lambda _, ch: ControllerState(dt=ch[0], r_prev=ch[1], rtol=ch[2],
+                                  accepted=ch[3], rejected=ch[4]),
+)
+
+
+def dt_bounds(config, times: Array):
+    """Resolved (dt_min, dt_max) for a run: config overrides or span-derived.
+
+    Defaults: ``dt_min = span / (8 n_steps)`` (an attempt at the cap can
+    always make progress) and ``dt_max = span / 2`` (at least two steps).
+    """
+    span = times[0] - times[-1]
+    dt_min = (config.dt_min if config.dt_min is not None
+              else span / (8.0 * config.n_steps))
+    dt_max = config.dt_max if config.dt_max is not None else span * 0.5
+    return dt_min, dt_max
+
+
+# --------------------------------------------------------------------------- #
+# Error estimator: shared-stage embedded pair
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorEstimator:
+    """Embedded theta-RK-2 / theta-trapezoidal local-error proxy.
+
+    One call = one candidate trapezoidal step (2 score evaluations, shared
+    with the estimate) plus a per-slot scalar error: the intensity-space
+    defect ``dt * (w_pair * |mu_rk2 - mu_high| + w_low * |mu_high - mu_n|)``
+    normalized by the total expected jump mass ``dt * sum(mu_high) + atol``,
+    plus the jump-saturation term ``w_mass * dt * sum(mu_high) / sites``
+    (expected jumps per site — the tau-leap leap condition).
+    """
+
+    #: weight of the clipped pair disagreement (stiffness detector).
+    w_pair: float = 1.0
+    #: weight of the embedded first-order defect (smooth-region control).
+    w_low: float = 1.0
+    #: weight of the jump-saturation term ``dt * mass / sites`` — the
+    #: tau-leap condition.  Rate drift alone is blind to the error of leaping
+    #: over multiple jumps with frozen rates (it vanishes on a constant-rate
+    #: chain, where a large step is still wrong), so the expected jumps per
+    #: site per step enter the error directly.
+    w_mass: float = 1.0
+    #: absolute floor on the normalizer (also what "err -> 0" decays against).
+    atol: float = 1e-6
+
+    @staticmethod
+    def _sites(mu) -> int:
+        """Non-batch, non-state axes (1 for dense chains, L for sequences)."""
+        sites = 1
+        for d in mu.shape[1:-1]:
+            sites *= d
+        return sites
+
+    def leap_dt(self, mu_n, rtol):
+        """Largest dt whose saturation term alone stays at ``rtol`` — the
+        deterministic pre-step leap bound ``rtol * sites / (w_mass * mass)``.
+
+        Computed from the *current* state's rates only, before any noise is
+        drawn: clamping dt with it keeps step control independent of the
+        step's own randomness (rejecting on a realized jump would
+        preferentially re-roll wild transitions and bias the chain's law).
+        """
+        axes = tuple(range(1, mu_n.ndim))
+        mass = mu_n.sum(axes)
+        return rtol * self._sites(mu_n) / (self.w_mass * mass + self.atol)
+
+    def estimate(self, key, engine, x, t0, t1, config, *, valid=None,
+                 mu_n=None):
+        """(candidate x from the theta-trapezoidal step, per-slot error [B]).
+
+        The candidate is bit-identical to ``ThetaTrapezoidalSolver.step`` for
+        the same key and interval: same ``split_key`` layout, same stage-1
+        jump, same stage-2 rate combination.  ``mu_n`` lets the caller pass
+        rates it already evaluated at (x, t0) so the leap clamp shares the
+        score evaluation.
+        """
+        theta = config.theta
+        k1, k2 = split_key(key)
+        dt = t0 - t1
+        rho = theta_section(t0, t1, theta)
+        if mu_n is None:
+            mu_n = engine.rates(x, t0)
+        x_star = engine.apply_jump(k1, x, mu_n, theta * dt, t=t0, valid=valid)
+        mu_star = engine.rates(x_star, rho)
+        a1, a2 = trapezoidal_coefficients(theta)
+        c1, c2 = rk2_coefficients(theta)
+        x_new = engine.apply_jump(k2, x_star, mu_star, (1.0 - theta) * dt,
+                                  rates_b=mu_n, coeff_a=a1, coeff_b=-a2,
+                                  valid=valid)
+        # Clipped effective intensities of the two schemes (see module doc:
+        # they agree exactly wherever neither clip binds).
+        mu_trap = jnp.maximum(a1 * mu_star - a2 * mu_n, 0.0)
+        mu_high = theta * mu_n + (1.0 - theta) * mu_trap
+        mu_rk2 = jnp.maximum(c1 * mu_n + c2 * mu_star, 0.0)
+        axes = tuple(range(1, mu_n.ndim))
+        pair = jnp.abs(mu_rk2 - mu_high).sum(axes)
+        low = jnp.abs(mu_high - mu_n).sum(axes)
+        mass = mu_high.sum(axes)
+        # dt * mass / sites is the expected jumps per site this step — the
+        # quantity the tau-leap condition bounds (see leap_dt).
+        err = (dt * (self.w_pair * pair + self.w_low * low)
+               / (dt * mass + self.atol)
+               + self.w_mass * dt * mass / self._sites(mu_n))
+        return x_new, err
+
+
+# --------------------------------------------------------------------------- #
+# PI step controller
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class StepController:
+    """PI accept/grow/shrink of per-slot ``dt`` (Soderlind-style gains).
+
+    The error proxy is O(dt) on smooth trajectories, so the integral gain
+    ``k_i`` sits below the deadbeat 1.0; ``k_p`` damps oscillation between
+    consecutive accepted steps.  All updates are elementwise over slots and
+    deterministic functions of the trajectory.
+    """
+
+    safety: float = 0.9
+    k_i: float = 0.4
+    k_p: float = 0.2
+    grow_max: float = 2.0
+    shrink_min: float = 0.25
+    #: reject only past this multiple of rtol — a catastrophe guard, not the
+    #: primary control.  Ordinary sizing happens *before* the step (the
+    #: deterministic leap clamp) and *after* it (the PI update of the next
+    #: dt); rejecting near rtol itself would filter on the step's realized
+    #: noise and bias the sampled law (see ErrorEstimator.leap_dt).
+    reject_threshold: float = 10.0
+
+    def init(self, config, times: Array, batch: int,
+             n_steps: Optional[Array] = None,
+             rtol: Optional[Array] = None) -> ControllerState:
+        """Fresh controller rows: dt = span / budget, clipped to the bounds."""
+        span = times[0] - times[-1]
+        dt_min, dt_max = dt_bounds(config, times)
+        budget = jnp.asarray(config.n_steps if n_steps is None else n_steps,
+                             jnp.float32)
+        dt0 = jnp.clip(span / budget, dt_min, dt_max)
+        return ControllerState(
+            dt=jnp.broadcast_to(dt0, (batch,)).astype(jnp.float32),
+            r_prev=jnp.ones((batch,), jnp.float32),
+            rtol=jnp.broadcast_to(
+                jnp.asarray(config.rtol if rtol is None else rtol,
+                            jnp.float32), (batch,)).astype(jnp.float32),
+            accepted=jnp.zeros((batch,), jnp.int32),
+            rejected=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def reset_slot(self, ctrl: ControllerState, slot: int, config,
+                   times: Array, n_steps: int,
+                   rtol: Optional[float] = None) -> ControllerState:
+        """Row reset for ``admit_slot``: same values a fresh init would hold."""
+        span = times[0] - times[-1]
+        dt_min, dt_max = dt_bounds(config, times)
+        dt0 = jnp.clip(span / jnp.float32(n_steps), dt_min, dt_max)
+        return ControllerState(
+            dt=ctrl.dt.at[slot].set(dt0),
+            r_prev=ctrl.r_prev.at[slot].set(1.0),
+            rtol=ctrl.rtol.at[slot].set(
+                config.rtol if rtol is None else rtol),
+            accepted=ctrl.accepted.at[slot].set(0),
+            rejected=ctrl.rejected.at[slot].set(0),
+        )
+
+    def update(self, ctrl: ControllerState, err: Array, accept: Array,
+               active: Array, dt_min, dt_max,
+               dt_used: Optional[Array] = None) -> ControllerState:
+        """One PI update per slot; inactive rows pass through unchanged.
+
+        ``dt_used`` is the step actually attempted (the controller's proposal
+        after the leap clamp); the next proposal scales from it so a clamped
+        slot re-converges instead of coasting on a stale large dt.
+        """
+        base = ctrl.dt if dt_used is None else dt_used
+        r = jnp.clip(ctrl.rtol / jnp.maximum(err, 1e-12), 1e-4, 1e4)
+        fac_acc = self.safety * r**self.k_i * (r / ctrl.r_prev)**self.k_p
+        # A rejected step may only shrink.
+        fac_rej = jnp.minimum(self.safety * r**self.k_i, 1.0)
+        fac = jnp.clip(jnp.where(accept, fac_acc, fac_rej),
+                       self.shrink_min, self.grow_max)
+        dt_new = jnp.clip(base * fac, dt_min, dt_max)
+        acc = active & accept
+        rej = active & ~accept
+        return ControllerState(
+            dt=jnp.where(active, dt_new, ctrl.dt),
+            r_prev=jnp.where(acc, r, ctrl.r_prev),
+            rtol=ctrl.rtol,
+            accepted=ctrl.accepted + acc.astype(jnp.int32),
+            rejected=ctrl.rejected + rej.astype(jnp.int32),
+        )
+
+
+# --------------------------------------------------------------------------- #
+# The registered solver
+# --------------------------------------------------------------------------- #
+
+
+@register_solver("adaptive_theta_trapezoidal")
+class AdaptiveThetaTrapezoidalSolver(Solver):
+    """Theta-trapezoidal with embedded-pair adaptive step-size control.
+
+    Per-slot only: ``init_state(..., per_slot=True)`` attaches a
+    :class:`ControllerState` to the state and ``advance`` routes through
+    :meth:`advance_state`.  ``config.n_steps`` caps *attempts* (accepted +
+    rejected); a slot finishes when its time reaches ``times[-1]`` or the
+    cap runs out, so ``run_nfe`` reports the worst case.
+    """
+
+    nfe_per_step = 2
+    adaptive = True
+    supports_stepwise = True
+    supports_step_budgets = True
+
+    estimator = ErrorEstimator()
+    controller = StepController()
+
+    @classmethod
+    def validate(cls, config):
+        super().validate(config)
+        if config.theta >= 1.0:
+            raise ValueError(
+                "adaptive_theta_trapezoidal requires theta in (0, 1)")
+        if config.rtol <= 0.0:
+            raise ValueError(f"rtol must be > 0, got {config.rtol}")
+        for name in ("dt_min", "dt_max"):
+            v = getattr(config, name)
+            if v is not None and v <= 0.0:
+                raise ValueError(f"{name} must be > 0, got {v}")
+        if (config.dt_min is not None and config.dt_max is not None
+                and config.dt_min > config.dt_max):
+            raise ValueError("dt_min must be <= dt_max")
+
+    # ------------------------------------------------------------------ #
+    # Stepwise integration (SolverState.ctrl dispatch target)
+    # ------------------------------------------------------------------ #
+
+    def init_controller(self, config, times: Array, batch: int) -> ControllerState:
+        return self.controller.init(config, times, batch)
+
+    def reset_controller_slot(self, ctrl, slot, config, times, n_steps,
+                              rtol=None) -> ControllerState:
+        return self.controller.reset_slot(ctrl, slot, config, times, n_steps,
+                                          rtol=rtol)
+
+    def advance_state(self, state):
+        """One attempt for every active slot (jit-safe).
+
+        Step sizing is three-stage: the PI controller proposes ``ctrl.dt``
+        from past errors; the deterministic leap clamp shrinks it wherever
+        the *current* rates would saturate the step (known before any noise
+        is drawn, so no score evaluation and no sampled transition is ever
+        discarded by ordinary control); the realized embedded error then
+        sizes the next proposal.  Rejection survives only as a catastrophe
+        guard (``err > reject_threshold * rtol``) — rejecting near rtol
+        would re-roll precisely the wild transitions and bias the law.
+
+        Attempt ``i`` of a slot always folds key ``fold_in(rng, i)`` whether
+        it ends up accepted or not, so the realized trajectory is a
+        deterministic function of the slot key alone.
+        """
+        ctx = run_context(state)
+        ctrl = state.ctrl
+        t_lo = state.times[-1]
+        i = state.step
+        t0 = state.t
+        active = (i < state.target) & (t0 > t_lo)
+        dt_min, dt_max = dt_bounds(ctx.config, state.times)
+        # One score evaluation at (x, t0), shared by the leap clamp, stage 1,
+        # and the error estimate.
+        mu_n = ctx.engine.rates(state.x, t0)
+        leap = jnp.maximum(self.estimator.leap_dt(mu_n, ctrl.rtol), dt_min)
+        dt_eff = jnp.minimum(ctrl.dt, leap)
+        # Land exactly on the grid's endpoint (bitwise: max returns t_lo).
+        t1 = jnp.maximum(t0 - dt_eff, t_lo)
+        keys = fold_key(state.rng, jnp.minimum(i, state.target - 1))
+        x_new, err = self.estimator.estimate(
+            keys, ctx.engine, state.x, t0, t1, ctx.config, valid=active,
+            mu_n=mu_n)
+        # Force-accept once the effective step is at the floor: the
+        # controller cannot shrink further, so rejecting again would stall.
+        floor = (t0 - t1) <= dt_min * (1.0 + 1e-6)
+        accept = (err <= ctrl.rtol * self.controller.reject_threshold) | floor
+        ok = active & accept
+        keep = ok.reshape(ok.shape + (1,) * (state.x.ndim - 1))
+        return dataclasses.replace(
+            state,
+            x=jnp.where(keep, x_new, state.x),
+            step=jnp.where(active, i + 1, i),
+            t=jnp.where(ok, t1, t0),
+            ctrl=self.controller.update(ctrl, err, accept, active,
+                                        dt_min, dt_max, dt_used=dt_eff),
+        )
+
+    # ------------------------------------------------------------------ #
+    # Whole-trajectory entrypoints
+    # ------------------------------------------------------------------ #
+
+    def run(self, key, engine, config, batch, seq_len=None, trace_fn=None):
+        if trace_fn is not None:
+            raise ValueError("adaptive_theta_trapezoidal has a data-dependent "
+                             "step count and does not support per-step "
+                             "tracing")
+        state = init_state(key, engine, config, batch, seq_len,
+                           per_slot=True, solver=self)
+        t_lo = state.times[-1]
+
+        def cond(s):
+            return jnp.any((s.step < s.target) & (s.t > t_lo))
+
+        state = jax.lax.while_loop(cond, advance, state)
+        return finalize(state), None
+
+    def run_nfe(self, config, *, seq_len=None):
+        # Worst case: every slot spends its full attempt cap.  Realized NFE
+        # is data-dependent; serving reports it per request via stats().
+        return config.n_steps * self.nfe_per_step
+
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None,
+             valid=None):
+        raise ValueError(
+            "adaptive_theta_trapezoidal has no fixed-step form; use "
+            "sample()/run() or the per-slot advance path")

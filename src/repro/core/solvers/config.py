@@ -8,7 +8,7 @@ of truth for what exists.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
@@ -34,6 +34,17 @@ class SamplerConfig:
     # uniform engines.  Replaces the removed module-global toggle
     # (set_fused_jump, now a hard error in compat.py).
     fused: bool = False
+    # Adaptive solvers only (``adaptive_theta_trapezoidal``): relative local-
+    # error tolerance for the embedded theta pair, and optional absolute
+    # bounds on the per-slot step size.  ``dt_min``/``dt_max`` default to
+    # span / (8 * n_steps) and span / 2 where span = t_max - t_stop;
+    # ``n_steps`` becomes the *attempt cap* (max NFE budget), not the step
+    # count.  Fixed-step solvers ignore all three (and their configs stay
+    # equal/hashable regardless, so jit caches keyed on the config are
+    # unaffected by the defaults).
+    rtol: float = 0.1
+    dt_min: Optional[float] = None
+    dt_max: Optional[float] = None
 
     def __post_init__(self):
         get_solver(self.method).validate(self)  # unknown method raises here

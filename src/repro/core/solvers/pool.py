@@ -52,7 +52,9 @@ from .state import (
 Array = jnp.ndarray
 
 #: the SolverState leaves carrying one row per slot (everything else —
-#: times/aux/ctx — is shared across the pool).
+#: times/aux/ctx — is shared across the pool).  ``ctrl`` (adaptive-stepping
+#: controller rows) is also per-slot when present; the gather/scatter below
+#: handle it tree-generically since its presence is static per state.
 _PER_SLOT_FIELDS = ("x", "step", "t", "rng", "target")
 
 
@@ -81,6 +83,8 @@ def _gather(state: SolverState, perm: Array) -> SolverState:
     would delete buffers the full state still references.
     """
     repl = {f: getattr(state, f)[perm] for f in _PER_SLOT_FIELDS}
+    if state.ctrl is not None:
+        repl["ctrl"] = jax.tree_util.tree_map(lambda a: a[perm], state.ctrl)
     repl["times"] = jnp.copy(state.times)
     repl["aux"] = jax.tree_util.tree_map(jnp.copy, state.aux)
     return dataclasses.replace(state, **repl)
@@ -91,6 +95,9 @@ def _scatter(state: SolverState, sub: SolverState, perm: Array) -> SolverState:
     """Write the bucket's per-slot rows back at ``perm`` (distinct indices)."""
     repl = {f: getattr(state, f).at[perm].set(getattr(sub, f))
             for f in _PER_SLOT_FIELDS}
+    if state.ctrl is not None:
+        repl["ctrl"] = jax.tree_util.tree_map(
+            lambda a, b: a.at[perm].set(b), state.ctrl, sub.ctrl)
     return dataclasses.replace(state, **repl)
 
 
@@ -205,9 +212,11 @@ class SlotPool:
 
     # ------------------------------------------------------------ pool ops
     def admit(self, slot: int, key: jax.Array,
-              n_steps: Optional[int] = None) -> None:
+              n_steps: Optional[int] = None,
+              rtol: Optional[float] = None) -> None:
         """Restart ``slot`` from t = t_max under its own key (admit_slot)."""
-        self.state = admit_slot(self.state, slot, key, n_steps=n_steps)
+        self.state = admit_slot(self.state, slot, key, n_steps=n_steps,
+                                rtol=rtol)
 
     def slot_done(self) -> np.ndarray:
         """[capacity] bool — slots whose step budget is consumed (fetches)."""

@@ -141,15 +141,21 @@ class SolverState:
     ctx: Any
     #: static mode flag.
     per_slot: bool
+    #: adaptive-stepping controller rows (``adaptive.ControllerState``, [B]
+    #: leaves) for adaptive solvers in per-slot mode; None otherwise.  When
+    #: present, ``advance`` dispatches to ``solver.advance_state`` — the
+    #: controller-off pytree structure (and therefore every existing jit
+    #: cache entry and its bits) is untouched.
+    ctrl: Any = None
 
 
 jax.tree_util.register_pytree_node(
     SolverState,
-    lambda s: ((s.x, s.step, s.t, s.rng, s.times, s.target, s.aux),
+    lambda s: ((s.x, s.step, s.t, s.rng, s.times, s.target, s.aux, s.ctrl),
                (s.ctx, s.per_slot)),
     lambda meta, ch: SolverState(x=ch[0], step=ch[1], t=ch[2], rng=ch[3],
                                  times=ch[4], target=ch[5], aux=ch[6],
-                                 ctx=meta[0], per_slot=meta[1]),
+                                 ctrl=ch[7], ctx=meta[0], per_slot=meta[1]),
 )
 
 
@@ -195,7 +201,12 @@ def init_state(
     ctx = _intern_context(solver, engine, config)
     times = engine.time_grid(config)
     aux = solver.prepare(engine, config)
+    adaptive = getattr(solver, "adaptive", False)
     if not per_slot:
+        if adaptive:
+            raise ValueError(
+                f"solver {config.method!r} is adaptive and runs per-slot "
+                "only; use init_state(..., per_slot=True) or sample()")
         x0, k_loop = engine.prior(key, batch, seq_len)
         if k_loop is key:
             # Engines that consume no prior entropy (masked) hand the caller's
@@ -217,6 +228,8 @@ def init_state(
         aux=aux,
         ctx=ctx,
         per_slot=True,
+        ctrl=(solver.init_controller(config, times, batch)
+              if adaptive else None),
     )
 
 
@@ -244,6 +257,10 @@ def advance(state: SolverState) -> SolverState:
     target) are frozen.
     """
     ctx = run_context(state)
+    if state.ctrl is not None:
+        # Adaptive solvers own their advance: accept/reject attempt with
+        # per-slot dt from the controller rows (see solvers/adaptive.py).
+        return ctx.solver.advance_state(state)
     if not state.per_slot:
         n_steps = ctx.config.n_steps
         i_c = jnp.minimum(state.step, n_steps - 1)
@@ -328,14 +345,17 @@ def finalize(state: SolverState) -> Array:
 
 
 def admit_slot(state: SolverState, slot: int, key: jax.Array,
-               n_steps: Optional[int] = None) -> SolverState:
+               n_steps: Optional[int] = None,
+               rtol: Optional[float] = None) -> SolverState:
     """Restart slot ``slot`` from t = t_max under its own key.
 
     The slot's canvas and loop key come from ``engine.prior`` exactly as a
     fresh per-slot init would produce them, so a request's tokens do not
     depend on when (or next to whom) it was admitted.  ``n_steps`` overrides
     the config's step budget for this slot (per-request NFE): the slot then
-    walks an n_steps-resolution grid over the same [t_max, t_stop] span.
+    walks an n_steps-resolution grid over the same [t_max, t_stop] span —
+    for adaptive solvers it caps the slot's *attempts* instead.  ``rtol``
+    overrides the config's tolerance for this slot (adaptive solvers only).
     """
     if not state.per_slot:
         raise ValueError("admit_slot requires a per-slot state "
@@ -348,16 +368,23 @@ def admit_slot(state: SolverState, slot: int, key: jax.Array,
             f"solver {ctx.config.method!r} bakes config.n_steps into its "
             "per-step math or aux; per-slot n_steps overrides are not "
             "supported")
+    if rtol is not None and state.ctrl is None:
+        raise ValueError(
+            f"solver {ctx.config.method!r} is not adaptive; per-slot rtol "
+            "overrides require an adaptive solver")
     seq_len = state.x.shape[1] if state.x.ndim > 1 else None
     x_row, loop_key = _slot_prior(ctx.engine, key, seq_len)
-    return dataclasses.replace(
-        state,
+    repl = dict(
         x=state.x.at[slot].set(x_row.astype(state.x.dtype)),
         step=state.step.at[slot].set(0),
         t=state.t.at[slot].set(state.times[0]),
         rng=state.rng.at[slot].set(loop_key),
         target=state.target.at[slot].set(n_steps),
     )
+    if state.ctrl is not None:
+        repl["ctrl"] = ctx.solver.reset_controller_slot(
+            state.ctrl, slot, ctx.config, state.times, n_steps, rtol=rtol)
+    return dataclasses.replace(state, **repl)
 
 
 def budget_supported(state: SolverState, n_steps: int) -> bool:
@@ -376,7 +403,14 @@ def budget_supported(state: SolverState, n_steps: int) -> bool:
 
 
 def slot_done(state: SolverState) -> Array:
-    """[B] bool — slots whose trajectory has consumed its step budget."""
+    """[B] bool — slots whose trajectory has consumed its step budget.
+
+    Adaptive states finish early: a slot whose time has landed on the grid
+    endpoint is done regardless of how many attempts remain in its cap.
+    """
     if not state.per_slot:
         raise ValueError("slot_done requires a per-slot state")
-    return state.step >= state.target
+    done = state.step >= state.target
+    if state.ctrl is not None:
+        done = done | (state.t <= state.times[-1])
+    return done

@@ -86,6 +86,12 @@ def main() -> None:
                     choices=list_solvers())
     ap.add_argument("--nfe", type=int, default=32)
     ap.add_argument("--theta", type=float, default=0.4)
+    ap.add_argument("--rtol", type=float, default=None,
+                    help="per-request error tolerance for adaptive solvers "
+                         "(--method adaptive_theta_trapezoidal): --nfe "
+                         "becomes the attempt cap and the controller picks "
+                         "each slot's dt; unset uses the SamplerConfig "
+                         "default")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -177,7 +183,8 @@ def main() -> None:
             target = ServingEngine(params, cfg, process, sampler,
                                    **engine_kw)
         requests = [Request(request_id=i, seq_len=args.seq_len,
-                            seed=args.seed + i) for i in range(args.requests)]
+                            seed=args.seed + i, rtol=args.rtol)
+                    for i in range(args.requests)]
         arrivals = (poisson_arrivals(args.requests, 1.0 / args.arrival_rate,
                                      seed=args.trace_seed)
                     if args.arrival_rate > 0 else None)
@@ -222,6 +229,10 @@ def main() -> None:
               f"occupancy {st.occupancy:.1%} of {st.paid_slot_steps} paid "
               f"slot-steps, {st.rebalanced} rebalanced, "
               f"{st.finalize_rows} finalize rows")
+        if st.accepted_steps or st.rejected_steps:
+            print(f"adaptive: {st.accepted_steps} accepted / "
+                  f"{st.rejected_steps} rejected steps, "
+                  f"mean NFE/request {st.mean_nfe_per_request:.1f}")
         for w in st.per_worker:
             print(f"  worker {w['worker_id']}: served {w['served']}, "
                   f"occupancy {w['occupancy']:.1%}, "
@@ -236,6 +247,11 @@ def main() -> None:
               f"{'compacted' if stats['compact'] else 'dense'} pool, "
               f"{stats['finalize_rows']} finalize rows in "
               f"{stats['finalize_passes']} passes)")
+        if stats.get("adaptive"):
+            print(f"adaptive: {stats['accepted_steps']} accepted / "
+                  f"{stats['rejected_steps']} rejected steps "
+                  f"(reject rate {stats['reject_rate']:.1%}), "
+                  f"mean NFE/request {stats['mean_nfe_per_request']:.1f}")
     print("first sample head:", toks[0, :24].tolist())
 
 

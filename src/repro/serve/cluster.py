@@ -219,6 +219,12 @@ class ClusterStats:
     occupancy: float
     #: sum over workers of rows paid by batched finalize forwards.
     finalize_rows: int
+    #: adaptive stepping: accepted / rejected attempts across the fleet
+    #: (zeros under fixed-step solvers) and realized NFE per finished
+    #: request (0.0 when nothing finished — never a division error).
+    accepted_steps: int
+    rejected_steps: int
+    mean_nfe_per_request: float
     #: submit -> admission percentiles over finished requests (seconds).
     queue_delay_p50_s: float
     queue_delay_p95_s: float
@@ -352,11 +358,16 @@ class Router:
     def stats(self) -> ClusterStats:
         per_worker = []
         paid = active = fin_rows = 0
+        accepted = rejected = realized_nfe = served_w = 0
         for w in self.workers:
             st = w.engine.stats()
             paid += st["paid_slot_steps"]
             active += st["active_slot_steps"]
             fin_rows += st["finalize_rows"]
+            accepted += st.get("accepted_steps", 0)
+            rejected += st.get("rejected_steps", 0)
+            realized_nfe += st.get("realized_nfe", 0)
+            served_w += st["requests_served"]
             per_worker.append(dict(worker_id=w.worker_id, served=w.served,
                                    backlog=w.backlog,
                                    device=str(w.device) if w.device else None,
@@ -372,6 +383,10 @@ class Router:
             active_slot_steps=active,
             occupancy=(active / paid) if paid else 0.0,
             finalize_rows=fin_rows,
+            accepted_steps=accepted,
+            rejected_steps=rejected,
+            mean_nfe_per_request=(realized_nfe / served_w) if served_w
+                                 else 0.0,
             queue_delay_p50_s=_pct(self._queue_delays, 50),
             queue_delay_p95_s=_pct(self._queue_delays, 95),
             latency_p50_s=_pct(self._latencies, 50),

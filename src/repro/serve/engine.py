@@ -93,8 +93,13 @@ class Request:
     seq_len: int
     seed: int = 0
     #: per-request step budget (NFE knob); None = the sampler config's
-    #: n_steps.  Ignored by whole-trajectory solvers (fhs).
+    #: n_steps.  Ignored by whole-trajectory solvers (fhs).  For adaptive
+    #: solvers this caps *attempts* (a max-NFE budget) instead of fixing the
+    #: step count.
     n_steps: Optional[int] = None
+    #: per-request relative error tolerance (adaptive solvers only); None =
+    #: the sampler config's rtol.  Looser tolerances finish in fewer NFEs.
+    rtol: Optional[float] = None
     #: per-request streaming callback; the engine-wide ``stream_cb`` (if any)
     #: applies to requests that don't set one.
     stream_cb: Optional[StreamFn] = None
@@ -118,6 +123,10 @@ class Result:
     #: id of the cluster worker that served the request (-1: single-engine
     #: serving — the Router stamps this).
     worker: int = -1
+    #: adaptive solvers only: accepted / rejected attempts this request's
+    #: controller recorded (accepted + rejected == steps; zero otherwise).
+    accepted_steps: int = 0
+    rejected_steps: int = 0
 
 
 #: a drained request waiting for its batched finalize forward: the slot is
@@ -129,6 +138,8 @@ class _PendingFinish:
     admit_t: float
     row: jnp.ndarray
     steps: int
+    accepted: int = 0
+    rejected: int = 0
 
 
 def make_score_fn(params: Params, cfg: ModelConfig,
@@ -196,6 +207,7 @@ class ServingEngine:
         self._solver_engine = solver_engine
         self._solver = get_solver(sampler.method)()
         self._stepwise = self._solver.supports_stepwise
+        self._adaptive = bool(getattr(self._solver, "adaptive", False))
         if self._stepwise:
             # Per-slot pool state; all slots start drained (step == n_steps,
             # frozen by advance) until a request is admitted into them.
@@ -212,6 +224,22 @@ class ServingEngine:
             # non-streaming path.
             self._steps_host = np.full((max_batch,), sampler.n_steps,
                                        np.int32)
+            if self._adaptive:
+                # Adaptive solvers drain on time, not step count: mirror the
+                # per-slot t / dt / accept counters on host (fetched from the
+                # same bucket the tick already pulls ``step`` from) so drain
+                # detection, live NFE estimates, and realized-NFE accounting
+                # stay fetch-free.
+                times = np.asarray(state.times)
+                self._t_hi = float(times[0])
+                self._t_lo = float(times[-1])
+                self._t_eps = 1e-6 * (self._t_hi - self._t_lo)
+                self._t_host = np.full((max_batch,), self._t_lo)
+                self._dt_host = np.full(
+                    (max_batch,),
+                    (self._t_hi - self._t_lo) / max(sampler.n_steps, 1))
+                self._acc_host = np.zeros((max_batch,), np.int64)
+                self._rej_host = np.zeros((max_batch,), np.int64)
             self._finalize = jax.jit(finalize)  # dense-pool (legacy) finalize
         else:
             # Whole-trajectory solvers (fhs) run monolithically per batch; the
@@ -235,6 +263,10 @@ class ServingEngine:
         self._active_slot_steps = 0
         self._paid_slot_steps = 0
         self._finalize_rows = 0
+        # adaptive-stepping accounting (zero for fixed-step solvers)
+        self.accepted_steps = 0
+        self.rejected_steps = 0
+        self._nfe_served = 0
 
     # ------------------------------------------------------------- lifecycle
     def validate(self, req: Request) -> None:
@@ -254,6 +286,13 @@ class ServingEngine:
                 f"solver {self.sampler.method!r} does not support per-request "
                 f"n_steps (requested {req.n_steps}, engine runs "
                 f"{self.sampler.n_steps})")
+        if req.rtol is not None:
+            if not self._adaptive:
+                raise ValueError(
+                    f"solver {self.sampler.method!r} is not adaptive; "
+                    "per-request rtol requires an adaptive solver")
+            if req.rtol <= 0.0:
+                raise ValueError(f"request rtol must be > 0, got {req.rtol}")
 
     def submit(self, req: Request, submit_t: Optional[float] = None) -> None:
         """Queue ``req``.  ``submit_t`` (a ``time.monotonic()`` stamp) lets a
@@ -279,15 +318,18 @@ class ServingEngine:
     def remaining_work(self) -> int:
         """Solver steps this engine still owes: the remaining budgets of its
         RUNNING slots plus the full budgets of its QUEUED requests (the
-        ``least_remaining_nfe`` router policy's load signal)."""
+        ``least_remaining_nfe`` router policy's load signal).  Under an
+        adaptive solver the RUNNING portion is the controller's *live*
+        estimate — remaining time over current dt, capped by the attempt
+        budget — so routing tracks realized difficulty, not the worst case.
+        """
         queued = sum(self.sampler.n_steps if req.n_steps is None else
                      req.n_steps for req, _ in self._queue)
         if not self._stepwise:
             # Monolithic solvers (fhs) ignore step budgets; approximate each
             # running request by the config's budget.
             return queued + len(self.active_slots) * self.sampler.n_steps
-        running = sum(self._slot_budget(s) - int(self._steps_host[s])
-                      for s in self.active_slots)
+        running = sum(self._slot_remaining(s) for s in self.active_slots)
         return queued + running
 
     def place(self, device) -> None:
@@ -332,6 +374,32 @@ class ServingEngine:
         req = self._slot_req[slot]
         return self.sampler.n_steps if req.n_steps is None else req.n_steps
 
+    def _slot_remaining(self, slot: int) -> int:
+        """Solver steps slot ``slot`` still expects to run.
+
+        Fixed-step solvers: budget minus executed steps.  Adaptive solvers:
+        the controller's live estimate ``ceil(remaining time / current dt)``,
+        capped by the remaining attempt budget — the signal behind both
+        ``scheduler_stride="auto"`` and ``least_remaining_nfe`` routing.
+        """
+        left = self._slot_budget(slot) - int(self._steps_host[slot])
+        if not self._adaptive:
+            return left
+        if left <= 0:
+            return 0
+        t_left = float(self._t_host[slot]) - self._t_lo
+        if t_left <= self._t_eps:
+            return 0
+        est = int(np.ceil(t_left / max(float(self._dt_host[slot]), 1e-12)))
+        return max(1, min(left, est))
+
+    def _slot_drained(self, slot: int) -> bool:
+        """Whether slot ``slot``'s trajectory is finished (frozen canvas)."""
+        if self._steps_host[slot] >= self._slot_budget(slot):
+            return True
+        return self._adaptive and (self._t_host[slot]
+                                   <= self._t_lo + self._t_eps)
+
     def _admit(self) -> None:
         """Move queued requests into free slots (continuous: at any step
         boundary; run-to-completion: only once the whole pool has drained)."""
@@ -346,24 +414,36 @@ class ServingEngine:
             req, submit_t = self._queue.popleft()
             if self._stepwise:
                 self._pool.admit(slot, self.request_key(req),
-                                 n_steps=req.n_steps)
+                                 n_steps=req.n_steps, rtol=req.rtol)
                 self._steps_host[slot] = 0
+                if self._adaptive:
+                    budget = (self.sampler.n_steps if req.n_steps is None
+                              else req.n_steps)
+                    self._t_host[slot] = self._t_hi
+                    self._dt_host[slot] = ((self._t_hi - self._t_lo)
+                                           / max(budget, 1))
+                    self._acc_host[slot] = 0
+                    self._rej_host[slot] = 0
             req.status = RUNNING
             self._slot_req[slot] = req
             self._slot_times[slot] = (submit_t, now)
 
     def _make_result(self, req: Request, submit_t: float, admit_t: float,
-                     finish_t: float, steps: int,
-                     tokens_row: np.ndarray) -> Result:
+                     finish_t: float, steps: int, tokens_row: np.ndarray,
+                     accepted: int = 0, rejected: int = 0) -> Result:
         req.status = FINISHED
         self.requests_served += 1
+        nfe = steps * self._solver.nfe_per_step
+        self._nfe_served += nfe
         return Result(
             request_id=req.request_id,
             tokens=np.asarray(tokens_row[: req.seq_len]),
-            nfe=steps * self._solver.nfe_per_step,
+            nfe=nfe,
             latency_s=finish_t - submit_t,
             queue_delay_s=admit_t - submit_t,
             steps=steps,
+            accepted_steps=accepted,
+            rejected_steps=rejected,
         )
 
     def _emit_slot(self, slot: int, finish_t: float, steps: int,
@@ -372,9 +452,11 @@ class ServingEngine:
         paths; the compacted path emits from the pending-finalize buffer)."""
         req = self._slot_req[slot]
         submit_t, admit_t = self._slot_times[slot]
+        acc, rej = ((int(self._acc_host[slot]), int(self._rej_host[slot]))
+                    if self._adaptive and self._stepwise else (0, 0))
         self._slot_req[slot] = None
         return self._make_result(req, submit_t, admit_t, finish_t, steps,
-                                 tokens_row)
+                                 tokens_row, accepted=acc, rejected=rej)
 
     def _slot_stream_cb(self, slot: int) -> Optional[StreamFn]:
         """The callback streaming this slot, if any (request's, else engine's)."""
@@ -395,8 +477,9 @@ class ServingEngine:
         """
         if self.scheduler_stride != "auto":
             return self.scheduler_stride
-        remaining = min(self._slot_budget(s) - int(self._steps_host[s])
-                        for s in active)
+        # For adaptive solvers _slot_remaining is the controller's live NFE
+        # estimate, so auto-strides aim at the *predicted* earliest drain.
+        remaining = min(self._slot_remaining(s) for s in active)
         cap = (self.auto_stride_max if self._queue
                else max(1, self.auto_stride_max // 2))
         remaining = max(1, min(remaining, cap))
@@ -415,7 +498,8 @@ class ServingEngine:
         self._finalize_rows += paid
         finish_t = time.monotonic()
         out = [self._make_result(p.req, p.submit_t, p.admit_t, finish_t,
-                                 p.steps, tokens[j])
+                                 p.steps, tokens[j], accepted=p.accepted,
+                                 rejected=p.rejected)
                for j, p in enumerate(self._pending)]
         self._pending.clear()
         self._pending_age = 0
@@ -444,10 +528,24 @@ class ServingEngine:
             # slot executed (a slot draining mid-stride freezes and stops
             # counting).  Padding rows are frozen free slots: delta 0.
             steps_sub = np.asarray(sub.step)
+            if self._adaptive:
+                t_sub = np.asarray(sub.t)
+                dt_sub = np.asarray(sub.ctrl.dt)
+                acc_sub = np.asarray(sub.ctrl.accepted)
+                rej_sub = np.asarray(sub.ctrl.rejected)
             for j, slot in enumerate(perm[: len(active)]):
                 self._active_slot_steps += int(steps_sub[j]
                                                - self._steps_host[slot])
                 self._steps_host[slot] = steps_sub[j]
+                if self._adaptive:
+                    self.accepted_steps += int(acc_sub[j]
+                                               - self._acc_host[slot])
+                    self.rejected_steps += int(rej_sub[j]
+                                               - self._rej_host[slot])
+                    self._t_host[slot] = t_sub[j]
+                    self._dt_host[slot] = dt_sub[j]
+                    self._acc_host[slot] = acc_sub[j]
+                    self._rej_host[slot] = rej_sub[j]
             x_view, row_of = sub.x, {int(s): j for j, s in enumerate(perm)}
         else:
             self._pool.advance_all(stride)
@@ -455,6 +553,15 @@ class ServingEngine:
             steps_all = np.asarray(self._state.step)
             self._active_slot_steps += int((steps_all - self._steps_host).sum())
             self._steps_host = steps_all.copy()  # writable: _admit zeroes slots
+            if self._adaptive:
+                acc_all = np.asarray(self._state.ctrl.accepted)
+                rej_all = np.asarray(self._state.ctrl.rejected)
+                self.accepted_steps += int((acc_all - self._acc_host).sum())
+                self.rejected_steps += int((rej_all - self._rej_host).sum())
+                self._t_host = np.asarray(self._state.t).copy()
+                self._dt_host = np.asarray(self._state.ctrl.dt).copy()
+                self._acc_host = acc_all.astype(np.int64)
+                self._rej_host = rej_all.astype(np.int64)
             x_view, row_of = self._state.x, {s: s for s in range(self.max_batch)}
         self.global_steps += stride
         self._paid_slot_steps += width * stride
@@ -472,8 +579,7 @@ class ServingEngine:
                 cb(req.request_id, int(self._steps_host[slot]),
                    x_host[row_of[slot], : req.seq_len])
 
-        done = [s for s in active
-                if self._steps_host[s] >= self._slot_budget(s)]
+        done = [s for s in active if self._slot_drained(s)]
         if self.compact:
             # Capture the frozen rows, free the slots NOW (admission never
             # waits on finalize), and finish them in a batched forward once
@@ -484,7 +590,11 @@ class ServingEngine:
                 self._pending.append(_PendingFinish(
                     req=req, submit_t=submit_t, admit_t=admit_t,
                     row=x_view[row_of[slot]],
-                    steps=int(self._steps_host[slot])))
+                    steps=int(self._steps_host[slot]),
+                    accepted=(int(self._acc_host[slot])
+                              if self._adaptive else 0),
+                    rejected=(int(self._rej_host[slot])
+                              if self._adaptive else 0)))
                 self._slot_req[slot] = None
             if self._pending:
                 # Flush when the batch fills, the pool idles, OR the oldest
@@ -549,8 +659,10 @@ class ServingEngine:
         ``finalize_passes`` (launches) / ``finalize_rows`` (rows paid).
         """
         paid = self._paid_slot_steps
+        served = self.requests_served
+        attempts = self.accepted_steps + self.rejected_steps
         return {
-            "requests_served": self.requests_served,
+            "requests_served": served,
             "global_steps": self.global_steps,
             # in-grid solver forward launches + the batched finalize launches
             "score_evals": (self.global_steps * self._solver.nfe_per_step
@@ -564,6 +676,17 @@ class ServingEngine:
             "last_stride": self.last_stride,
             "compact": self.compact,
             "stream_fetches": self.stream_fetches,
+            # adaptive-stepping accounting (all-zero for fixed-step solvers;
+            # every ratio is guarded so an idle/never-ticked engine reports
+            # clean zeros instead of dividing by nothing).
+            "adaptive": self._adaptive,
+            "accepted_steps": self.accepted_steps,
+            "rejected_steps": self.rejected_steps,
+            "reject_rate": (self.rejected_steps / attempts) if attempts
+                           else 0.0,
+            "realized_nfe": self._nfe_served,
+            "mean_nfe_per_request": (self._nfe_served / served) if served
+                                    else 0.0,
         }
 
 

@@ -179,7 +179,7 @@ class FabricRouter(Router):
                                                   for h in handles}
         self._ledger: Dict[int, _LedgerEntry] = {}
         self._kill_at: List[Tuple[int, int]] = []   # (tick, worker_id)
-        self._join_at: List[int] = []               # ticks
+        self._join_at: List[Tuple[int, Optional[int]]] = []  # (tick, reuse_id)
         self.recovered = 0
         self.deaths = 0
         self.joins = 0
@@ -214,9 +214,11 @@ class FabricRouter(Router):
         else:
             self._kill_at.append((at_tick, worker_id))
 
-    def schedule_join(self, at_tick: int) -> None:
-        """Register a fresh worker when the fabric reaches ``at_tick``."""
-        self._join_at.append(at_tick)
+    def schedule_join(self, at_tick: int,
+                      reuse_id: Optional[int] = None) -> None:
+        """Register a fresh worker when the fabric reaches ``at_tick``
+        (``reuse_id`` respawns a dead worker in place instead)."""
+        self._join_at.append((at_tick, reuse_id))
 
     def apply_failure_schedule(self, events) -> None:
         """Wire a :func:`repro.serve.trace.failure_schedule` into kill /
@@ -227,10 +229,39 @@ class FabricRouter(Router):
             if ev.rejoin_tick is not None:
                 self.schedule_join(ev.rejoin_tick)
 
-    def add_worker(self) -> WorkerHandle:
+    def add_worker(self, reuse_id: Optional[int] = None) -> WorkerHandle:
         """Elastic join: spawn a worker, register its handle, and immediately
         move rebalanced QUEUED work onto it (one rebalance pass runs even when
-        steady-state ``rebalance`` is off — an empty newcomer is the point)."""
+        steady-state ``rebalance`` is off — an empty newcomer is the point).
+
+        With ``reuse_id``, a rejoining host reclaims its original worker id:
+        the worker must already have been **declared dead** by the router (its
+        ledger entries were requeued at declaration, so resurrection cannot
+        double-serve), and its existing handle is revived in place — lifetime
+        counters (``served``, ``died_tick`` history in ``joins``/``deaths``)
+        survive the outage."""
+        if reuse_id is not None:
+            handle = self._handles.get(reuse_id)
+            if handle is None:
+                raise ValueError(f"reuse_id {reuse_id} was never a worker "
+                                 f"of this fabric")
+            if handle.alive:
+                raise ValueError(f"worker {reuse_id} is still alive; only a "
+                                 f"dead worker can rejoin in place")
+            self.transport.spawn(reuse_id=reuse_id)
+            # Revive the same handle: the death path already drained its
+            # ledger entries and assigned set, so accounting starts clean.
+            handle.alive = True
+            handle.joined_tick = self.tick
+            handle.died_tick = None
+            handle.last_hb = None
+            handle.last_hb_tick = self.tick
+            handle.queued_est = 0
+            handle._pending_work = 0
+            handle.assigned.clear()
+            self.joins += 1
+            self._rebalance()
+            return handle
         wid = self.transport.spawn()
         handle = WorkerHandle(wid, joined_tick=self.tick)
         handle.last_hb_tick = self.tick
@@ -338,9 +369,10 @@ class FabricRouter(Router):
                              if kv[0] <= self.tick]:
             self._kill_at.remove((at_tick, wid))
             self.transport.kill(wid)
-        for at_tick in [t for t in self._join_at if t <= self.tick]:
-            self._join_at.remove(at_tick)
-            self.add_worker()
+        for at_tick, reuse_id in [jv for jv in self._join_at
+                                  if jv[0] <= self.tick]:
+            self._join_at.remove((at_tick, reuse_id))
+            self.add_worker(reuse_id=reuse_id)
         self._dispatch()
         if self.rebalance:
             self._rebalance()

@@ -112,8 +112,13 @@ class Transport:
         and the router's fence when it declares a worker dead).  Idempotent."""
         raise NotImplementedError
 
-    def spawn(self) -> int:
-        """Start a fresh worker (elastic join); returns its new worker id."""
+    def spawn(self, reuse_id: Optional[int] = None) -> int:
+        """Start a fresh worker (elastic join); returns its new worker id.
+
+        With ``reuse_id``, respawn **in place**: restart a previously killed
+        worker under its original id (a rejoining host reclaiming its slot).
+        The id must belong to a worker this transport killed — reusing a
+        live id or inventing one raises ValueError."""
         raise NotImplementedError
 
     def close(self) -> None:
@@ -239,10 +244,19 @@ class LoopbackTransport(Transport):
         if worker_id in self._workers:
             self._workers[worker_id] = None  # state lost, like a host crash
 
-    def spawn(self) -> int:
+    def spawn(self, reuse_id: Optional[int] = None) -> int:
         if self._spawn_worker is None:
             raise RuntimeError("LoopbackTransport has no spawn_worker factory; "
                               "pass one to enable elastic join")
+        if reuse_id is not None:
+            if reuse_id not in self._workers:
+                raise ValueError(f"reuse_id {reuse_id} was never a worker "
+                                 f"of this transport")
+            if self._workers[reuse_id] is not None:
+                raise ValueError(f"worker {reuse_id} is still alive; only a "
+                                 f"killed worker id can be reused")
+            self._workers[reuse_id] = self._spawn_worker(reuse_id)
+            return reuse_id
         wid = self._next_id
         self._next_id += 1
         self._workers[wid] = self._spawn_worker(wid)
@@ -402,9 +416,19 @@ class ProcessTransport(Transport):
             raise ValueError("per-request stream_cb cannot cross a process "
                              "transport; stream from a loopback fabric")
 
-    def spawn(self) -> int:
-        wid = self._next_id
-        self._next_id += 1
+    def spawn(self, reuse_id: Optional[int] = None) -> int:
+        if reuse_id is not None:
+            w = self._workers.get(reuse_id)
+            if w is None:
+                raise ValueError(f"reuse_id {reuse_id} was never a worker "
+                                 f"of this transport")
+            if w.alive:
+                raise ValueError(f"worker {reuse_id} is still alive; only a "
+                                 f"killed worker id can be reused")
+            wid = reuse_id
+        else:
+            wid = self._next_id
+            self._next_id += 1
         parent_conn, child_conn = self._ctx.Pipe()
         proc = self._ctx.Process(
             target=_host_worker_main,

@@ -1,0 +1,522 @@
+"""Adaptive step-size subsystem: embedded theta-pair error estimator, per-slot
+PI controller, dynamic-NFE serving, fabric respawn-in-place, and the idle-stats
+guards that ride along."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DenseCTMC,
+    DenseEngine,
+    MaskedEngine,
+    METHODS,
+    SamplerConfig,
+    StepController,
+    admit_slot,
+    advance,
+    advance_many,
+    finalize,
+    get_solver,
+    init_state,
+    list_solvers,
+    loglinear_schedule,
+    masked_process,
+    sample,
+    slot_done,
+    uniform_rate_matrix,
+)
+from repro.core.solvers.adaptive import dt_bounds
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serve import (
+    FabricRouter,
+    LoopbackTransport,
+    PoolWorker,
+    Request,
+    ServingCluster,
+    ServingEngine,
+)
+
+METHOD = "adaptive_theta_trapezoidal"
+
+
+@pytest.fixture(scope="module")
+def toy():
+    rng = np.random.default_rng(0)
+    p0 = rng.dirichlet(np.ones(8) * 2.0)
+    # 8 states: a real eigenbasis for the jittable DenseCTMC.marginal.
+    return DenseCTMC(q=uniform_rate_matrix(8), p0=p0, t_max=8.0)
+
+
+# --------------------------------------------------------------------------- #
+# Registry and config validation
+# --------------------------------------------------------------------------- #
+
+
+def test_registered_outside_legacy_methods():
+    """The adaptive solver joins the live registry but never the frozen
+    legacy METHODS snapshot (compat wrappers keep their historical set)."""
+    assert METHOD in list_solvers()
+    assert METHOD not in METHODS
+    cls = get_solver(METHOD)
+    assert cls.adaptive and cls.supports_stepwise
+    assert cls.nfe_per_step == 2
+
+
+@pytest.mark.parametrize("bad", [
+    dict(theta=1.0),
+    dict(rtol=0.0),
+    dict(rtol=-0.5),
+    dict(dt_min=-1.0),
+    dict(dt_max=0.0),
+    dict(dt_min=0.5, dt_max=0.1),
+])
+def test_validate_rejects_bad_config(bad):
+    with pytest.raises(ValueError):
+        SamplerConfig(method=METHOD, n_steps=8, **bad)
+
+
+def test_no_fixed_step_form(toy, rng_key):
+    cfg = SamplerConfig(method=METHOD, n_steps=8, theta=0.5)
+    solver = get_solver(METHOD)()
+    with pytest.raises(ValueError, match="no fixed-step form"):
+        solver.step(rng_key, DenseEngine(toy), None, 1.0, 0.5, cfg)
+    with pytest.raises(ValueError, match="per-slot"):
+        init_state(rng_key, DenseEngine(toy), cfg, 8)
+    with pytest.raises(ValueError, match="tracing"):
+        sample(rng_key, DenseEngine(toy), cfg, batch=4,
+               trace_fn=lambda *a: 0.0)
+
+
+def test_dt_bounds_defaults_and_overrides():
+    times = jnp.linspace(8.0, 0.0, 9)
+    cfg = SamplerConfig(method=METHOD, n_steps=8)
+    lo, hi = dt_bounds(cfg, times)
+    assert float(lo) == pytest.approx(8.0 / (8 * 8))
+    assert float(hi) == pytest.approx(4.0)
+    cfg2 = SamplerConfig(method=METHOD, n_steps=8, dt_min=0.3, dt_max=2.5)
+    lo2, hi2 = dt_bounds(cfg2, times)
+    assert (float(lo2), float(hi2)) == (0.3, 2.5)
+
+
+# --------------------------------------------------------------------------- #
+# Sampling quality (toy dense: adaptive ~ fixed-step trapezoidal)
+# --------------------------------------------------------------------------- #
+
+
+def _freqs(tokens, n):
+    return np.bincount(np.asarray(tokens).ravel(), minlength=n) / tokens.size
+
+
+def test_sample_quality_matches_fixed(toy, rng_key):
+    """With a tight tolerance the adaptive sampler's marginal stays as close
+    to the exact law as the fixed-step trapezoidal run it embeds."""
+    batch = 8192
+    fixed = sample(rng_key, DenseEngine(toy),
+                   SamplerConfig(method="theta_trapezoidal", n_steps=16,
+                                 theta=0.5), batch=batch)
+    adap = sample(rng_key, DenseEngine(toy),
+                  SamplerConfig(method=METHOD, n_steps=64, theta=0.5,
+                                rtol=0.7), batch=batch)
+    exact = toy.marginal_np(float(jnp.asarray(
+        DenseEngine(toy).time_grid(SamplerConfig(n_steps=16))[-1])))
+    n = toy.q.shape[0]
+    tv_fixed = 0.5 * np.abs(_freqs(fixed.tokens, n) - exact).sum()
+    tv_adap = 0.5 * np.abs(_freqs(adap.tokens, n) - exact).sum()
+    assert (adap.tokens >= 0).all() and (np.asarray(adap.tokens) < n).all()
+    # Same ballpark as fixed-step (both dominated by MC noise at this batch).
+    assert tv_adap <= tv_fixed + 0.05
+
+
+# --------------------------------------------------------------------------- #
+# Per-slot time/dt invariants (monotone t, exact landing, advance_many parity)
+# --------------------------------------------------------------------------- #
+
+
+def _adaptive_state(toy, key, batch=6, n_steps=32, rtol=1.0):
+    cfg = SamplerConfig(method=METHOD, n_steps=n_steps, theta=0.5, rtol=rtol)
+    return init_state(key, DenseEngine(toy), cfg, batch, per_slot=True)
+
+
+def test_t_monotone_and_exact_landing(toy, rng_key):
+    state = _adaptive_state(toy, rng_key)
+    t_lo = float(np.asarray(state.times[-1]))
+    prev = np.asarray(state.t)
+    for _ in range(int(np.asarray(state.target).max())):
+        state = advance(state)
+        cur = np.asarray(state.t)
+        assert (cur <= prev + 1e-12).all(), "t must be non-increasing"
+        prev = cur
+    done = np.asarray(slot_done(state))
+    assert done.all(), "attempt cap must terminate every slot"
+    landed = np.asarray(state.t) == t_lo
+    under_cap = np.asarray(state.step) < np.asarray(state.target)
+    # A slot that finished with attempts to spare can only have stopped by
+    # landing bitwise-exactly on the grid endpoint.
+    assert (landed | ~under_cap).all()
+    assert landed.any(), "with a sane rtol some slot must reach t_end"
+    tokens = np.asarray(finalize(state))
+    assert tokens.shape == (6,)
+
+
+def test_accept_counters_match_steps(toy, rng_key):
+    state = _adaptive_state(toy, rng_key, batch=4, rtol=0.15)
+    for _ in range(16):
+        state = advance(state)
+    acc = np.asarray(state.ctrl.accepted)
+    rej = np.asarray(state.ctrl.rejected)
+    steps = np.asarray(state.step)
+    assert (acc + rej == steps).all()
+    assert (acc >= 1).all()
+
+
+def test_dt_stays_inside_bounds(toy, rng_key):
+    state = _adaptive_state(toy, rng_key, batch=4, n_steps=16, rtol=0.1)
+    ctx_cfg = SamplerConfig(method=METHOD, n_steps=16, theta=0.5, rtol=0.1)
+    lo, hi = dt_bounds(ctx_cfg, state.times)
+    lo, hi = float(lo), float(hi)
+    for _ in range(16):
+        state = advance(state)
+        dt = np.asarray(state.ctrl.dt)
+        assert (dt >= lo - 1e-7).all() and (dt <= hi + 1e-7).all()
+
+
+def test_advance_many_parity_heterogeneous_dt(toy, rng_key):
+    """advance_many == advance^k bit-for-bit while slots carry different dt
+    vectors, budgets, and tolerances (the compacted serving path's bar)."""
+    def fresh():
+        st = _adaptive_state(toy, rng_key, batch=4, n_steps=12, rtol=0.1)
+        st = admit_slot(st, 1, jax.random.PRNGKey(5), n_steps=6, rtol=0.5)
+        st = admit_slot(st, 3, jax.random.PRNGKey(9), n_steps=20, rtol=0.02)
+        return st
+
+    adv = jax.jit(advance)
+    seq = fresh()
+    for _ in range(12):
+        seq = adv(seq)
+    many = fresh()
+    for k in (5, 4, 3):
+        many = advance_many(many, k)
+    for name in ("x", "step", "t"):
+        assert (np.asarray(getattr(seq, name))
+                == np.asarray(getattr(many, name))).all(), name
+    for leaf_a, leaf_b in zip(jax.tree_util.tree_leaves(seq.ctrl),
+                              jax.tree_util.tree_leaves(many.ctrl)):
+        assert (np.asarray(leaf_a) == np.asarray(leaf_b)).all()
+
+
+def test_admitted_slot_deterministic_given_key(toy, rng_key):
+    """A slot's adaptive trajectory depends only on its own key — re-admitting
+    the same key next to different neighbors replays identical bits."""
+    st_a = _adaptive_state(toy, rng_key, batch=3, rtol=0.1)
+    st_a = admit_slot(st_a, 1, jax.random.PRNGKey(42))
+    st_b = _adaptive_state(toy, jax.random.PRNGKey(777), batch=3, rtol=0.1)
+    st_b = admit_slot(st_b, 1, jax.random.PRNGKey(42))
+    for _ in range(16):
+        st_a = advance(st_a)
+        st_b = advance(st_b)
+    assert (np.asarray(st_a.x)[1] == np.asarray(st_b.x)[1]).all()
+    assert np.asarray(st_a.t)[1] == np.asarray(st_b.t)[1]
+
+
+# --------------------------------------------------------------------------- #
+# PI controller unit behavior
+# --------------------------------------------------------------------------- #
+
+
+def test_controller_grow_shrink_and_reject_never_grows():
+    sc = StepController()
+    cfg = SamplerConfig(method=METHOD, n_steps=8, rtol=0.1)
+    times = jnp.linspace(8.0, 0.0, 9)
+    ctrl = sc.init(cfg, times, 3)
+    dt0 = np.asarray(ctrl.dt).copy()
+    err = jnp.asarray([1e-6, 10.0, 10.0])       # tiny, huge, huge
+    accept = jnp.asarray([True, False, False])
+    active = jnp.asarray([True, True, False])   # row 2 inactive
+    out = sc.update(ctrl, err, accept, active, jnp.float32(0.01),
+                    jnp.float32(4.0))
+    dt = np.asarray(out.dt)
+    assert dt[0] > dt0[0]                        # tiny error grows
+    assert dt[0] <= dt0[0] * sc.grow_max + 1e-6  # but never past grow_max
+    assert dt[1] < dt0[1]                        # reject shrinks
+    assert dt[1] >= dt0[1] * sc.shrink_min - 1e-6
+    assert dt[2] == dt0[2]                       # inactive row untouched
+    assert np.asarray(out.accepted).tolist() == [1, 0, 0]
+    assert np.asarray(out.rejected).tolist() == [0, 1, 0]
+    # r_prev only moves on accepted active rows
+    assert np.asarray(out.r_prev)[1] == np.asarray(ctrl.r_prev)[1]
+
+
+def test_controller_reset_slot_restores_fresh_row():
+    sc = StepController()
+    cfg = SamplerConfig(method=METHOD, n_steps=8, rtol=0.1)
+    times = jnp.linspace(8.0, 0.0, 9)
+    ctrl = sc.init(cfg, times, 2)
+    dirty = dataclasses.replace(
+        ctrl, dt=ctrl.dt * 0.1, r_prev=ctrl.r_prev * 7,
+        accepted=ctrl.accepted + 5, rejected=ctrl.rejected + 3)
+    fresh = sc.reset_slot(dirty, 0, cfg, times, n_steps=8, rtol=0.4)
+    assert np.asarray(fresh.dt)[0] == np.asarray(ctrl.dt)[0]
+    assert np.asarray(fresh.r_prev)[0] == 1.0
+    assert np.asarray(fresh.rtol)[0] == np.float32(0.4)
+    assert np.asarray(fresh.accepted)[0] == 0
+    assert np.asarray(fresh.rejected)[0] == 0
+    # the neighbor keeps its dirty row
+    assert np.asarray(fresh.accepted)[1] == 5
+
+
+# --------------------------------------------------------------------------- #
+# Serving: dynamic NFE, per-request rtol, parity across executors
+# --------------------------------------------------------------------------- #
+
+CFG = ModelConfig(name="srv", family="dense", n_layers=2, d_model=64,
+                  n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                  vocab_size=23, dtype="float32")
+
+_PI = jnp.asarray(np.random.default_rng(3).dirichlet(
+    np.ones(CFG.vocab_size) * 2.0), jnp.float32)
+
+
+def _iid_masked_engine():
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    return MaskedEngine(
+        process=proc,
+        score_fn=lambda toks, t: jnp.broadcast_to(
+            _PI, toks.shape + (CFG.vocab_size,)))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)[0]
+
+
+def make_adaptive_engine(params, n_steps=12, rtol=0.5, max_batch=4,
+                         seq_len=16, **kw):
+    solver_eng = _iid_masked_engine()
+    return ServingEngine(params, CFG, solver_eng.process,
+                         SamplerConfig(method=METHOD, n_steps=n_steps,
+                                       theta=0.5, rtol=rtol),
+                         max_batch=max_batch, seq_len=seq_len,
+                         solver_engine=solver_eng, **kw)
+
+
+def test_engine_serves_adaptive_and_reports(params):
+    eng = make_adaptive_engine(params)
+    for i in range(6):
+        eng.submit(Request(request_id=i, seq_len=12, seed=i))
+    results = eng.run_all()
+    assert sorted(r.request_id for r in results) == list(range(6))
+    cap_nfe = 12 * 2
+    for r in results:
+        assert 0 < r.nfe <= cap_nfe
+        assert r.accepted_steps >= 1
+        assert r.accepted_steps + r.rejected_steps == r.nfe // 2
+    st = eng.stats()
+    assert st["adaptive"] is True
+    assert st["accepted_steps"] == sum(r.accepted_steps for r in results)
+    assert st["rejected_steps"] == sum(r.rejected_steps for r in results)
+    assert st["realized_nfe"] == sum(r.nfe for r in results)
+    assert st["mean_nfe_per_request"] == pytest.approx(
+        st["realized_nfe"] / 6)
+
+
+def test_adaptive_tokens_invariant_to_executor(params):
+    """Tokens (and realized NFE) are identical across compacted/dense pools
+    and scheduler strides — compaction and batching never touch the bits."""
+    variants = [dict(), dict(compact=False), dict(scheduler_stride=3),
+                dict(scheduler_stride="auto")]
+    outs = []
+    for kw in variants:
+        eng = make_adaptive_engine(params, **kw)
+        for i in range(7):
+            eng.submit(Request(request_id=i, seq_len=12, seed=i))
+        outs.append({r.request_id: r for r in eng.run_all()})
+    base = outs[0]
+    for other in outs[1:]:
+        for rid, r in base.items():
+            assert (r.tokens == other[rid].tokens).all()
+            assert r.nfe == other[rid].nfe
+            assert r.accepted_steps == other[rid].accepted_steps
+            assert r.rejected_steps == other[rid].rejected_steps
+
+
+def test_per_request_rtol_trades_nfe(params):
+    eng = make_adaptive_engine(params, n_steps=16, rtol=0.5)
+    eng.submit(Request(request_id=0, seq_len=12, seed=3, rtol=0.02))
+    eng.submit(Request(request_id=1, seq_len=12, seed=3, rtol=5.0))
+    tight, loose = sorted(eng.run_all(), key=lambda r: r.request_id)
+    assert loose.nfe <= tight.nfe
+    assert loose.accepted_steps <= tight.accepted_steps + tight.rejected_steps
+
+
+def test_rtol_validation(params):
+    eng = make_adaptive_engine(params)
+    with pytest.raises(ValueError, match="rtol must be > 0"):
+        eng.submit(Request(request_id=0, seq_len=12, rtol=-1.0))
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    fixed = ServingEngine(params, CFG, proc,
+                          SamplerConfig(method="theta_trapezoidal", n_steps=4,
+                                        theta=0.5),
+                          max_batch=2, seq_len=16)
+    with pytest.raises(ValueError, match="adaptive"):
+        fixed.submit(Request(request_id=0, seq_len=12, rtol=0.1))
+
+
+def test_remaining_work_tracks_controller(params):
+    """remaining_work consumes the controller's live dt estimate: it shrinks
+    tick over tick and hits zero when the pool drains."""
+    eng = make_adaptive_engine(params, max_batch=2)
+    eng.submit(Request(request_id=0, seq_len=12, seed=0))
+    eng.submit(Request(request_id=1, seq_len=12, seed=1))
+    assert eng.remaining_work() > 0
+    prev = None
+    while eng.busy:
+        eng.step()
+        cur = eng.remaining_work()
+        if prev is not None:
+            assert cur <= prev + 12  # new admissions may add budget
+        prev = cur
+    assert eng.remaining_work() == 0
+
+
+# --------------------------------------------------------------------------- #
+# Idle-stats guards (never-ticked engines, idle clusters)
+# --------------------------------------------------------------------------- #
+
+
+def test_stats_on_never_ticked_engine(params):
+    eng = make_adaptive_engine(params)
+    st = eng.stats()
+    assert st["requests_served"] == 0
+    assert st["occupancy"] == 0.0
+    assert st["reject_rate"] == 0.0
+    assert st["mean_nfe_per_request"] == 0.0
+    assert st["realized_nfe"] == 0
+    # fixed-step engines report the same clean zeros
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    fixed = ServingEngine(params, CFG, proc, SamplerConfig(n_steps=2),
+                          max_batch=2, seq_len=8)
+    st2 = fixed.stats()
+    assert st2["adaptive"] is False
+    assert st2["reject_rate"] == 0.0 and st2["mean_nfe_per_request"] == 0.0
+
+
+def test_cluster_stats_idle(params):
+    solver_eng = _iid_masked_engine()
+    cluster = ServingCluster(params, CFG, solver_eng.process,
+                             SamplerConfig(method=METHOD, n_steps=8,
+                                           theta=0.5, rtol=0.5),
+                             n_workers=2, max_batch=2, seq_len=16,
+                             solver_engine=solver_eng)
+    st = cluster.stats()
+    assert st.requests_served == 0
+    assert st.occupancy == 0.0
+    assert st.accepted_steps == 0 and st.rejected_steps == 0
+    assert st.mean_nfe_per_request == 0.0
+
+
+def test_cluster_aggregates_adaptive_stats(params):
+    solver_eng = _iid_masked_engine()
+    cluster = ServingCluster(params, CFG, solver_eng.process,
+                             SamplerConfig(method=METHOD, n_steps=12,
+                                           theta=0.5, rtol=0.5),
+                             n_workers=2, max_batch=2, seq_len=16,
+                             solver_engine=solver_eng)
+    for i in range(6):
+        cluster.submit(Request(request_id=i, seq_len=12, seed=i))
+    results = cluster.run_all()
+    st = cluster.stats()
+    assert st.accepted_steps == sum(r.accepted_steps for r in results)
+    assert st.rejected_steps == sum(r.rejected_steps for r in results)
+    assert st.mean_nfe_per_request == pytest.approx(
+        sum(r.nfe for r in results) / len(results))
+
+
+# --------------------------------------------------------------------------- #
+# Fabric respawn-in-place (reuse_id)
+# --------------------------------------------------------------------------- #
+
+
+def _loopback_fabric(params, n_workers=2, n_steps=4):
+    solver_eng = _iid_masked_engine()
+    sampler = SamplerConfig(method="theta_trapezoidal", n_steps=n_steps,
+                            theta=0.5)
+
+    def make_worker(wid):
+        eng = ServingEngine(params, CFG, solver_eng.process, sampler,
+                            max_batch=2, seq_len=12,
+                            solver_engine=solver_eng)
+        return PoolWorker(worker_id=wid, engine=eng)
+
+    tr = LoopbackTransport([make_worker(w) for w in range(n_workers)],
+                           spawn_worker=make_worker)
+    return FabricRouter(tr, heartbeat_timeout=2, default_n_steps=n_steps), tr
+
+
+def test_fabric_respawn_in_place_keeps_ledger_consistent(params):
+    """A dead worker rejoining under its original id: the ledger stays
+    balanced (no double-serve, no lost requests), the handle keeps its
+    lifetime accounting, and the fleet never grows a duplicate id."""
+    fab, tr = _loopback_fabric(params)
+    for i in range(6):
+        fab.submit(Request(request_id=i, seq_len=12, seed=i))
+    fab.kill_worker(1)
+    first = fab.run_all()
+    assert sorted(r.request_id for r in first) == list(range(6))
+    assert fab.deaths == 1 and not fab._ledger and not fab._queue
+    served_before = fab._handles[1].served
+
+    handle = fab.add_worker(reuse_id=1)
+    assert handle is fab._handles[1]
+    assert handle.alive and handle.died_tick is None
+    assert handle.served == served_before         # lifetime counter survives
+    assert len(fab.workers) == 2                  # no duplicate handle
+    assert sorted(h.worker_id for h in fab.workers) == [0, 1]
+    assert fab.joins == 1
+
+    for i in range(6, 12):
+        fab.submit(Request(request_id=i, seq_len=12, seed=i))
+    second = fab.run_all()
+    assert sorted(r.request_id for r in second) == list(range(6, 12))
+    assert not fab._ledger and not fab._queue
+    # the revived worker actually served traffic again
+    assert fab._handles[1].served > served_before
+    st = fab.stats()
+    per = {d["worker_id"]: d for d in st.per_worker}
+    assert set(per) == {0, 1}
+    assert per[1]["alive"] and per[1]["died_tick"] is None
+
+
+def test_fabric_respawn_token_parity(params):
+    """Tokens served across a kill + in-place rejoin are bit-identical to a
+    failure-free run: replay and resurrection never touch the PRNG stream."""
+    fab_ok, _ = _loopback_fabric(params)
+    for i in range(8):
+        fab_ok.submit(Request(request_id=i, seq_len=12, seed=i))
+    base = {r.request_id: r.tokens for r in fab_ok.run_all()}
+
+    fab, _ = _loopback_fabric(params)
+    for i in range(8):
+        fab.submit(Request(request_id=i, seq_len=12, seed=i))
+    fab.kill_worker(1, at_tick=1)
+    fab.schedule_join(at_tick=6, reuse_id=1)
+    got = {r.request_id: r.tokens for r in fab.run_all()}
+    assert set(got) == set(base)
+    for rid in base:
+        assert (base[rid] == got[rid]).all()
+    assert fab.deaths == 1 and fab.joins == 1
+
+
+def test_fabric_reuse_id_errors(params):
+    fab, tr = _loopback_fabric(params)
+    with pytest.raises(ValueError, match="still alive"):
+        fab.add_worker(reuse_id=0)
+    with pytest.raises(ValueError, match="never a worker"):
+        fab.add_worker(reuse_id=99)
+    with pytest.raises(ValueError, match="still alive"):
+        tr.spawn(reuse_id=0)
+    with pytest.raises(ValueError, match="never a worker"):
+        tr.spawn(reuse_id=99)
