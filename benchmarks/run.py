@@ -18,6 +18,7 @@ EXPERIMENTS.md-scale numbers.
   roofline           -> §Roofline table from the dry-run artifact
   serve_throughput   -> continuous batching / strided executor requests/sec
   serve_fabric       -> multi-host fabric failure recovery / req/s retention
+  serve_sla          -> SLA scheduling: EDF+preemption+shed vs fifo overload
   adaptive_stepping  -> adaptive theta pair: TV-vs-NFE + dynamic-NFE serving
 """
 from __future__ import annotations
@@ -137,6 +138,12 @@ def main() -> None:
         "serve_fabric": (lambda: serve_throughput.fabric_sweep(
             n_requests=32, seq_len=16)[0]) if args.full else (
             lambda: serve_throughput.fabric_sweep(
+                n_requests=24, seq_len=12)[0]),
+        # Own section for the same reason: the sla-smoke CI job runs
+        # `--only serve_sla` and merges without clobbering the other rows.
+        "serve_sla": (lambda: serve_throughput.sla_sweep(
+            n_requests=40, seq_len=16)[0]) if args.full else (
+            lambda: serve_throughput.sla_sweep(
                 n_requests=24, seq_len=12)[0]),
         # TV-vs-NFE parity gate + the dynamic-NFE serving gate (fixed mean
         # NFE / adaptive mean NFE >= 1.3x on a mixed-tolerance batch).

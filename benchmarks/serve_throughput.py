@@ -44,6 +44,13 @@ rejoin leg — every leg asserting zero lost requests and tokens bit-identical
 to single-pool serving (failure recovery replays original (seed, request_id)
 streams).
 
+``sla_sweep`` replays a priority-mix overload trace (2x saturation, 20% of
+requests high-priority with deadlines) through fifo vs EDF+preemption+shed:
+under fifo the high class head-of-line-blocks behind bulk work; EDF preempts
+RUNNING slots (bit-exact pause/resume) and sheds infeasible deadlines, gating
+on high-class p95 <= 0.5x fifo, deadline hit rate >= 0.95, zero silent
+losses, and tokens bit-identical to the unpreempted fifo run.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput --smoke
 """
 from __future__ import annotations
@@ -75,7 +82,11 @@ from repro.serve import (
     ServingFabric,
     make_score_fn,
 )
-from repro.serve.trace import poisson_trace, skewed_trace  # noqa: F401 - shared
+from repro.serve.trace import (  # noqa: F401 - shared with launchers
+    poisson_trace,
+    skewed_trace,
+    sla_trace,
+)
 
 
 def _model(vocab: int) -> ModelConfig:
@@ -737,6 +748,170 @@ def fabric_sweep(n_workers: int = 4, max_batch: int = 2,
     return rows, out
 
 
+def replay_sla(engine: ServingEngine, arrivals: np.ndarray,
+               budgets: np.ndarray, priorities: np.ndarray,
+               deadlines: np.ndarray, seq_len: int, clock_holder: list):
+    """Drive one SLA-configured engine over a priority/deadline trace on the
+    virtual step-unit clock.  ``clock_holder[0]`` is the engine's injected
+    clock, advanced one unit per executed solver step (matching
+    ``step_time_s=1.0``), so deadlines, latencies, and feasibility math all
+    live in deterministic step units.  Returns (completed, shed) results —
+    together they must cover the whole trace (zero silent losses)."""
+    pending = collections.deque(
+        (i, float(t), int(n), int(p), float(d))
+        for i, (t, n, p, d) in enumerate(
+            zip(arrivals, budgets, priorities, deadlines)))
+    completed, shed = [], []
+    while pending or engine.busy:
+        clock = clock_holder[0]
+        while pending and pending[0][1] <= clock:
+            i, _, n, p, d = pending.popleft()
+            res = engine.submit(Request(
+                request_id=i, seq_len=seq_len, seed=i, n_steps=n,
+                priority=p, deadline=None if np.isinf(d) else d))
+            if res is not None:
+                shed.append(res)
+        if not engine.busy:
+            if pending:
+                clock_holder[0] = max(clock, pending[0][1])
+            continue
+        steps_before = engine.global_steps
+        done = engine.step()
+        clock_holder[0] += float(engine.global_steps - steps_before)
+        for r in done:
+            (shed if r.status == "shed" else completed).append(r)
+    return completed, shed
+
+
+def sla_sweep(n_requests: int = 40, max_batch: int = 4, n_steps: int = 8,
+              seq_len: int = 16, vocab: int = 23,
+              method: str = "theta_trapezoidal", load: float = 2.0,
+              p_high: float = 0.2, high_deadline_factor: float = 2.0,
+              trace_seed: int = 5, max_p95_ratio: float = 0.5,
+              min_hit_rate: float = 0.95) -> tuple[list[str], dict]:
+    """SLA scheduling under overload: EDF + preemption + shedding vs fifo.
+
+    One :func:`repro.serve.trace.sla_trace` at ``load``x saturation —
+    ``p_high`` of the requests are a high-priority class carrying deadlines
+    of ``high_deadline_factor x`` their own service time, the rest are
+    deadline-free bulk work — replayed on the virtual step-unit clock
+    (``step_time_s=1.0``; everything is deterministic) through two engines:
+
+    * **fifo** — the pre-SLA baseline: arrival order, deadline-blind.  Under
+      a 2x-saturation backlog the high class queues behind the bulk work,
+      so its latency tracks the ever-growing queue.  This leg also serves
+      as the token ORACLE: it completes every request unpreempted;
+    * **edf_preempt_shed** — earliest-deadline-first admission, RUNNING
+      slots preempted for more urgent deadlines (paused to a snapshot,
+      resumed bit-identically), infeasible deadlines shed.
+
+    Gates (RuntimeError on failure, so ``benchmarks.run`` records it):
+
+    * high-class p95 latency under EDF <= ``max_p95_ratio`` x fifo's;
+    * high-class deadline hit rate >= ``min_hit_rate`` (shed highs count as
+      misses — degradation must be paid for, not hidden);
+    * zero silent losses: completed + shed == n_requests, in both legs;
+    * every completed EDF request's tokens bit-identical to the unpreempted
+      fifo run (preemption/resume and scheduling order can never change
+      samples);
+    * the EDF leg actually preempted (the machinery ran, the win is real).
+
+    Returns (csv rows, metrics dict).
+    """
+    cfg = _model(vocab)
+    process = masked_process(cfg.vocab_size, loglinear_schedule())
+    sampler = SamplerConfig(method=method, n_steps=n_steps, theta=0.4)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    solver_engine = MaskedEngine(process=process,
+                                 score_fn=make_score_fn(params, cfg))
+    arrivals, budgets, priorities, deadlines = sla_trace(
+        n_requests, max_batch, n_steps, p_high=p_high, load=load,
+        high_deadline_factor=high_deadline_factor, seed=trace_seed)
+    n_high = int(priorities.sum())
+    print(f"sla trace: {n_requests} requests over {max_batch} slots at "
+          f"{load:.1f}x load, {n_high} high-priority with deadline "
+          f"{high_deadline_factor:.1f}x service ({n_steps} steps/request)")
+
+    def serve(label, **sla_kw):
+        clock_holder = [0.0]
+        engine = ServingEngine(params, cfg, process, sampler,
+                               max_batch=max_batch, seq_len=seq_len,
+                               solver_engine=solver_engine,
+                               scheduler_stride=1, finalize_batch=1,
+                               clock=lambda: clock_holder[0],
+                               step_time_s=1.0, **sla_kw)
+        completed, shed = replay_sla(engine, arrivals, budgets, priorities,
+                                     deadlines, seq_len, clock_holder)
+        assert len(completed) + len(shed) == n_requests, \
+            (f"{label}: lost {n_requests - len(completed) - len(shed)} "
+             f"requests silently")
+        st = engine.stats()
+        high = [r for r in completed if r.priority == 1]
+        high_lat = [r.latency_s for r in high]
+        hi_hits = sum(1 for r in high if r.deadline_met)
+        hi_total = n_high  # shed highs count as misses
+        return {
+            "completed": completed, "shed": shed,
+            "high_p95": float(np.percentile(high_lat, 95)) if high_lat
+                        else float("inf"),
+            "high_p50": float(np.percentile(high_lat, 50)) if high_lat
+                        else float("inf"),
+            "hit_rate": hi_hits / hi_total if hi_total else 1.0,
+            "preemptions": st["preemptions"],
+            "shed_n": len(shed),
+            "stats": st,
+        }
+
+    base = serve("fifo", sched_policy="fifo")
+    assert not base["shed"] and len(base["completed"]) == n_requests, \
+        "fifo leg must complete everything (it is the token oracle)"
+    oracle = {r.request_id: r.tokens for r in base["completed"]}
+    edf = serve("edf_preempt_shed", sched_policy="edf", preempt=True,
+                shed=True)
+    for r in edf["completed"]:
+        assert (r.tokens == oracle[r.request_id]).all(), \
+            f"preemption changed request {r.request_id}'s tokens"
+    if edf["preemptions"] < 1:
+        raise RuntimeError("sla sweep: EDF leg never preempted — the "
+                           "preemption machinery did not run")
+
+    rows, out = [], {}
+    for label, m in (("fifo", base), ("edf_preempt_shed", edf)):
+        print(f"  {label:>16}: high p50 {m['high_p50']:.0f} / p95 "
+              f"{m['high_p95']:.0f} step-units, hit rate "
+              f"{m['hit_rate']:.2f}, {m['preemptions']} preemptions, "
+              f"{m['shed_n']} shed, tokens bit-identical")
+        rows.append(common.csv_row(
+            f"serve_throughput/sla/{label}", m["high_p95"],
+            f"high_p95_units={m['high_p95']:.0f} "
+            f"high_p50_units={m['high_p50']:.0f} "
+            f"high_hit_rate={m['hit_rate']:.2f} "
+            f"preemptions={m['preemptions']} shed={m['shed_n']}"))
+    out["p95_ratio"] = edf["high_p95"] / max(base["high_p95"], 1e-9)
+    out["hit_rate"] = edf["hit_rate"]
+    out["preemptions"] = edf["preemptions"]
+    out["shed"] = edf["shed_n"]
+    print(f"  edf high p95 = {out['p95_ratio']:.2f}x fifo "
+          f"(gate <= {max_p95_ratio}), hit rate {out['hit_rate']:.2f} "
+          f"(gate >= {min_hit_rate})")
+    rows.append(common.csv_row(
+        "serve_throughput/sla_gate", 0.0,
+        f"edf_vs_fifo_high_p95={out['p95_ratio']:.2f}x "
+        f"high_hit_rate={out['hit_rate']:.2f} "
+        f"preemptions={out['preemptions']} shed={out['shed']}"))
+    # RuntimeError (not SystemExit) so benchmarks.run records the failure and
+    # still writes the JSON mirror.
+    if out["p95_ratio"] > max_p95_ratio:
+        raise RuntimeError(
+            f"sla sweep: EDF high-class p95 is {out['p95_ratio']:.2f}x "
+            f"fifo's, gate <= {max_p95_ratio}x")
+    if out["hit_rate"] < min_hit_rate:
+        raise RuntimeError(
+            f"sla sweep: high-class deadline hit rate {out['hit_rate']:.2f} "
+            f"< {min_hit_rate}")
+    return rows, out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -754,7 +929,16 @@ def main() -> None:
                     help="skip the multi-host fabric sweep (failure recovery)")
     ap.add_argument("--fabric-only", action="store_true",
                     help="run ONLY the multi-host fabric sweep")
+    ap.add_argument("--skip-sla", action="store_true",
+                    help="skip the SLA scheduling sweep (EDF vs fifo)")
+    ap.add_argument("--sla-only", action="store_true",
+                    help="run ONLY the SLA scheduling sweep")
     args = ap.parse_args()
+    if args.sla_only:
+        kw = (dict(n_requests=24, seq_len=12) if args.smoke
+              else dict(n_requests=40, seq_len=16))
+        sla_sweep(method=args.method, **kw)
+        return
     if args.fabric_only:
         kw = (dict(n_requests=24, seq_len=12) if args.smoke
               else dict(n_requests=32, seq_len=16))
@@ -795,6 +979,13 @@ def main() -> None:
         fabric_kw = (dict(n_requests=24, seq_len=12) if args.smoke
                      else dict(n_requests=32, seq_len=16))
         fabric_sweep(method=args.method, **fabric_kw)
+    if not args.skip_sla:
+        # Gates (EDF high-class p95 <= 0.5x fifo; hit rate >= 0.95; token
+        # parity under preemption) live inside sla_sweep — the virtual clock
+        # makes every leg deterministic, so these are noise-free too.
+        sla_kw = (dict(n_requests=24, seq_len=12) if args.smoke
+                  else dict(n_requests=40, seq_len=16))
+        sla_sweep(method=args.method, **sla_kw)
     ratio, stride_ratio = speedups
     if ratio < 1.5:
         raise SystemExit(f"continuous batching speedup {ratio:.2f}x < 1.5x")

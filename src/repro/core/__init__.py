@@ -40,14 +40,17 @@ from .solvers import (
     dense_step,
     fhs_sample,
     finalize,
+    freeze_slot,
     get_solver,
     init_state,
     list_solvers,
     masked_step,
     register_solver,
+    restore_slot,
     rk2_coefficients,
     sample,
     slot_done,
+    snapshot_slot,
     sample_dense,
     sample_masked,
     sample_uniform,
@@ -70,6 +73,7 @@ __all__ = [
     # stepwise sampling API
     "SolverState", "init_state", "advance", "advance_many", "finalize",
     "admit_slot", "slot_done", "budget_supported",
+    "snapshot_slot", "restore_slot", "freeze_slot",
     # occupancy-aware slot pool
     "SlotPool", "default_bucket_ladder",
     # adaptive stepping

@@ -55,8 +55,11 @@ from .state import (
     advance_many,
     budget_supported,
     finalize,
+    freeze_slot,
     init_state,
+    restore_slot,
     slot_done,
+    snapshot_slot,
 )
 from .pool import SlotPool, default_bucket_ladder
 from .schemes import (
@@ -102,6 +105,7 @@ __all__ = [
     # stepwise API
     "SolverState", "init_state", "advance", "advance_many", "finalize",
     "admit_slot", "slot_done", "budget_supported",
+    "snapshot_slot", "restore_slot", "freeze_slot",
     # slot pool (bucketed serving substrate)
     "SlotPool", "default_bucket_ladder",
     # solver classes

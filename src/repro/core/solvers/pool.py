@@ -42,11 +42,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from .state import (
+    PER_SLOT_FIELDS,
     SolverState,
     admit_slot,
     advance_many,
+    freeze_slot,
+    restore_slot,
     run_context,
     slot_done,
+    snapshot_slot,
 )
 
 Array = jnp.ndarray
@@ -55,7 +59,7 @@ Array = jnp.ndarray
 #: times/aux/ctx — is shared across the pool).  ``ctrl`` (adaptive-stepping
 #: controller rows) is also per-slot when present; the gather/scatter below
 #: handle it tree-generically since its presence is static per state.
-_PER_SLOT_FIELDS = ("x", "step", "t", "rng", "target")
+_PER_SLOT_FIELDS = PER_SLOT_FIELDS
 
 
 def default_bucket_ladder(capacity: int) -> Tuple[int, ...]:
@@ -217,6 +221,21 @@ class SlotPool:
         """Restart ``slot`` from t = t_max under its own key (admit_slot)."""
         self.state = admit_slot(self.state, slot, key, n_steps=n_steps,
                                 rtol=rtol)
+
+    def park(self, slot: int) -> dict:
+        """Evict ``slot``'s in-flight trajectory to a snapshot and freeze the
+        slot (its row becomes inert padding, like a drained slot), freeing it
+        for another request.  The snapshot carries the slot's keys, step
+        index, time, budget, and controller rows — :meth:`restore` (into any
+        slot) resumes the trajectory bit-identically."""
+        snap = snapshot_slot(self.state, slot)
+        self.state = freeze_slot(self.state, slot)
+        return snap
+
+    def restore(self, slot: int, snap: dict) -> None:
+        """Resume a :meth:`park` snapshot in ``slot`` (need not be the slot it
+        was parked from: trajectories are slot-invariant by construction)."""
+        self.state = restore_slot(self.state, slot, snap)
 
     def slot_done(self) -> np.ndarray:
         """[capacity] bool — slots whose step budget is consumed (fetches)."""

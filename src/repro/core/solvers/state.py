@@ -387,6 +387,60 @@ def admit_slot(state: SolverState, slot: int, key: jax.Array,
     return dataclasses.replace(state, **repl)
 
 
+#: the SolverState leaves carrying one row per slot (everything else —
+#: times/aux/ctx — is shared across the pool).  ``ctrl`` rows are also
+#: per-slot when present; snapshot/restore and the SlotPool's gather/scatter
+#: handle them tree-generically since ctrl's presence is static per state.
+PER_SLOT_FIELDS = ("x", "step", "t", "rng", "target")
+
+
+def snapshot_slot(state: SolverState, slot: int) -> dict:
+    """Capture slot ``slot``'s per-slot rows as a detached snapshot.
+
+    The snapshot is everything the slot's future trajectory depends on: its
+    canvas row, step index, time, loop key, step budget, and (adaptive
+    solvers) its controller rows.  Because ``advance`` folds each slot's key
+    with its *own* step index and engines are row-independent, restoring the
+    snapshot into ANY slot of ANY pool built over the same run context
+    continues the trajectory bit-identically — the substrate of bit-exact
+    preemption in the serving engine.
+    """
+    if not state.per_slot:
+        raise ValueError("snapshot_slot requires a per-slot state")
+    snap = {f: getattr(state, f)[slot] for f in PER_SLOT_FIELDS}
+    if state.ctrl is not None:
+        snap["ctrl"] = jax.tree_util.tree_map(lambda a: a[slot], state.ctrl)
+    return snap
+
+
+def freeze_slot(state: SolverState, slot: int) -> SolverState:
+    """Freeze slot ``slot`` in place (``step := target``) so its row rides as
+    inert padding — ``advance`` treats it exactly like a drained slot — until
+    the slot is re-admitted or restored.  Callers snapshot first: freezing
+    does not preserve the step index."""
+    if not state.per_slot:
+        raise ValueError("freeze_slot requires a per-slot state")
+    return dataclasses.replace(
+        state, step=state.step.at[slot].set(state.target[slot]))
+
+
+def restore_slot(state: SolverState, slot: int, snap: dict) -> SolverState:
+    """Write a :func:`snapshot_slot` capture back into slot ``slot``.
+
+    The restored rows are the snapshot's bits verbatim (keys, step index,
+    time, budget, controller rows), so the resumed trajectory is
+    bit-identical to one that was never paused — regardless of which slot it
+    resumes in or who its neighbors are."""
+    if not state.per_slot:
+        raise ValueError("restore_slot requires a per-slot state")
+    repl = {f: getattr(state, f).at[slot].set(snap[f])
+            for f in PER_SLOT_FIELDS}
+    if state.ctrl is not None:
+        repl["ctrl"] = jax.tree_util.tree_map(
+            lambda a, b: a.at[slot].set(b), state.ctrl, snap["ctrl"])
+    return dataclasses.replace(state, **repl)
+
+
 def budget_supported(state: SolverState, n_steps: int) -> bool:
     """Whether ``admit_slot(..., n_steps=n_steps)`` would be accepted.
 

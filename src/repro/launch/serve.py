@@ -46,6 +46,7 @@ from repro.serve import (
     ServingEngine,
     ServingFabric,
     list_policies,
+    list_sched_policies,
     poisson_arrivals,
 )
 
@@ -59,16 +60,21 @@ def drive(target, requests, arrivals=None):
     work, and sleeps through genuinely idle gaps (open loop).
     """
     if arrivals is None:
+        results = []
         for req in requests:
-            target.submit(req)
-        return target.run_all()
+            res = target.submit(req)
+            if res is not None:  # shed at submit (infeasible/overload)
+                results.append(res)
+        return results + target.run_all()
     pending = collections.deque(zip(requests, arrivals))
     results = []
     t0 = time.monotonic()
     while pending or target.busy:
         now = time.monotonic() - t0
         while pending and pending[0][1] <= now:
-            target.submit(pending.popleft()[0])
+            res = target.submit(pending.popleft()[0])
+            if res is not None:
+                results.append(res)
         if not target.busy:
             if pending:
                 time.sleep(max(0.0, pending[0][1]
@@ -144,6 +150,28 @@ def main() -> None:
                     metavar="ID@TICK",
                     help="fabric fault injection: crash worker ID at fabric "
                          "tick TICK (repeatable, e.g. --kill-worker 0@10)")
+    ap.add_argument("--sched-policy", default="fifo",
+                    choices=list_sched_policies(),
+                    help="SLA admission order within each engine: 'fifo' is "
+                         "the pre-SLA baseline; 'edf' serves the earliest "
+                         "deadline first; 'strict_priority' serves higher "
+                         "Request.priority first (FIFO within a class)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="let the sched policy evict RUNNING slots for more "
+                         "urgent waiters (trajectories pause to a snapshot "
+                         "and resume bit-identically)")
+    ap.add_argument("--shed", action="store_true",
+                    help="graceful overload degradation: drop requests whose "
+                         "deadline provably cannot be met (surfaced as "
+                         "Result(status='shed'), never silently lost)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline in milliseconds after submit "
+                         "(0 = no deadline); with --priority-mix only the "
+                         "high-priority class gets the deadline")
+    ap.add_argument("--priority-mix", type=float, default=0.0,
+                    help="fraction of requests marked high priority "
+                         "(priority 1, carrying --deadline-ms); the rest are "
+                         "priority 0 bulk work")
     args = ap.parse_args()
     if args.kill_worker and args.fabric == "off":
         ap.error("--kill-worker requires --fabric loopback|process")
@@ -155,10 +183,15 @@ def main() -> None:
     sampler = SamplerConfig.for_nfe(args.method, args.nfe, theta=args.theta)
     params, _ = init_params(jax.random.PRNGKey(args.seed), cfg)
 
+    if not 0.0 <= args.priority_mix <= 1.0:
+        ap.error("--priority-mix must be in [0, 1]")
+
     engine_kw = dict(max_batch=args.max_batch, seq_len=args.seq_len,
                      scheduler_stride=stride, compact=not args.dense_pool,
                      finalize_batch=args.finalize_batch,
-                     continuous=not args.run_to_completion)
+                     continuous=not args.run_to_completion,
+                     sched_policy=args.sched_policy, preempt=args.preempt,
+                     shed=args.shed)
     mesh = make_host_mesh()
     with mesh:
         if args.fabric != "off":
@@ -182,9 +215,21 @@ def main() -> None:
         else:
             target = ServingEngine(params, cfg, process, sampler,
                                    **engine_kw)
-        requests = [Request(request_id=i, seq_len=args.seq_len,
-                            seed=args.seed + i, rtol=args.rtol)
-                    for i in range(args.requests)]
+        deadline = (args.deadline_ms / 1000.0 if args.deadline_ms > 0
+                    else None)
+        rng = np.random.default_rng(args.trace_seed)
+        high = rng.uniform(size=args.requests) < args.priority_mix
+        requests = []
+        for i in range(args.requests):
+            prio = 1 if high[i] else 0
+            # With a priority mix only the high class carries the deadline;
+            # without one, every request gets it.
+            dl = deadline if (deadline is not None
+                              and (prio == 1 or args.priority_mix == 0.0)) \
+                else None
+            requests.append(Request(request_id=i, seq_len=args.seq_len,
+                                    seed=args.seed + i, rtol=args.rtol,
+                                    priority=prio, deadline=dl))
         arrivals = (poisson_arrivals(args.requests, 1.0 / args.arrival_rate,
                                      seed=args.trace_seed)
                     if args.arrival_rate > 0 else None)
@@ -195,6 +240,12 @@ def main() -> None:
             if args.fabric != "off":
                 target.close()
     dt = time.monotonic() - t0
+    shed = [r for r in results if r.status == "shed"]
+    results = [r for r in results if r.status != "shed"]
+    if not results:
+        print(f"served 0 requests in {dt:.2f}s — all {len(shed)} shed "
+              f"({collections.Counter(r.reason for r in shed)})")
+        return
     toks = np.stack([r.tokens for r in results])
 
     # Latency here is end-to-end (submit -> finish), queue delay included.
@@ -211,6 +262,16 @@ def main() -> None:
           f"p95 {np.percentile(lat, 95):.2f}s  "
           f"(queue delay p50 {np.percentile(qd, 50):.2f}s  "
           f"p95 {np.percentile(qd, 95):.2f}s)")
+    if (args.sched_policy != "fifo" or args.preempt or args.shed
+            or args.deadline_ms > 0 or shed):
+        with_dl = [r for r in results if r.deadline_met is not None]
+        hit = sum(1 for r in with_dl if r.deadline_met)
+        preempted = sum(r.preemptions for r in results)
+        print(f"sla[{args.sched_policy}]: {len(shed)} shed"
+              + (f" ({collections.Counter(r.reason for r in shed)})"
+                 if shed else "")
+              + f", {preempted} preemptions, deadline hit rate "
+              + (f"{hit}/{len(with_dl)}" if with_dl else "n/a"))
     if args.fabric != "off":
         st = target.stats()
         print(f"fabric[{args.fabric}]: {st.n_workers}/{st.n_spawned} workers "

@@ -10,21 +10,36 @@ from .cluster import (
 )
 from .engine import (
     FINISHED,
+    PAUSED,
     QUEUED,
     RUNNING,
+    SHED,
     Request,
     Result,
     ServingEngine,
     ar_generate,
     make_score_fn,
+    make_shed_result,
 )
 from .fabric import FabricRouter, FabricStats, ServingFabric, WorkerHandle
+from .sla import (
+    EdfSchedPolicy,
+    FifoSchedPolicy,
+    SchedPolicy,
+    SlaView,
+    StrictPrioritySchedPolicy,
+    get_sched_policy,
+    list_sched_policies,
+    register_sched_policy,
+    resolve_sched_policy,
+)
 from .trace import (
     FailureEvent,
     failure_schedule,
     poisson_arrivals,
     poisson_trace,
     skewed_trace,
+    sla_trace,
 )
 from .transport import (
     Heartbeat,
@@ -36,10 +51,15 @@ from .transport import (
 )
 
 __all__ = ["Request", "Result", "ServingEngine", "ar_generate", "make_score_fn",
-           "QUEUED", "RUNNING", "FINISHED",
+           "make_shed_result",
+           "QUEUED", "RUNNING", "PAUSED", "FINISHED", "SHED",
            "ClusterStats", "PoolWorker", "Router", "RouterPolicy",
            "ServingCluster", "get_policy", "list_policies", "register_policy",
-           "poisson_arrivals", "poisson_trace", "skewed_trace",
+           "SchedPolicy", "SlaView", "FifoSchedPolicy", "EdfSchedPolicy",
+           "StrictPrioritySchedPolicy", "get_sched_policy",
+           "list_sched_policies", "register_sched_policy",
+           "resolve_sched_policy",
+           "poisson_arrivals", "poisson_trace", "skewed_trace", "sla_trace",
            "FailureEvent", "failure_schedule",
            "Transport", "TickReport", "Heartbeat", "LoopbackTransport",
            "ProcessTransport", "HostEngineSpec",

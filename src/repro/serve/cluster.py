@@ -36,7 +36,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 from typing import (
     Any,
     Callable,
@@ -57,7 +56,14 @@ from repro.core import DiffusionProcess, MaskedEngine, SamplerConfig
 from repro.models.config import ModelConfig
 from repro.sharding.rules import data_shard_devices
 
-from .engine import QUEUED, Request, Result, ServingEngine, make_score_fn
+from .engine import (
+    QUEUED,
+    Request,
+    Result,
+    ServingEngine,
+    make_score_fn,
+    make_shed_result,
+)
 
 Params = Any
 
@@ -170,8 +176,11 @@ class PoolWorker:
 
     @property
     def backlog(self) -> int:
-        """Requests on this worker: queued locally + occupying a slot."""
-        return self.engine.queued + len(self.engine.active_slots)
+        """Requests on this worker: queued locally, occupying a slot, or
+        paused awaiting re-admission (a preempted request is still this
+        worker's work — its snapshot lives on this shard)."""
+        return (self.engine.queued + len(self.engine.active_slots)
+                + self.engine.paused)
 
     @property
     def remaining_work(self) -> int:
@@ -231,6 +240,19 @@ class ClusterStats:
     #: submit -> finish percentiles over finished requests (seconds).
     latency_p50_s: float
     latency_p95_s: float
+    #: SLA accounting: requests dropped by admission control (router-level
+    #: infeasibility + worker-level overload/deadline sheds), slots evicted
+    #: for more urgent work, and the deadline scoreboard across the fleet.
+    shed_requests: int
+    preemptions: int
+    deadline_hits: int
+    deadline_misses: int
+    #: hits / (hits + misses); 1.0 when no request carried a deadline.
+    deadline_hit_rate: float
+    #: per-priority-class breakdown: ``{priority: {"served", "shed",
+    #: "deadline_hits", "deadline_misses", "deadline_hit_rate",
+    #: "latency_p50_s", "latency_p95_s"}}`` — the SLA gate's primary view.
+    per_class: Dict[int, dict]
     #: per-worker detail: worker_id, served, backlog + the engine's stats().
     per_worker: List[dict]
 
@@ -270,24 +292,65 @@ class Router:
         self.dispatched = 0
         self.rebalanced = 0
         self.requests_served = 0
+        self.shed_requests = 0
         self._queue_delays: List[float] = []
         self._latencies: List[float] = []
+        self._class_latencies: Dict[int, List[float]] = {}
+        self._class_counts: Dict[int, dict] = {}
+
+    def _class(self, priority: int) -> dict:
+        self._class_latencies.setdefault(priority, [])
+        return self._class_counts.setdefault(
+            priority, {"served": 0, "shed": 0, "deadline_hits": 0,
+                       "deadline_misses": 0})
+
+    def _account(self, res: Result) -> None:
+        """Fold one finished-or-shed result into cluster SLA accounting."""
+        cls = self._class(res.priority)
+        if res.status == "shed":
+            self.shed_requests += 1
+            cls["shed"] += 1
+            if res.deadline_met is False:
+                cls["deadline_misses"] += 1
+            return
+        self.requests_served += 1
+        cls["served"] += 1
+        self._queue_delays.append(res.queue_delay_s)
+        self._latencies.append(res.latency_s)
+        self._class_latencies[res.priority].append(res.latency_s)
+        if res.deadline_met is True:
+            cls["deadline_hits"] += 1
+        elif res.deadline_met is False:
+            cls["deadline_misses"] += 1
 
     # ------------------------------------------------------------- lifecycle
-    def submit(self, req: Request, submit_t: Optional[float] = None) -> None:
+    def submit(self, req: Request,
+               submit_t: Optional[float] = None) -> Optional[Result]:
         """Stamp ``req`` into the global queue (dispatch happens at the next
         tick boundary, when the policy sees current worker state).  Requests
         no worker could serve are rejected HERE, like the single-engine
         submit — never mid-dispatch after they already left the queue (the
-        fleet is homogeneous, so any worker's checks stand for all).
+        fleet is homogeneous, so any worker's checks stand for all).  A
+        deadline no idle worker could meet is shed here too, returning the
+        ``Result(status="shed", reason="infeasible")`` immediately; queued
+        requests return None.
 
         ``submit_t`` mirrors :meth:`ServingEngine.submit`: replayed or
         re-routed requests keep their original stamp, so queue-delay and
         latency accounting span the ORIGINAL submit even after recovery."""
-        self.workers[0].engine.validate(req)
+        w0 = self.workers[0].engine
+        w0.validate(req)
+        now = w0._clock()
+        if submit_t is None:
+            submit_t = now
+        reason = w0.infeasible_reason(req)
+        if reason is not None:
+            res = make_shed_result(req, submit_t, reason, now)
+            self._account(res)
+            return res
         req.status = QUEUED
-        self._queue.append((req, time.monotonic() if submit_t is None
-                            else submit_t))
+        self._queue.append((req, submit_t))
+        return None
 
     @property
     def queued(self) -> int:
@@ -299,20 +362,31 @@ class Router:
         return bool(self._queue) or any(w.busy for w in self.workers)
 
     # ------------------------------------------------------------ scheduling
-    def _dispatch(self) -> None:
+    def _dispatch(self) -> List[Result]:
         """Drain the global queue onto workers under the policy (tick
-        boundary: the policy sees the fleet as it is right now)."""
+        boundary: the policy sees the fleet as it is right now).  Returns
+        any results shed by worker-level admission control (overload)."""
+        shed: List[Result] = []
         while self._queue:
             req, submit_t = self._queue.popleft()
             worker = self.policy.select(self.workers, req)
-            worker.engine.submit(req, submit_t=submit_t)
+            res = worker.engine.submit(req, submit_t=submit_t)
+            if res is not None:
+                self._account(res)
+                shed.append(res)
+                continue
             self.dispatched += 1
+        return shed
 
     def _rebalance(self) -> int:
-        """Even out worker queues: move QUEUED requests (newest first) from
-        the most loaded worker to the least loaded until backlogs are within
-        one of each other.  RUNNING slots never move, so this cannot change
-        any request's tokens — only its queue delay."""
+        """Even out worker queues: move QUEUED requests from the most loaded
+        worker to the least loaded until backlogs are within one of each
+        other.  Under a fifo engine the donor gives up its newest arrivals
+        (back of the queue); under an SLA policy it gives up the requests
+        its scheduler ranks LAST (``least_urgent=True``), so an imminent
+        deadline never loses its head-of-line position by being moved.
+        RUNNING slots never move, so this cannot change any request's
+        tokens — only its queue delay."""
         moved = 0
         while True:
             donors = [w for w in self.workers if w.engine.queued > 0]
@@ -322,8 +396,12 @@ class Router:
             dst = min(self.workers, key=lambda w: (w.backlog, w.worker_id))
             if src is dst or src.backlog - dst.backlog < 2:
                 break
-            ((req, submit_t),) = src.engine.steal_queued(1)
-            dst.engine.submit(req, submit_t=submit_t)
+            ((req, submit_t),) = src.engine.steal_queued(1, least_urgent=True)
+            res = dst.engine.submit(req, submit_t=submit_t)
+            if res is not None:
+                # Destination shed it (bounded queue filled between the
+                # balance decision and the hand-off) — account, don't lose.
+                self._account(res)
             moved += 1
         self.rebalanced += moved
         return moved
@@ -331,18 +409,20 @@ class Router:
     def step(self) -> List[Result]:
         """One cluster tick: dispatch, (optionally) rebalance, tick every
         worker.  Returns the requests that finished this tick, stamped with
-        the worker that served them (``Result.worker``)."""
-        self._dispatch()
+        the worker that served them (``Result.worker``), plus any results
+        admission control shed (``status="shed"``, no worker stamp)."""
+        out: List[Result] = self._dispatch()
         if self.rebalance:
             self._rebalance()
-        out: List[Result] = []
         for worker in self.workers:
             for res in worker.tick():
+                if res.status == "shed":
+                    self._account(res)
+                    out.append(res)
+                    continue
                 res.worker = worker.worker_id
                 worker.served += 1
-                self.requests_served += 1
-                self._queue_delays.append(res.queue_delay_s)
-                self._latencies.append(res.latency_s)
+                self._account(res)
                 out.append(res)
         return out
 
@@ -358,7 +438,7 @@ class Router:
     def stats(self) -> ClusterStats:
         per_worker = []
         paid = active = fin_rows = 0
-        accepted = rejected = realized_nfe = served_w = 0
+        accepted = rejected = realized_nfe = served_w = preemptions = 0
         for w in self.workers:
             st = w.engine.stats()
             paid += st["paid_slot_steps"]
@@ -368,10 +448,24 @@ class Router:
             rejected += st.get("rejected_steps", 0)
             realized_nfe += st.get("realized_nfe", 0)
             served_w += st["requests_served"]
+            preemptions += st.get("preemptions", 0)
             per_worker.append(dict(worker_id=w.worker_id, served=w.served,
                                    backlog=w.backlog,
                                    device=str(w.device) if w.device else None,
                                    **st))
+        hits = sum(c["deadline_hits"] for c in self._class_counts.values())
+        misses = sum(c["deadline_misses"]
+                     for c in self._class_counts.values())
+        per_class = {}
+        for prio in sorted(self._class_counts):
+            cls = dict(self._class_counts[prio])
+            lats = self._class_latencies.get(prio, [])
+            dl = cls["deadline_hits"] + cls["deadline_misses"]
+            cls["deadline_hit_rate"] = (cls["deadline_hits"] / dl) if dl \
+                else 1.0
+            cls["latency_p50_s"] = _pct(lats, 50)
+            cls["latency_p95_s"] = _pct(lats, 95)
+            per_class[prio] = cls
         return ClusterStats(
             n_workers=len(self.workers),
             policy=self.policy.name,
@@ -391,6 +485,13 @@ class Router:
             queue_delay_p95_s=_pct(self._queue_delays, 95),
             latency_p50_s=_pct(self._latencies, 50),
             latency_p95_s=_pct(self._latencies, 95),
+            shed_requests=self.shed_requests,
+            preemptions=preemptions,
+            deadline_hits=hits,
+            deadline_misses=misses,
+            deadline_hit_rate=(hits / (hits + misses)) if (hits + misses)
+                              else 1.0,
+            per_class=per_class,
             per_worker=per_worker,
         )
 

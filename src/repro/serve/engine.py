@@ -45,6 +45,30 @@ baseline; ``benchmarks/serve_throughput.py`` measures the throughput gap.
 Whole-trajectory solvers (``fhs``) cannot be stepped and always use a
 monolithic whole-batch run.  The engine also exposes an AR decode path
 (`ar_generate`) used by the decode-shape dry-runs.
+
+**SLA-aware serving** extends the lifecycle to
+``QUEUED -> RUNNING -> PAUSED -> FINISHED / SHED``:
+
+* requests carry an optional relative ``deadline`` and an integer
+  ``priority``; a registry-backed :mod:`~repro.serve.sla` policy
+  (``sched_policy="fifo"|"edf"|"strict_priority"``) orders admission at every
+  step boundary — fifo reproduces the pre-SLA engine exactly;
+* ``preempt=True`` lets an urgent waiter **evict** the least urgent RUNNING
+  slot: the victim's trajectory is parked as a ``SolverState`` snapshot
+  (keys, step index, time, budget, controller rows) in the paused-store and
+  re-admitted later with identical bits, so a resumed request's tokens are
+  **bit-identical** to a never-preempted run (``tests/test_serve.py`` asserts
+  this per solver x engine x stride);
+* ``shed=True`` adds graceful overload degradation: queued/paused work whose
+  deadline is already missed — or provably unreachable given the live
+  ``_slot_remaining`` NFE estimates and the engine's per-step time — is shed
+  as a first-class ``Result(status="shed")`` instead of serving dead work
+  (and ``max_queue`` bounds the queue depth at submit, shedding the
+  overflow).  Requests whose deadline is infeasible even on an *idle* engine
+  are shed at ``submit()`` with ``reason="infeasible"``;
+* ``clock`` / ``step_time_s`` make deadline accounting testable: benchmarks
+  inject a virtual step-unit clock and a unit step time, production uses the
+  wall clock and a per-step EWMA measured on the fly.
 """
 from __future__ import annotations
 
@@ -71,12 +95,20 @@ from repro.core import (
 from repro.models import decode_step, denoise_logits, init_decode_state
 from repro.models.config import ModelConfig
 
+from .sla import SchedPolicy, SlaView, resolve_sched_policy
+
 Params = Any
 
 #: request lifecycle states
 QUEUED = "QUEUED"
 RUNNING = "RUNNING"
+#: preempted mid-trajectory, parked as a SolverState snapshot awaiting
+#: re-admission (resumes bit-identically).
+PAUSED = "PAUSED"
 FINISHED = "FINISHED"
+#: rejected by admission control (overload / missed or infeasible deadline);
+#: surfaced as a first-class ``Result(status="shed")``, never a silent drop.
+SHED = "SHED"
 
 #: stream_cb(request_id, step_index, tokens_row) — called after every
 #: scheduler tick for each streaming RUNNING request.  Tokens are fetched
@@ -103,6 +135,13 @@ class Request:
     #: per-request streaming callback; the engine-wide ``stream_cb`` (if any)
     #: applies to requests that don't set one.
     stream_cb: Optional[StreamFn] = None
+    #: relative SLA deadline in the engine clock's units (seconds on the
+    #: default wall clock): the request should FINISH within ``deadline`` of
+    #: its submit stamp.  None = no deadline (infinitely patient under edf).
+    deadline: Optional[float] = None
+    #: scheduling priority class — higher wins under ``strict_priority``
+    #: (and feeds per-class latency/deadline stats everywhere).
+    priority: int = 0
     #: lifecycle state, maintained by the engine.
     status: str = QUEUED
 
@@ -127,6 +166,21 @@ class Result:
     #: controller recorded (accepted + rejected == steps; zero otherwise).
     accepted_steps: int = 0
     rejected_steps: int = 0
+    #: ``"ok"`` for a served request, ``"shed"`` when admission control
+    #: rejected it (``tokens`` is empty then) — shed work always surfaces as
+    #: a Result, never a silent drop.
+    status: str = "ok"
+    #: why a shed request was shed: ``"infeasible"`` (deadline unreachable on
+    #: an idle engine, caught at submit), ``"overload"`` (queue-depth bound),
+    #: or ``"deadline"`` (missed / unreachable by the time it could run).
+    reason: Optional[str] = None
+    #: the request's priority class (per-class SLA aggregation rides on this).
+    priority: int = 0
+    #: True/False when the request carried a deadline (met it or not; shed
+    #: deadline-carrying requests count as False); None for no deadline.
+    deadline_met: Optional[bool] = None
+    #: times this request's trajectory was preempted (paused + resumed).
+    preemptions: int = 0
 
 
 #: a drained request waiting for its batched finalize forward: the slot is
@@ -140,6 +194,47 @@ class _PendingFinish:
     steps: int
     accepted: int = 0
     rejected: int = 0
+    preemptions: int = 0
+
+
+#: a preempted trajectory parked in the engine's paused-store: the pool-row
+#: snapshot (keys/step/time/budget/ctrl — everything the remaining trajectory
+#: depends on) plus the host-side accounting needed to resume the slot's
+#: mirrors exactly where they left off.  Paused entries never migrate between
+#: workers: the snapshot lives on this worker's device.
+@dataclasses.dataclass
+class _Paused:
+    req: Request
+    submit_t: float
+    #: FIRST admission stamp — queue delay keeps meaning submit -> first slot.
+    admit_t: float
+    snap: dict
+    steps: int
+    preemptions: int
+    #: adaptive host mirrors at park time (zeros for fixed-step solvers).
+    t: float = 0.0
+    dt: float = 0.0
+    accepted: int = 0
+    rejected: int = 0
+
+
+def make_shed_result(req: Request, submit_t: float, reason: str,
+                     now: float) -> Result:
+    """A first-class shed: empty tokens, honest wait accounting, the reason
+    on the record.  Routers use this for submit-time sheds; the engine's
+    ``_make_shed`` wraps it with its own counters."""
+    req.status = SHED
+    return Result(
+        request_id=req.request_id,
+        tokens=np.empty((0,), np.int32),
+        nfe=0,
+        latency_s=now - submit_t,
+        queue_delay_s=now - submit_t,
+        status="shed",
+        reason=reason,
+        priority=req.priority,
+        deadline_met=False if req.deadline is not None else None,
+    )
 
 
 def make_score_fn(params: Params, cfg: ModelConfig,
@@ -168,7 +263,13 @@ class ServingEngine:
                  finalize_batch: int = 1,
                  auto_stride_max: int = 8,
                  bucket_ladder: Optional[Sequence[int]] = None,
-                 solver_engine=None):
+                 solver_engine=None,
+                 sched_policy: Union[str, SchedPolicy] = "fifo",
+                 preempt: bool = False,
+                 shed: bool = False,
+                 max_queue: Optional[int] = None,
+                 step_time_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
         if scheduler_stride == "auto":
             if auto_stride_max < 1:
                 raise ValueError(f"auto_stride_max must be >= 1, got "
@@ -197,8 +298,24 @@ class ServingEngine:
         self._queue: Deque[Tuple[Request, float]] = collections.deque()
         self._slot_req: List[Optional[Request]] = [None] * max_batch
         self._slot_times: List[Tuple[float, float]] = [(0.0, 0.0)] * max_batch
+        self._slot_preempt: List[int] = [0] * max_batch
         self._pending: List[_PendingFinish] = []
         self._pending_age = 0
+        # SLA layer: admission-order policy, preemption, shedding, deadlines.
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 or None, got {max_queue}")
+        if step_time_s is not None and step_time_s <= 0:
+            raise ValueError(f"step_time_s must be > 0, got {step_time_s}")
+        self._sched = resolve_sched_policy(sched_policy)
+        self._preempt = bool(preempt)
+        self._shed = bool(shed)
+        self._max_queue = max_queue
+        self.step_time_s = step_time_s
+        self._clock = clock
+        #: EWMA of measured wall seconds per solver step (feeds deadline
+        #: feasibility when no explicit step_time_s is given).
+        self._step_ewma: Optional[float] = None
+        self._paused: List[_Paused] = []
         self.reset_stats()
 
         if solver_engine is None:
@@ -208,6 +325,14 @@ class ServingEngine:
         self._solver = get_solver(sampler.method)()
         self._stepwise = self._solver.supports_stepwise
         self._adaptive = bool(getattr(self._solver, "adaptive", False))
+        if self._preempt and not self._stepwise:
+            raise ValueError(
+                f"solver {sampler.method!r} integrates whole trajectories; "
+                "preemption requires a stepwise solver (there is no step "
+                "boundary to park a monolithic run at)")
+        #: steps even a maximally lucky trajectory must run (deadline
+        #: feasibility floor); refined below for adaptive solvers.
+        self._min_steps_floor = 1
         if self._stepwise:
             # Per-slot pool state; all slots start drained (step == n_steps,
             # frozen by advance) until a request is admitted into them.
@@ -240,6 +365,13 @@ class ServingEngine:
                     (self._t_hi - self._t_lo) / max(sampler.n_steps, 1))
                 self._acc_host = np.zeros((max_batch,), np.int64)
                 self._rej_host = np.zeros((max_batch,), np.int64)
+                # The controller can finish in fewer steps than the attempt
+                # cap, but never fewer than span / dt_max: the provable floor
+                # behind submit-time deadline-feasibility checks.
+                from repro.core.solvers.adaptive import dt_bounds  # noqa: PLC0415
+                _, dt_max = dt_bounds(sampler, state.times)
+                self._min_steps_floor = max(1, int(np.ceil(
+                    (self._t_hi - self._t_lo) / max(float(dt_max), 1e-12))))
             self._finalize = jax.jit(finalize)  # dense-pool (legacy) finalize
         else:
             # Whole-trajectory solvers (fhs) run monolithically per batch; the
@@ -267,6 +399,11 @@ class ServingEngine:
         self.accepted_steps = 0
         self.rejected_steps = 0
         self._nfe_served = 0
+        # SLA accounting
+        self.shed_requests = 0
+        self.preempt_count = 0
+        self.deadline_hits = 0
+        self.deadline_misses = 0
 
     # ------------------------------------------------------------- lifecycle
     def validate(self, req: Request) -> None:
@@ -293,35 +430,108 @@ class ServingEngine:
                     "per-request rtol requires an adaptive solver")
             if req.rtol <= 0.0:
                 raise ValueError(f"request rtol must be > 0, got {req.rtol}")
+        if req.deadline is not None and req.deadline <= 0:
+            raise ValueError(f"request deadline must be > 0 (relative to "
+                             f"submit), got {req.deadline}")
 
-    def submit(self, req: Request, submit_t: Optional[float] = None) -> None:
-        """Queue ``req``.  ``submit_t`` (a ``time.monotonic()`` stamp) lets a
-        router preserve the *original* submit time when it re-routes a queued
+    def _step_time(self) -> Optional[float]:
+        """Clock units one solver step costs: the explicit ``step_time_s`` if
+        given (benchmarks drive a unit-step virtual clock), else the measured
+        per-step EWMA, else None (no estimate yet — feasibility checks pass)."""
+        return (self.step_time_s if self.step_time_s is not None
+                else self._step_ewma)
+
+    def infeasible_reason(self, req: Request) -> Optional[str]:
+        """``"infeasible"`` if ``req``'s deadline cannot be met even on an
+        IDLE engine — the submit-time admission check.
+
+        Fixed-step solvers run exactly their budget; adaptive solvers can
+        finish early but never in fewer than ``span / dt_max`` steps, so the
+        floor uses ``min(budget, span/dt_max)``.  With no per-step time
+        estimate yet (no explicit ``step_time_s``, nothing measured), nothing
+        is provably infeasible and the check passes."""
+        if req.deadline is None:
+            return None
+        st = self._step_time()
+        if st is None:
+            return None
+        budget = self.sampler.n_steps if req.n_steps is None else req.n_steps
+        floor = (max(1, min(budget, self._min_steps_floor))
+                 if self._adaptive else budget)
+        if floor * st > req.deadline:
+            return "infeasible"
+        return None
+
+    def _make_shed(self, req: Request, submit_t: float, reason: str,
+                   now: float) -> Result:
+        self.shed_requests += 1
+        if req.deadline is not None:
+            self.deadline_misses += 1
+        return make_shed_result(req, submit_t, reason, now)
+
+    def submit(self, req: Request,
+               submit_t: Optional[float] = None) -> Optional[Result]:
+        """Queue ``req``.  ``submit_t`` (an engine-clock stamp) lets a router
+        preserve the *original* submit time when it re-routes a queued
         request between workers, so queue-delay/latency accounting spans the
-        whole wait, not just the last hop."""
-        self.validate(req)
-        req.status = QUEUED
-        self._queue.append((req, time.monotonic() if submit_t is None
-                            else submit_t))
+        whole wait, not just the last hop.
 
-    def steal_queued(self, n: int = 1) -> List[Tuple[Request, float]]:
-        """Pop up to ``n`` QUEUED requests off the *back* of the local queue
-        (newest first — the oldest waiters keep their head-of-line position
-        here), returning ``(request, submit_t)`` pairs for re-submission to
-        another worker.  RUNNING slots are never stolen: a trajectory's state
-        lives on this worker's shard, so only waiting requests may move."""
+        Returns None when the request was queued.  Returns a
+        ``Result(status="shed")`` instead when admission control rejects it
+        here: ``reason="infeasible"`` for a deadline no idle engine could
+        meet (never silently accepted), ``reason="overload"`` when
+        ``max_queue`` is set and the queue is full."""
+        self.validate(req)
+        now = self._clock()
+        if submit_t is None:
+            submit_t = now
+        reason = self.infeasible_reason(req)
+        if (reason is None and self._max_queue is not None
+                and len(self._queue) >= self._max_queue):
+            reason = "overload"
+        if reason is not None:
+            return self._make_shed(req, submit_t, reason, now)
+        req.status = QUEUED
+        self._queue.append((req, submit_t))
+        return None
+
+    def steal_queued(self, n: int = 1,
+                     least_urgent: bool = False) -> List[Tuple[Request, float]]:
+        """Pop up to ``n`` QUEUED requests off the local queue, returning
+        ``(request, submit_t)`` pairs for re-submission to another worker.
+
+        Default order is newest first off the *back* (the oldest waiters keep
+        their head-of-line position — the pre-SLA behavior, and what fifo
+        engines always do).  ``least_urgent=True`` on a non-fifo engine pops
+        the entries the sched policy ranks LAST instead, so rebalancing moves
+        the work this worker would serve latest (EDF-aware rebalancing: an
+        urgent deadline never loses its place by being shipped around).
+        RUNNING slots are never stolen, and neither are PAUSED snapshots —
+        a parked trajectory's state lives on this worker's device."""
         out = []
+        if least_urgent and self._sched.name != "fifo" and self._queue:
+            now = self._clock()
+            entries = list(self._queue)
+            order = sorted(range(len(entries)),
+                           key=lambda i: self._sched.key(
+                               self._view(*entries[i]), now))
+            take = set(order[len(entries) - min(n, len(entries)):])
+            out = [entries[i] for i in sorted(take)]
+            self._queue = collections.deque(
+                e for i, e in enumerate(entries) if i not in take)
+            return out
         for _ in range(min(n, len(self._queue))):
             out.append(self._queue.pop())
         return out
 
     def remaining_work(self) -> int:
         """Solver steps this engine still owes: the remaining budgets of its
-        RUNNING slots plus the full budgets of its QUEUED requests (the
-        ``least_remaining_nfe`` router policy's load signal).  Under an
-        adaptive solver the RUNNING portion is the controller's *live*
-        estimate — remaining time over current dt, capped by the attempt
-        budget — so routing tracks realized difficulty, not the worst case.
+        RUNNING slots, the remaining budgets of its PAUSED snapshots, plus
+        the full budgets of its QUEUED requests (the ``least_remaining_nfe``
+        router policy's load signal).  Under an adaptive solver the RUNNING
+        portion is the controller's *live* estimate — remaining time over
+        current dt, capped by the attempt budget — so routing tracks
+        realized difficulty, not the worst case.
         """
         queued = sum(self.sampler.n_steps if req.n_steps is None else
                      req.n_steps for req, _ in self._queue)
@@ -330,7 +540,8 @@ class ServingEngine:
             # running request by the config's budget.
             return queued + len(self.active_slots) * self.sampler.n_steps
         running = sum(self._slot_remaining(s) for s in self.active_slots)
-        return queued + running
+        paused = sum(self._paused_remaining(p) for p in self._paused)
+        return queued + running + paused
 
     def place(self, device) -> None:
         """Commit the engine's pool state to ``device`` (cluster workers pin
@@ -365,10 +576,17 @@ class ServingEngine:
         return len(self._pending)
 
     @property
+    def paused(self) -> int:
+        """PAUSED requests (preempted mid-trajectory, snapshot held)."""
+        return len(self._paused)
+
+    @property
     def busy(self) -> bool:
-        """Work left anywhere: queued, running, or awaiting finalize (the
-        same shape the cluster Router exposes, so drivers can poll either)."""
-        return bool(self._queue or self.active_slots or self._pending)
+        """Work left anywhere: queued, running, paused, or awaiting finalize
+        (the same shape the cluster Router exposes, so drivers can poll
+        either)."""
+        return bool(self._queue or self.active_slots or self._paused
+                    or self._pending)
 
     def _slot_budget(self, slot: int) -> int:
         req = self._slot_req[slot]
@@ -400,18 +618,88 @@ class ServingEngine:
         return self._adaptive and (self._t_host[slot]
                                    <= self._t_lo + self._t_eps)
 
-    def _admit(self) -> None:
-        """Move queued requests into free slots (continuous: at any step
-        boundary; run-to-completion: only once the whole pool has drained)."""
-        if not self.continuous and self.active_slots:
-            return
-        now = time.monotonic()
-        for slot in range(self.max_batch):
-            if not self._queue:
-                break
-            if self._slot_req[slot] is not None:
-                continue
-            req, submit_t = self._queue.popleft()
+    # ----------------------------------------------------------- SLA plumbing
+    @staticmethod
+    def _view(req: Request, submit_t: float) -> SlaView:
+        """The policy-facing view of a request, deadline made absolute."""
+        return SlaView(
+            priority=req.priority,
+            deadline_t=(submit_t + req.deadline
+                        if req.deadline is not None else None),
+            submit_t=submit_t)
+
+    def _slot_view(self, slot: int) -> SlaView:
+        return self._view(self._slot_req[slot], self._slot_times[slot][0])
+
+    def _paused_remaining(self, p: _Paused) -> int:
+        """Solver steps a PAUSED snapshot still owes when resumed."""
+        budget = (self.sampler.n_steps if p.req.n_steps is None
+                  else p.req.n_steps)
+        left = budget - p.steps
+        if not self._adaptive or left <= 0:
+            return max(0, left)
+        t_left = float(p.t) - self._t_lo
+        if t_left <= self._t_eps:
+            return 0
+        est = int(np.ceil(t_left / max(float(p.dt), 1e-12)))
+        return max(1, min(left, est))
+
+    def _cand_remaining(self, kind: str, payload) -> int:
+        """Solver steps an admission candidate will run once admitted."""
+        if kind == "p":
+            return self._paused_remaining(payload)
+        req, _ = payload
+        budget = (self.sampler.n_steps if req.n_steps is None
+                  else req.n_steps)
+        if self._adaptive:
+            return max(1, min(budget, self._min_steps_floor))
+        return budget
+
+    def _park(self, slot: int) -> None:
+        """Preempt RUNNING slot ``slot``: snapshot its per-slot rows (keys,
+        step index, time, budget, controller rows), freeze the slot, and
+        stash a :class:`_Paused` entry.  Restoring the snapshot resumes the
+        trajectory bit-identically — every later draw comes from the slot
+        rows being saved, never from pool position or wall time."""
+        req = self._slot_req[slot]
+        submit_t, admit_t = self._slot_times[slot]
+        budget = self._slot_budget(slot)
+        snap = self._pool.park(slot)
+        self._paused.append(_Paused(
+            req=req, submit_t=submit_t, admit_t=admit_t, snap=snap,
+            steps=int(self._steps_host[slot]),
+            preemptions=self._slot_preempt[slot] + 1,
+            t=float(self._t_host[slot]) if self._adaptive else 0.0,
+            dt=float(self._dt_host[slot]) if self._adaptive else 0.0,
+            accepted=int(self._acc_host[slot]) if self._adaptive else 0,
+            rejected=int(self._rej_host[slot]) if self._adaptive else 0))
+        req.status = PAUSED
+        self._slot_req[slot] = None
+        # Mirror the freeze (step := target) so dense-path delta accounting
+        # sees no phantom steps on the frozen row.
+        self._steps_host[slot] = budget
+        self.preempt_count += 1
+
+    def _admit_into(self, slot: int, kind: str, payload, now: float) -> None:
+        """Admit one candidate — a fresh QUEUED request (``kind="q"``) or a
+        PAUSED snapshot (``kind="p"``) — into free slot ``slot``."""
+        if kind == "p":
+            p: _Paused = payload
+            self._pool.restore(slot, p.snap)
+            self._steps_host[slot] = p.steps
+            if self._adaptive:
+                self._t_host[slot] = p.t
+                self._dt_host[slot] = p.dt
+                self._acc_host[slot] = p.accepted
+                self._rej_host[slot] = p.rejected
+            req = p.req
+            # Queue-delay accounting keeps the FIRST admission stamp: the
+            # request did start then; later evictions show up in latency and
+            # the preemptions counter, not as re-queueing.
+            self._slot_times[slot] = (p.submit_t, p.admit_t)
+            self._slot_preempt[slot] = p.preemptions
+        else:
+            req, submit_t = payload
             if self._stepwise:
                 self._pool.admit(slot, self.request_key(req),
                                  n_steps=req.n_steps, rtol=req.rtol)
@@ -424,17 +712,110 @@ class ServingEngine:
                                            / max(budget, 1))
                     self._acc_host[slot] = 0
                     self._rej_host[slot] = 0
-            req.status = RUNNING
-            self._slot_req[slot] = req
             self._slot_times[slot] = (submit_t, now)
+            self._slot_preempt[slot] = 0
+        req.status = RUNNING
+        self._slot_req[slot] = req
+
+    def _admit(self) -> List[Result]:
+        """Admission at a step boundary, in sched-policy order.
+
+        Candidates are the PAUSED snapshots plus the QUEUED requests,
+        stable-sorted by ``policy.key`` (the fifo policy therefore
+        reproduces the pre-SLA arrival order exactly, with no paused
+        entries to reorder).  Under ``shed=True`` candidates that provably
+        cannot meet their deadline are dropped first; free slots then fill
+        in policy order, and under ``preempt=True`` the most urgent waiter
+        may evict the least urgent RUNNING slot while the policy says so.
+        Returns the shed ``Result``\\ s (continuous: at any step boundary;
+        run-to-completion: only once the whole pool has drained)."""
+        if not self.continuous and self.active_slots:
+            return []
+        if not self._queue and not self._paused:
+            return []
+        now = self._clock()
+
+        cands: List[tuple] = []
+        for p in self._paused:
+            cands.append(("p", p, self._view(p.req, p.submit_t)))
+        for req, submit_t in self._queue:
+            cands.append(("q", (req, submit_t), self._view(req, submit_t)))
+        self._paused = []
+        self._queue = collections.deque()
+        cands.sort(key=lambda c: self._sched.key(c[2], now))
+
+        shed: List[Result] = []
+        if self._shed:
+            st = self._step_time()
+            free = len(self.free_slots)
+            if free > 0 or self._preempt or st is None:
+                wait_est = 0.0
+            else:
+                running = [s for s in self.active_slots
+                           if not self._slot_drained(s)]
+                wait_est = (min((self._slot_remaining(s) for s in running),
+                                default=0) * st)
+            kept = []
+            for kind, payload, view in cands:
+                if view.deadline_t is None or st is None:
+                    kept.append((kind, payload, view))
+                    continue
+                finish_est = (now + wait_est
+                              + self._cand_remaining(kind, payload) * st)
+                if now >= view.deadline_t or finish_est > view.deadline_t:
+                    req = payload.req if kind == "p" else payload[0]
+                    submit_t = (payload.submit_t if kind == "p"
+                                else payload[1])
+                    shed.append(self._make_shed(req, submit_t, "deadline",
+                                                now))
+                else:
+                    kept.append((kind, payload, view))
+            cands = kept
+
+        for slot in self.free_slots:
+            if not cands:
+                break
+            kind, payload, _ = cands.pop(0)
+            self._admit_into(slot, kind, payload, now)
+
+        if self._preempt and self._stepwise:
+            while cands:
+                kind, payload, view = cands[0]
+                running = [(s, self._slot_view(s)) for s in self.active_slots
+                           if not self._slot_drained(s)]
+                if not running:
+                    break
+                victim, victim_view = max(
+                    running, key=lambda sv: self._sched.key(sv[1], now))
+                if not self._sched.preempts(view, victim_view, now):
+                    break
+                cands.pop(0)
+                self._park(victim)
+                self._admit_into(victim, kind, payload, now)
+
+        # Leftovers go back where they came from, original order preserved.
+        parked = self._paused  # entries _park appended during preemption
+        self._paused = [payload for kind, payload, _ in cands
+                        if kind == "p"] + parked
+        self._queue = collections.deque(
+            payload for kind, payload, _ in cands if kind == "q")
+        return shed
 
     def _make_result(self, req: Request, submit_t: float, admit_t: float,
                      finish_t: float, steps: int, tokens_row: np.ndarray,
-                     accepted: int = 0, rejected: int = 0) -> Result:
+                     accepted: int = 0, rejected: int = 0,
+                     preemptions: int = 0) -> Result:
         req.status = FINISHED
         self.requests_served += 1
         nfe = steps * self._solver.nfe_per_step
         self._nfe_served += nfe
+        deadline_met = None
+        if req.deadline is not None:
+            deadline_met = bool(finish_t <= submit_t + req.deadline)
+            if deadline_met:
+                self.deadline_hits += 1
+            else:
+                self.deadline_misses += 1
         return Result(
             request_id=req.request_id,
             tokens=np.asarray(tokens_row[: req.seq_len]),
@@ -444,6 +825,9 @@ class ServingEngine:
             steps=steps,
             accepted_steps=accepted,
             rejected_steps=rejected,
+            priority=req.priority,
+            deadline_met=deadline_met,
+            preemptions=preemptions,
         )
 
     def _emit_slot(self, slot: int, finish_t: float, steps: int,
@@ -456,7 +840,8 @@ class ServingEngine:
                     if self._adaptive and self._stepwise else (0, 0))
         self._slot_req[slot] = None
         return self._make_result(req, submit_t, admit_t, finish_t, steps,
-                                 tokens_row, accepted=acc, rejected=rej)
+                                 tokens_row, accepted=acc, rejected=rej,
+                                 preemptions=self._slot_preempt[slot])
 
     def _slot_stream_cb(self, slot: int) -> Optional[StreamFn]:
         """The callback streaming this slot, if any (request's, else engine's)."""
@@ -496,10 +881,11 @@ class ServingEngine:
         passes, paid = self._pool.finalize_cost(len(rows))
         self.finalize_passes += passes
         self._finalize_rows += paid
-        finish_t = time.monotonic()
+        finish_t = self._clock()
         out = [self._make_result(p.req, p.submit_t, p.admit_t, finish_t,
                                  p.steps, tokens[j], accepted=p.accepted,
-                                 rejected=p.rejected)
+                                 rejected=p.rejected,
+                                 preemptions=p.preemptions)
                for j, p in enumerate(self._pending)]
         self._pending.clear()
         self._pending_age = 0
@@ -509,15 +895,17 @@ class ServingEngine:
         """One scheduler tick: admit, compact the RUNNING slots into a
         bucket, advance it ``scheduler_stride`` solver steps in one device
         launch, accumulate drains, and flush the batched finalize when due.
-        Returns newly finished requests (drain order)."""
+        Returns newly finished requests (drain order), plus any
+        ``Result(status="shed")`` admission control dropped this tick."""
         if not self._stepwise:
             return self._run_monolithic()
-        self._admit()
+        shed = self._admit()
         active = self.active_slots
         if not active:
-            return self._flush_pending()
+            return shed + self._flush_pending()
         stride = self._tick_stride(active)
         self.last_stride = stride
+        wall0 = time.perf_counter()
 
         if self.compact:
             sub, perm = self._pool.advance_compacted(active, self.free_slots,
@@ -565,6 +953,12 @@ class ServingEngine:
             x_view, row_of = self._state.x, {s: s for s in range(self.max_batch)}
         self.global_steps += stride
         self._paid_slot_steps += width * stride
+        if self.step_time_s is None:
+            # Measured per-step wall time feeds the deadline-feasibility
+            # estimates (EWMA; explicit step_time_s — virtual clocks — wins).
+            per = (time.perf_counter() - wall0) / stride
+            self._step_ewma = (per if self._step_ewma is None
+                               else 0.8 * self._step_ewma + 0.2 * per)
 
         streaming = [(s, cb) for s, cb in
                      ((s, self._slot_stream_cb(s)) for s in active)
@@ -594,7 +988,8 @@ class ServingEngine:
                     accepted=(int(self._acc_host[slot])
                               if self._adaptive else 0),
                     rejected=(int(self._rej_host[slot])
-                              if self._adaptive else 0)))
+                              if self._adaptive else 0),
+                    preemptions=self._slot_preempt[slot]))
                 self._slot_req[slot] = None
             if self._pending:
                 # Flush when the batch fills, the pool idles, OR the oldest
@@ -605,25 +1000,26 @@ class ServingEngine:
                 if (len(self._pending) >= self.finalize_batch
                         or not self.active_slots
                         or self._pending_age > self.finalize_batch):
-                    return self._flush_pending()
-            return []
+                    return shed + self._flush_pending()
+            return shed
         if not done:
-            return []
+            return shed
         # Legacy dense pool: one whole-pool finalize forward per finishing
         # tick (shape-stable for jit); counted as off-grid work in stats().
         self.finalize_passes += 1
         self._finalize_rows += self.max_batch
         tokens = np.asarray(jax.device_get(self._finalize(self._state)))
-        finish_t = time.monotonic()
-        return [self._emit_slot(slot, finish_t, int(self._steps_host[slot]),
-                                tokens[slot]) for slot in done]
+        finish_t = self._clock()
+        return shed + [self._emit_slot(slot, finish_t,
+                                       int(self._steps_host[slot]),
+                                       tokens[slot]) for slot in done]
 
     def _run_monolithic(self) -> List[Result]:
         """Legacy whole-batch run for solvers without a stepwise form (fhs)."""
-        self._admit()
+        shed = self._admit()
         active = self.active_slots
         if not active:
-            return []
+            return shed
         key = jax.random.PRNGKey(0)
         for slot in active:
             key = jax.random.fold_in(key, self._slot_req[slot].seed)
@@ -635,15 +1031,15 @@ class ServingEngine:
         self.global_steps += result.nfe
         self._active_slot_steps += len(active) * result.nfe
         self._paid_slot_steps += self.max_batch * result.nfe
-        finish_t = time.monotonic()
-        return [self._emit_slot(slot, finish_t, result.nfe, tokens[slot])
-                for slot in active]
+        finish_t = self._clock()
+        return shed + [self._emit_slot(slot, finish_t, result.nfe,
+                                       tokens[slot]) for slot in active]
 
     def run_all(self) -> List[Result]:
-        """Serve until the queue, every slot, and the pending-finalize buffer
-        have drained (completion order)."""
+        """Serve until the queue, every slot, every paused snapshot, and the
+        pending-finalize buffer have drained (completion order)."""
         results: List[Result] = []
-        while self._queue or self.active_slots:
+        while self._queue or self.active_slots or self._paused:
             results.extend(self.step())
         results.extend(self._flush_pending())
         return results
@@ -687,6 +1083,19 @@ class ServingEngine:
             "realized_nfe": self._nfe_served,
             "mean_nfe_per_request": (self._nfe_served / served) if served
                                     else 0.0,
+            # SLA accounting
+            "sched_policy": self._sched.name,
+            "preempt": self._preempt,
+            "shed": self._shed,
+            "shed_requests": self.shed_requests,
+            "preemptions": self.preempt_count,
+            "paused": len(self._paused),
+            "deadline_hits": self.deadline_hits,
+            "deadline_misses": self.deadline_misses,
+            "deadline_hit_rate": (
+                self.deadline_hits
+                / (self.deadline_hits + self.deadline_misses)
+                if (self.deadline_hits + self.deadline_misses) else 1.0),
         }
 
 

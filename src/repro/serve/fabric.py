@@ -139,6 +139,15 @@ class FabricStats:
     queue_delay_p95_s: float
     latency_p50_s: float
     latency_p95_s: float
+    #: SLA accounting: requests shed by admission control anywhere in the
+    #: fabric (worker overload/deadline sheds settle the ledger like
+    #: results), the fleet deadline scoreboard, and the per-priority-class
+    #: breakdown (same shape as ``ClusterStats.per_class``).
+    shed_requests: int
+    deadline_hits: int
+    deadline_misses: int
+    deadline_hit_rate: float
+    per_class: Dict[int, dict]
     #: per-handle detail incl. the last heartbeat's engine stats.
     per_worker: List[dict]
 
@@ -318,7 +327,8 @@ class FabricRouter(Router):
             dst = min(live, key=lambda h: (h.backlog, h.worker_id))
             if src is dst or src.backlog - dst.backlog < 2:
                 break
-            stolen = self.transport.steal_queued(src.worker_id, 1)
+            stolen = self.transport.steal_queued(src.worker_id, 1,
+                                                 least_urgent=True)
             if not stolen:
                 # Heartbeat told us there was a queue but the worker says
                 # otherwise (raced a drain, or it is silently dead): stop
@@ -394,11 +404,16 @@ class FabricRouter(Router):
                     continue
                 del self._ledger[res.request_id]
                 handle.assigned.discard(res.request_id)
+                if res.status == "shed":
+                    # Worker-side admission control dropped it: settle the
+                    # ledger (no replay — the drop was deliberate) and
+                    # surface the shed result, unattributed to throughput.
+                    self._account(res)
+                    out.append(res)
+                    continue
                 res.worker = wid
                 handle.served += 1
-                self.requests_served += 1
-                self._queue_delays.append(res.queue_delay_s)
-                self._latencies.append(res.latency_s)
+                self._account(res)
                 out.append(res)
         for handle in self.live_workers:
             if self.tick - handle.last_hb_tick > self.heartbeat_timeout:
@@ -424,6 +439,19 @@ class FabricRouter(Router):
     # ------------------------------------------------------------- accounting
     def stats(self) -> FabricStats:
         per_worker = []
+        hits = sum(c["deadline_hits"] for c in self._class_counts.values())
+        misses = sum(c["deadline_misses"]
+                     for c in self._class_counts.values())
+        per_class = {}
+        for prio in sorted(self._class_counts):
+            cls = dict(self._class_counts[prio])
+            lats = self._class_latencies.get(prio, [])
+            dl = cls["deadline_hits"] + cls["deadline_misses"]
+            cls["deadline_hit_rate"] = (cls["deadline_hits"] / dl) if dl \
+                else 1.0
+            cls["latency_p50_s"] = _pct(lats, 50)
+            cls["latency_p95_s"] = _pct(lats, 95)
+            per_class[prio] = cls
         for h in self.workers:
             per_worker.append(dict(
                 worker_id=h.worker_id, alive=h.alive, served=h.served,
@@ -451,6 +479,12 @@ class FabricRouter(Router):
             queue_delay_p95_s=_pct(self._queue_delays, 95),
             latency_p50_s=_pct(self._latencies, 50),
             latency_p95_s=_pct(self._latencies, 95),
+            shed_requests=self.shed_requests,
+            deadline_hits=hits,
+            deadline_misses=misses,
+            deadline_hit_rate=(hits / (hits + misses)) if (hits + misses)
+                              else 1.0,
+            per_class=per_class,
             per_worker=per_worker,
         )
 

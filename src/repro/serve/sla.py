@@ -1,0 +1,183 @@
+"""SLA scheduler policies: who runs next, and who gets preempted.
+
+The serving engine admits work at step boundaries; this module decides the
+*order*.  A :class:`SchedPolicy` ranks admission candidates (fresh QUEUED
+requests and PAUSED snapshots alike) by an urgency key and — when the engine
+runs with ``preempt=True`` — decides whether a waiting request should evict a
+RUNNING slot.  Policies are registry-backed (``register_sched_policy``,
+mirroring the router-policy registry in ``serve/cluster.py``):
+
+* ``fifo`` — arrival order, never preempts: the pre-SLA engine behavior, kept
+  bit-compatible as the baseline;
+* ``edf`` — earliest-deadline-first: the classic result that EDF is optimal
+  for feasible deadline sets on one resource; requests without a deadline
+  sort last (infinitely patient).  Preempts a running slot only when the
+  waiter's deadline is strictly earlier;
+* ``strict_priority`` — higher ``Request.priority`` first, FIFO within a
+  class, with **aging**: a waiter's effective priority grows with its wait
+  (``aging`` units per clock unit), so a saturating high class cannot starve
+  the low class forever.  Preempts when the waiter's effective priority
+  strictly exceeds the runner's static one.
+
+Policies rank :class:`SlaView` tuples — (priority, deadline_t, submit_t) —
+never live engine state, so the same policy instance orders a single engine's
+queue, a cluster router's rebalancing, and a fabric replay identically.
+Ordering is a pure latency/SLA knob: tokens come from each request's own
+(seed, request_id) PRNG stream and are schedule-invariant, so no policy (and
+no preemption schedule) can change what a completed request samples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple, Type
+
+_INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlaView:
+    """The SLA-relevant facts about one request, as a policy sees them.
+
+    ``deadline_t`` is absolute (submit stamp + relative deadline) on the
+    engine's clock; ``None`` means no deadline.  The engine builds views for
+    queue entries, paused snapshots, and running slots from the same fields,
+    so comparisons are apples-to-apples across lifecycle states.
+    """
+
+    priority: int = 0
+    deadline_t: Optional[float] = None
+    submit_t: float = 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Registry (mirrors serve/cluster.py's router-policy registry)
+# --------------------------------------------------------------------------- #
+
+_SCHED_POLICIES: Dict[str, "Type[SchedPolicy]"] = {}
+
+
+def register_sched_policy(name: str, *, override: bool = False) -> Callable:
+    """Class decorator registering a :class:`SchedPolicy` under ``name``."""
+
+    def decorate(cls):
+        if name in _SCHED_POLICIES and not override:
+            raise ValueError(
+                f"sched policy {name!r} already registered to "
+                f"{_SCHED_POLICIES[name].__name__}; pass override=True to "
+                f"replace")
+        cls.name = name
+        _SCHED_POLICIES[name] = cls
+        return cls
+
+    return decorate
+
+
+def get_sched_policy(name: str) -> "Type[SchedPolicy]":
+    """Look up a registered policy class; ValueError for unknown names."""
+    try:
+        return _SCHED_POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sched policy {name!r}; registered: "
+            f"{tuple(_SCHED_POLICIES)}") from None
+
+
+def list_sched_policies() -> Tuple[str, ...]:
+    """Registered policy names, in registration order."""
+    return tuple(_SCHED_POLICIES)
+
+
+# --------------------------------------------------------------------------- #
+# Policies
+# --------------------------------------------------------------------------- #
+
+
+class SchedPolicy:
+    """Admission-order + preemption rule over :class:`SlaView` facts.
+
+    ``key(view, now)`` returns a sort key — LOWER is more urgent; ties must
+    fall back to ``submit_t`` so equal-urgency work stays FIFO (and the fifo
+    policy reproduces pre-SLA admission order exactly).  ``preempts``
+    answers "should this waiter evict that runner right now?"; policies that
+    never preempt inherit the ``False`` default, which also makes
+    ``preempt=True`` on such an engine a harmless no-op.
+    """
+
+    name: str = "?"
+
+    def key(self, view: SlaView, now: float):
+        raise NotImplementedError
+
+    def preempts(self, waiting: SlaView, running: SlaView,
+                 now: float) -> bool:
+        return False
+
+
+@register_sched_policy("fifo")
+class FifoSchedPolicy(SchedPolicy):
+    """Arrival order, deadline- and priority-blind, never preempts — the
+    pre-SLA engine behavior (the baseline every SLA gate compares against).
+
+    The key is a constant, not ``submit_t``: a router re-routing a queued
+    request preserves its *original* submit stamp, and fifo means "back of
+    the queue you actually joined" — the stable candidate sort then keeps
+    pure arrival order, bit-compatible with the pre-SLA engine."""
+
+    def key(self, view, now):
+        return ()
+
+
+@register_sched_policy("edf")
+class EdfSchedPolicy(SchedPolicy):
+    """Earliest-deadline-first; no-deadline work sorts last, FIFO within
+    equal deadlines.  Preempts only for a strictly earlier deadline, so two
+    equal-deadline requests can never thrash swapping a slot."""
+
+    def key(self, view, now):
+        return (view.deadline_t if view.deadline_t is not None else _INF,
+                view.submit_t)
+
+    def preempts(self, waiting, running, now):
+        if waiting.deadline_t is None:
+            return False
+        running_d = (running.deadline_t if running.deadline_t is not None
+                     else _INF)
+        return waiting.deadline_t < running_d
+
+
+@register_sched_policy("strict_priority")
+class StrictPrioritySchedPolicy(SchedPolicy):
+    """Higher ``priority`` first, FIFO within a class, aging against
+    starvation.
+
+    A waiter's *effective* priority is ``priority + aging * wait`` (wait in
+    the engine's clock units), so a low-priority request eventually outranks
+    — and under ``preempt=True``, evicts — fresher high-priority work instead
+    of starving behind an unbounded stream of it.  ``aging=0`` disables aging
+    (pure strict priority).  Runners are compared by their *static* priority:
+    eviction needs a strict win, so a class cannot preempt itself.
+    """
+
+    def __init__(self, aging: float = 0.0):
+        if aging < 0:
+            raise ValueError(f"aging must be >= 0, got {aging}")
+        self.aging = aging
+
+    def _effective(self, view: SlaView, now: float) -> float:
+        return view.priority + self.aging * max(0.0, now - view.submit_t)
+
+    def key(self, view, now):
+        return (-self._effective(view, now), view.submit_t)
+
+    def preempts(self, waiting, running, now):
+        return self._effective(waiting, now) > running.priority
+
+
+def resolve_sched_policy(policy) -> SchedPolicy:
+    """Accept a policy name or a ready instance (the engine's ctor shape)."""
+    if isinstance(policy, str):
+        return get_sched_policy(policy)()
+    if isinstance(policy, SchedPolicy):
+        return policy
+    raise TypeError(f"sched_policy must be a name or SchedPolicy instance, "
+                    f"got {policy!r}")

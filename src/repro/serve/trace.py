@@ -16,7 +16,11 @@ Two shapes of traffic:
   positions ``i % period == 0``.  With ``period = n_workers`` a round-robin
   router pins **every** straggler onto worker 0, the adversarial case for
   queue-blind placement that ``join_shortest_queue`` (and queue-level
-  rebalancing) should win.
+  rebalancing) should win;
+* :func:`sla_trace` — a priority-mix overload trace (arrivals past
+  saturation, a high class with deadlines riding among deadline-free bulk
+  work), the input to the SLA scheduling benchmarks and the
+  ``--priority-mix`` launcher mode.
 """
 from __future__ import annotations
 
@@ -80,6 +84,39 @@ def skewed_trace(n_requests: int, max_batch: int, short_steps: int,
     arrivals = poisson_arrivals(
         n_requests, budgets.mean() / (max_batch * load), seed=seed)
     return arrivals, budgets
+
+
+def sla_trace(n_requests: int, max_batch: int, n_steps: int,
+              p_high: float = 0.2, load: float = 2.0,
+              high_deadline_factor: float = 2.0,
+              low_deadline_factor: Optional[float] = None,
+              seed: int = 0
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(arrival_times, step_budgets, priorities, deadlines): a priority-mix
+    overload trace for the SLA benchmarks.
+
+    ``p_high`` of the requests are high-priority (priority 1) and carry a
+    deadline of ``high_deadline_factor x`` their own service time (budget
+    steps, in the same step units as the arrival clock); the rest are
+    priority 0, with no deadline unless ``low_deadline_factor`` is set.
+    ``load > 1`` offers more work than the pool can serve (2.0 = twice
+    saturation), the regime where fifo queues head-of-line-block the high
+    class and an SLA scheduler has to earn its keep.  Budgets are uniform
+    (``n_steps``) so every completed request is comparable across scheduling
+    legs; arrivals are Poisson.  Pure function of its arguments.
+    """
+    if not 0.0 <= p_high <= 1.0:
+        raise ValueError(f"p_high must be in [0, 1], got {p_high}")
+    rng = np.random.default_rng(seed)
+    budgets = np.full(n_requests, n_steps, np.int64)
+    arrivals = poisson_arrivals(
+        n_requests, budgets.mean() / (max_batch * load), seed=seed + 1)
+    priorities = (rng.uniform(size=n_requests) < p_high).astype(np.int64)
+    deadlines = np.full(n_requests, np.inf)
+    deadlines[priorities == 1] = high_deadline_factor * n_steps
+    if low_deadline_factor is not None:
+        deadlines[priorities == 0] = low_deadline_factor * n_steps
+    return arrivals, budgets, priorities, deadlines
 
 
 @dataclasses.dataclass(frozen=True)

@@ -62,6 +62,10 @@ class Heartbeat:
     remaining_work: int
     #: the worker engine's ``stats()`` snapshot (accounting rides along free).
     stats: dict = dataclasses.field(default_factory=dict)
+    #: True when this heartbeat arrived after missing at least one reply
+    #: window — the worker was SLOW, not dead (the router sees liveness
+    #: restored but can treat the load figures as stale).
+    late: bool = False
 
 
 @dataclasses.dataclass
@@ -93,13 +97,19 @@ class Transport:
     def submit(self, worker_id: int, req: Request,
                submit_t: float) -> None:
         """Fire-and-forget dispatch of ``req`` (original submit stamp riding
-        along) to ``worker_id``.  Dropped silently if the worker is dead."""
+        along) to ``worker_id``.  Dropped silently if the worker is dead.
+        If the worker's admission control sheds the request, the shed
+        ``Result`` comes back in a later :meth:`tick` report — transports
+        never lose it."""
         raise NotImplementedError
 
-    def steal_queued(self, worker_id: int,
-                     n: int = 1) -> List[Tuple[Request, float]]:
+    def steal_queued(self, worker_id: int, n: int = 1,
+                     least_urgent: bool = False) -> List[Tuple[Request, float]]:
         """Pop up to ``n`` QUEUED requests back off a worker (rebalancing /
-        elastic join).  Empty for dead or unreachable workers."""
+        elastic join).  ``least_urgent=True`` asks an SLA-scheduled worker
+        for the entries its policy would serve LAST (see
+        :meth:`ServingEngine.steal_queued`).  Empty for dead or unreachable
+        workers."""
         raise NotImplementedError
 
     def tick(self) -> Dict[int, TickReport]:
@@ -164,6 +174,9 @@ class LoopbackTransport(Transport):
         self._delay_hb: Dict[int, int] = {}
         #: (deliver_tick, heartbeat) buffer for delayed heartbeats.
         self._delayed: List[Tuple[int, Heartbeat]] = []
+        #: shed Results produced by worker-side admission control at submit
+        #: time, delivered with the worker's next tick report.
+        self._shed_buf: Dict[int, List[Result]] = {}
 
     # ------------------------------------------------------- fault injection
     def drop_heartbeats(self, worker_id: int, ticks: Iterable[int]) -> None:
@@ -200,18 +213,23 @@ class LoopbackTransport(Transport):
     def submit(self, worker_id: int, req: Request, submit_t: float) -> None:
         w = self._workers.get(worker_id)
         if w is not None:  # a send to a crashed host goes nowhere
-            w.engine.submit(req, submit_t=submit_t)
+            res = w.engine.submit(req, submit_t=submit_t)
+            if res is not None:  # shed at admission: report it next tick
+                self._shed_buf.setdefault(worker_id, []).append(res)
 
-    def steal_queued(self, worker_id: int,
-                     n: int = 1) -> List[Tuple[Request, float]]:
+    def steal_queued(self, worker_id: int, n: int = 1,
+                     least_urgent: bool = False) -> List[Tuple[Request, float]]:
         w = self._workers.get(worker_id)
-        return w.engine.steal_queued(n) if w is not None else []
+        if w is None:
+            return []
+        return w.engine.steal_queued(n, least_urgent=least_urgent)
 
     def _heartbeat(self, w: PoolWorker) -> Heartbeat:
         eng = w.engine
         return Heartbeat(
             worker_id=w.worker_id, tick=self.tick_index, queued=eng.queued,
-            backlog=eng.queued + len(eng.active_slots) + eng.pending_finalize,
+            backlog=(eng.queued + len(eng.active_slots) + eng.paused
+                     + eng.pending_finalize),
             remaining_work=eng.remaining_work(), stats=eng.stats())
 
     def tick(self) -> Dict[int, TickReport]:
@@ -220,7 +238,7 @@ class LoopbackTransport(Transport):
         for wid, w in self._workers.items():
             if w is None:
                 continue
-            results = w.tick()
+            results = self._shed_buf.pop(wid, []) + w.tick()
             hb: Optional[Heartbeat] = None
             if self.tick_index not in self._drop_hb.get(wid, ()):
                 hb = self._heartbeat(w)
@@ -243,6 +261,7 @@ class LoopbackTransport(Transport):
     def kill(self, worker_id: int) -> None:
         if worker_id in self._workers:
             self._workers[worker_id] = None  # state lost, like a host crash
+            self._shed_buf.pop(worker_id, None)  # undelivered sheds die too
 
     def spawn(self, reuse_id: Optional[int] = None) -> int:
         if self._spawn_worker is None:
@@ -335,24 +354,34 @@ def _host_worker_main(conn, spec: HostEngineSpec, worker_id: int,
                               seq_len=spec.seq_len, seed=0))
         engine.run_all()
         engine.reset_stats()
+    shed_buf: List[Result] = []
     try:
         while True:
             msg = conn.recv()
             cmd = msg[0]
             if cmd == "submit":
                 _, req, submit_t = msg
-                engine.submit(req, submit_t=submit_t)
+                res = engine.submit(req, submit_t=submit_t)
+                if res is not None:
+                    # Shed at admission: ship it with the next tick reply
+                    # (submit is fire-and-forget, so there is no reply slot
+                    # of its own — but the result must never be lost).
+                    shed_buf.append(res)
             elif cmd == "tick":
-                results = engine.step()
+                results = shed_buf + engine.step()
+                shed_buf = []
                 hb = Heartbeat(
                     worker_id=worker_id, tick=0, queued=engine.queued,
                     backlog=(engine.queued + len(engine.active_slots)
-                             + engine.pending_finalize),
+                             + engine.paused + engine.pending_finalize),
                     remaining_work=engine.remaining_work(),
                     stats=engine.stats())
                 conn.send(("tick", results, hb))
             elif cmd == "steal":
-                conn.send(("steal", engine.steal_queued(msg[1])))
+                least_urgent = bool(msg[2]) if len(msg) > 2 else False
+                conn.send(("steal",
+                           engine.steal_queued(msg[1],
+                                               least_urgent=least_urgent)))
             elif cmd == "stop":
                 break
     except (EOFError, OSError, KeyboardInterrupt):
@@ -372,6 +401,13 @@ class _ProcWorker:
     #: reply is drained (the pipe protocol is strict request/reply).
     awaiting: bool = False
     alive: bool = True
+    #: consecutive reply windows this worker has missed (SLOW, not dead:
+    #: each miss widens its next window, and the reply that finally lands is
+    #: marked ``Heartbeat.late``).  Reset on any reply.
+    missed: int = 0
+    #: the pipe errored — no reply can ever come (DEAD as far as this
+    #: transport can tell; the router's liveness timeout makes the call).
+    pipe_dead: bool = False
 
 
 class ProcessTransport(Transport):
@@ -450,51 +486,71 @@ class ProcessTransport(Transport):
         except (BrokenPipeError, OSError):
             pass  # crashed mid-send: the ledger replays it after detection
 
-    def steal_queued(self, worker_id: int,
-                     n: int = 1) -> List[Tuple[Request, float]]:
+    def steal_queued(self, worker_id: int, n: int = 1,
+                     least_urgent: bool = False) -> List[Tuple[Request, float]]:
         w = self._workers.get(worker_id)
-        if w is None or not w.alive or w.awaiting:
+        if w is None or not w.alive or w.awaiting or w.pipe_dead:
             return []  # never interleave with an in-flight tick reply
         try:
-            w.conn.send(("steal", n))
+            w.conn.send(("steal", n, least_urgent))
             if w.conn.poll(self.tick_timeout_s):
                 tag, items = w.conn.recv()
                 if tag == "steal":
                     return items
         except (EOFError, BrokenPipeError, OSError):
-            pass
+            w.pipe_dead = True
         return []
 
     def tick(self) -> Dict[int, TickReport]:
+        """Fan a tick out, drain replies against the shared window.
+
+        **Slow is not dead.** A worker that misses its reply window has its
+        tick left in flight and its ``missed`` counter bumped — the next
+        tick retries the drain with an exponentially wider per-worker window
+        (capped at 8x), and the reply that finally lands is delivered with
+        ``Heartbeat.late=True``: liveness restored, load figures stale.  A
+        worker whose PIPE errors is marked ``pipe_dead`` — no reply can ever
+        arrive, so later ticks skip it instantly (an empty report, no poll)
+        and only the router's liveness timeout turns that silence into a
+        death declaration."""
         self.tick_index += 1
         polled: List[int] = []
         for wid, w in self._workers.items():
-            if not w.alive:
+            if not w.alive or w.pipe_dead:
                 continue
             if not w.awaiting:
                 try:
                     w.conn.send(("tick",))
                     w.awaiting = True
                 except (BrokenPipeError, OSError):
-                    pass  # no reply will come; report stays heartbeat-less
+                    w.pipe_dead = True  # no reply will come, ever
+                    continue
             # Still polled while awaiting: a straggler's late reply counts
             # for the tick it arrives on.
             polled.append(wid)
-        deadline = time.monotonic() + self.tick_timeout_s
+        start = time.monotonic()
         reports: Dict[int, TickReport] = {}
         for wid in polled:
             w = self._workers[wid]
             report = TickReport([], None)
-            if w.awaiting:
-                try:
-                    if w.conn.poll(max(0.0, deadline - time.monotonic())):
-                        tag, results, hb = w.conn.recv()
-                        if tag == "tick":
-                            hb.tick = self.tick_index  # delivery tick
-                            report = TickReport(results, hb)
-                            w.awaiting = False
-                except (EOFError, BrokenPipeError, OSError):
-                    w.awaiting = False  # pipe is dead: silence from here on
+            # Stragglers earn a wider window each consecutive miss (backoff,
+            # capped) instead of being written off at the shared deadline.
+            window = self.tick_timeout_s * min(1 << w.missed, 8)
+            deadline = start + window
+            try:
+                if w.conn.poll(max(0.0, deadline - time.monotonic())):
+                    tag, results, hb = w.conn.recv()
+                    if tag == "tick":
+                        hb.tick = self.tick_index  # delivery tick
+                        hb.late = w.missed > 0
+                        report = TickReport(results, hb)
+                        w.awaiting = False
+                        w.missed = 0
+                else:
+                    w.missed += 1  # slow: retry the drain next tick
+            except (EOFError, BrokenPipeError, OSError):
+                w.awaiting = False
+                w.pipe_dead = True  # dead pipe: silence from here on
             reports[wid] = report
         return reports
 

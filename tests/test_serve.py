@@ -367,6 +367,85 @@ def test_compacted_scheduler_token_parity(engine_kind, method, params):
             assert base[rid].nfe == got[rid].nfe
 
 
+@pytest.mark.parametrize(
+    "engine_kind,method",
+    [("masked", m) for m in MASKED_SOLVERS]
+    + [("uniform", m) for m in UNIFORM_SOLVERS])
+def test_preemption_token_parity(engine_kind, method, params):
+    """Preempting a RUNNING slot (park -> paused snapshot -> resume) never
+    changes a request's samples: for every stepwise solver x engine x stride
+    (1 / K / auto), a strict-priority run whose low-priority requests get
+    preempted mid-flight is bit-identical per request to the plain fifo run
+    that never preempts."""
+    solver_eng = (_iid_masked_engine() if engine_kind == "masked"
+                  else _iid_uniform_engine())
+    budgets_ok = method != "parallel_decoding"  # n_steps-coupled schedule
+
+    def serve(stride, **kw):
+        eng = ServingEngine(
+            params, CFG, solver_eng.process,
+            SamplerConfig(method=method, n_steps=6, theta=0.4),
+            max_batch=2, seq_len=10, solver_engine=solver_eng,
+            scheduler_stride=stride, finalize_batch=1, **kw)
+        # Fill the pool with low-priority work and run one tick (auto caps at
+        # auto_stride_max // 2 = 4 < 6, so the lows are still mid-flight)...
+        for i in range(2):
+            n = ((6 if i == 0 else 7) if budgets_ok else None)
+            eng.submit(Request(request_id=i, seq_len=10, seed=i, n_steps=n,
+                               priority=0))
+        eng.step()
+        # ...then land high-priority arrivals, which preempt the running lows
+        # under strict_priority (and merely queue under fifo).
+        for i in (2, 3):
+            n = (2 if budgets_ok else None)
+            eng.submit(Request(request_id=i, seq_len=10, seed=i, n_steps=n,
+                               priority=1))
+        return {r.request_id: r for r in eng.run_all()}, eng
+
+    for stride in (1, 2, "auto"):
+        base, _ = serve(stride)
+        got, eng = serve(stride, sched_policy="strict_priority", preempt=True)
+        assert eng.preempt_count > 0, (method, stride)  # the machinery ran
+        assert base.keys() == got.keys()
+        assert any(r.preemptions > 0 for r in got.values()), (method, stride)
+        for rid in base:
+            assert (base[rid].tokens == got[rid].tokens).all(), (method, stride)
+            assert base[rid].steps == got[rid].steps, (method, stride)
+            assert base[rid].nfe == got[rid].nfe, (method, stride)
+
+
+def test_preemption_adaptive_ctrl_snapshot_parity(params):
+    """Preempting an adaptive slot freezes the controller state (t, dt,
+    accept/reject counters) into the paused snapshot; resume restores it, so
+    tokens AND the realized step-size trajectory match the never-preempted
+    run bit for bit."""
+    solver_eng = _iid_masked_engine()
+
+    def serve(**kw):
+        eng = ServingEngine(
+            params, CFG, solver_eng.process,
+            SamplerConfig(method="adaptive_theta_trapezoidal", n_steps=12,
+                          theta=0.5, rtol=0.5),
+            max_batch=2, seq_len=12, solver_engine=solver_eng,
+            finalize_batch=1, **kw)
+        for i in range(2):
+            eng.submit(Request(request_id=i, seq_len=12, seed=i, priority=0))
+        eng.step()
+        for i in (2, 3):
+            eng.submit(Request(request_id=i, seq_len=12, seed=i, priority=1))
+        return {r.request_id: r for r in eng.run_all()}, eng
+
+    base, _ = serve()
+    got, eng = serve(sched_policy="strict_priority", preempt=True)
+    assert eng.preempt_count > 0
+    assert base.keys() == got.keys()
+    for rid in base:
+        assert (base[rid].tokens == got[rid].tokens).all()
+        assert base[rid].nfe == got[rid].nfe
+        assert base[rid].accepted_steps == got[rid].accepted_steps
+        assert base[rid].rejected_steps == got[rid].rejected_steps
+
+
 def test_bucketed_compile_guard(params):
     """The compacted executor compiles at most len(bucket_ladder) advance_many
     executables per (context, stride), however occupancy fluctuates."""

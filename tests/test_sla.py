@@ -1,0 +1,487 @@
+"""SLA-aware serving: sched-policy semantics, shedding paths, deadline
+accounting, per-class cluster stats, fabric shed settling, and the
+slow-vs-dead transport distinction.
+
+Bit-exactness of preemption itself (every stepwise solver x engine x stride)
+lives in tests/test_serve.py next to the executor parity matrix.
+"""
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MaskedEngine,
+    SamplerConfig,
+    loglinear_schedule,
+    masked_process,
+)
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serve import (
+    EdfSchedPolicy,
+    FifoSchedPolicy,
+    Heartbeat,
+    LoopbackTransport,
+    PoolWorker,
+    ProcessTransport,
+    Request,
+    SchedPolicy,
+    ServingCluster,
+    ServingEngine,
+    ServingFabric,
+    SlaView,
+    StrictPrioritySchedPolicy,
+    get_sched_policy,
+    list_sched_policies,
+    register_sched_policy,
+    resolve_sched_policy,
+)
+from repro.serve.transport import _ProcWorker
+
+CFG = ModelConfig(name="sla", family="dense", n_layers=2, d_model=64,
+                  n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                  vocab_size=23, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)[0]
+
+
+# Cheap injected solver engine (same idiom as test_cluster/test_fabric): an
+# i.i.d. categorical score keeps every solver step a broadcast, so these
+# tests spend their time in the scheduler — the thing under test.
+_PI = jnp.asarray(np.random.default_rng(3).dirichlet(
+    np.ones(CFG.vocab_size) * 2.0), jnp.float32)
+
+
+def _iid_masked_engine():
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    return MaskedEngine(
+        process=proc,
+        score_fn=lambda toks, t: jnp.broadcast_to(
+            _PI, toks.shape + (CFG.vocab_size,)))
+
+
+def make_engine(params, clock_holder=None, n_steps=4, max_batch=2,
+                seq_len=10, **kw):
+    """A serving engine on the virtual step-unit clock: ``step_time_s=1.0``
+    plus an injected clock make every deadline computation deterministic."""
+    solver_eng = _iid_masked_engine()
+    if clock_holder is not None:
+        kw = dict(kw, clock=lambda: clock_holder[0], step_time_s=1.0)
+    return ServingEngine(params, CFG, solver_eng.process,
+                         SamplerConfig(method="theta_trapezoidal",
+                                       n_steps=n_steps, theta=0.5),
+                         max_batch=max_batch, seq_len=seq_len,
+                         solver_engine=solver_eng, finalize_batch=1, **kw)
+
+
+def drive(engine, clock_holder):
+    """run_all, advancing the virtual clock one unit per executed step."""
+    out = []
+    while engine.queued or engine.active_slots or engine.paused \
+            or engine.pending_finalize:
+        before = engine.global_steps
+        out.extend(engine.step())
+        clock_holder[0] += float(engine.global_steps - before)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Policy semantics (pure, no engine)
+# --------------------------------------------------------------------------- #
+
+
+def test_sched_policy_registry():
+    assert {"fifo", "edf", "strict_priority"} <= set(list_sched_policies())
+    assert get_sched_policy("edf") is EdfSchedPolicy
+    with pytest.raises(ValueError, match="unknown sched policy"):
+        get_sched_policy("fastest_first")
+    with pytest.raises(ValueError, match="already registered"):
+        @register_sched_policy("fifo")
+        class Dup(SchedPolicy):  # noqa: F811
+            pass
+    pol = resolve_sched_policy("fifo")
+    assert isinstance(pol, FifoSchedPolicy)
+    inst = EdfSchedPolicy()
+    assert resolve_sched_policy(inst) is inst
+    with pytest.raises(TypeError, match="sched_policy"):
+        resolve_sched_policy(42)
+
+
+def test_fifo_key_is_constant():
+    """fifo's key is a constant, NOT submit_t: re-routed requests keep their
+    original stamps, and the stable candidate sort must preserve pure arrival
+    order (bit-compatible with the pre-SLA engine)."""
+    pol = FifoSchedPolicy()
+    views = [SlaView(priority=p, deadline_t=d, submit_t=s)
+             for p, d, s in [(0, None, 5.0), (3, 1.0, 0.0), (1, None, 9.0)]]
+    assert {pol.key(v, now=7.0) for v in views} == {()}
+    assert not pol.preempts(views[1], views[0], now=7.0)
+
+
+def test_edf_ordering_and_preemption():
+    pol = EdfSchedPolicy()
+    soon = SlaView(deadline_t=3.0, submit_t=2.0)
+    later = SlaView(deadline_t=9.0, submit_t=0.0)
+    never = SlaView(deadline_t=None, submit_t=1.0)
+    tie = SlaView(deadline_t=3.0, submit_t=0.5)
+    order = sorted([never, later, soon, tie], key=lambda v: pol.key(v, 0.0))
+    assert order == [tie, soon, later, never]   # deadline, then FIFO; None last
+    assert pol.preempts(soon, later, now=0.0)
+    assert pol.preempts(soon, never, now=0.0)   # no deadline = infinitely late
+    assert not pol.preempts(soon, tie, now=0.0)  # equal deadlines never thrash
+    assert not pol.preempts(never, soon, now=0.0)
+
+
+def test_strict_priority_aging():
+    with pytest.raises(ValueError, match="aging"):
+        StrictPrioritySchedPolicy(aging=-0.1)
+    pure = StrictPrioritySchedPolicy(aging=0.0)
+    high = SlaView(priority=1, submit_t=50.0)
+    low = SlaView(priority=0, submit_t=0.0)
+    assert pure.key(high, 100.0) < pure.key(low, 100.0)
+    assert not pure.preempts(low, high, now=1e9)   # aging off: never outranks
+    assert not pure.preempts(high, high, now=0.0)  # no strict win, no thrash
+    aged = StrictPrioritySchedPolicy(aging=0.1)
+    # after 20 clock units the waiter's effective priority is 0 + 2.0 > 1.
+    assert aged.preempts(low, high, now=20.0 + 1e-9)
+    assert not aged.preempts(low, high, now=5.0)
+    assert aged.key(low, 25.0) < aged.key(SlaView(priority=1, submit_t=25.0),
+                                          25.0)
+
+
+# --------------------------------------------------------------------------- #
+# Engine: shedding paths + deadline accounting
+# --------------------------------------------------------------------------- #
+
+
+def test_deadline_validation(params):
+    eng = make_engine(params)
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit(Request(request_id=0, seq_len=10, seed=0, deadline=0.0))
+
+
+def test_submit_infeasible_shed(params):
+    holder = [0.0]
+    eng = make_engine(params, holder, shed=True)
+    res = eng.submit(Request(request_id=0, seq_len=10, seed=0, n_steps=4,
+                             deadline=2.0))  # 4 steps x 1.0 s/step > 2.0
+    assert res is not None and res.status == "shed"
+    assert res.reason == "infeasible"
+    assert res.deadline_met is False
+    assert eng.queued == 0
+    st = eng.stats()
+    assert st["shed_requests"] == 1 and st["deadline_misses"] == 1
+
+
+def test_submit_overload_shed(params):
+    eng = make_engine(params, shed=True, max_queue=1)
+    assert eng.submit(Request(request_id=0, seq_len=10, seed=0)) is None
+    res = eng.submit(Request(request_id=1, seq_len=10, seed=1))
+    assert res is not None and res.reason == "overload"
+    assert res.deadline_met is None          # no deadline involved
+    assert eng.queued == 1                   # the first request still queued
+
+
+def test_admission_deadline_shed(params):
+    """A deadline that was feasible on an idle engine but unreachable behind
+    the live backlog is shed at the admission boundary, reason='deadline'."""
+    holder = [0.0]
+    eng = make_engine(params, holder, max_batch=1, shed=True,
+                      sched_policy="fifo")
+    eng.submit(Request(request_id=0, seq_len=10, seed=0, n_steps=8))
+    # Feasible alone (2 steps <= 4.0) but request 0 owes 8 steps first.
+    assert eng.submit(Request(request_id=1, seq_len=10, seed=1, n_steps=2,
+                              deadline=4.0)) is None
+    out = drive(eng, holder)
+    shed = [r for r in out if r.status == "shed"]
+    done = [r for r in out if r.status == "ok"]
+    assert [r.request_id for r in shed] == [1]
+    assert shed[0].reason == "deadline"
+    assert [r.request_id for r in done] == [0]
+    assert len(out) == 2                     # zero silent losses
+
+
+def test_shed_disabled_runs_to_completion(params):
+    """shed=False (the default): hopeless deadlines still run — behavior is
+    pre-SLA, the miss is just recorded."""
+    holder = [0.0]
+    eng = make_engine(params, holder, max_batch=1)
+    eng.submit(Request(request_id=0, seq_len=10, seed=0, n_steps=8))
+    eng.submit(Request(request_id=1, seq_len=10, seed=1, n_steps=2,
+                       deadline=4.0))
+    out = drive(eng, holder)
+    assert sorted(r.request_id for r in out) == [0, 1]
+    assert all(r.status == "ok" for r in out)
+    by_id = {r.request_id: r for r in out}
+    assert by_id[1].deadline_met is False
+    st = eng.stats()
+    assert st["shed_requests"] == 0
+    assert st["deadline_misses"] == 1 and st["deadline_hits"] == 0
+
+
+def test_deadline_accounting(params):
+    holder = [0.0]
+    eng = make_engine(params, holder, max_batch=2)
+    eng.submit(Request(request_id=0, seq_len=10, seed=0, n_steps=4,
+                       deadline=100.0))
+    eng.submit(Request(request_id=1, seq_len=10, seed=1, n_steps=4))
+    out = {r.request_id: r for r in drive(eng, holder)}
+    assert out[0].deadline_met is True
+    assert out[1].deadline_met is None       # no deadline, no verdict
+    st = eng.stats()
+    assert st["deadline_hits"] == 1 and st["deadline_misses"] == 0
+    assert st["deadline_hit_rate"] == 1.0
+    assert st["sched_policy"] == "fifo"
+
+
+def test_steal_queued_least_urgent(params):
+    """least_urgent=True pops what the policy would serve LAST (rebalancing
+    must not steal the most urgent work off a worker)."""
+    eng = make_engine(params, shed=False, sched_policy="edf", max_batch=1)
+    eng.submit(Request(request_id=0, seq_len=10, seed=0))   # takes the slot
+    eng.step()
+    eng.submit(Request(request_id=1, seq_len=10, seed=1, deadline=50.0))
+    eng.submit(Request(request_id=2, seq_len=10, seed=2))               # none
+    eng.submit(Request(request_id=3, seq_len=10, seed=3, deadline=5.0))
+    (stolen,) = eng.steal_queued(1, least_urgent=True)
+    assert stolen[0].request_id == 2         # no deadline sorts dead last
+    (stolen2,) = eng.steal_queued(1, least_urgent=True)
+    assert stolen2[0].request_id == 1        # then the laxest deadline
+    assert eng.queued == 1
+
+
+def test_paused_counts_as_backlog(params):
+    """A parked request is still owed: it shows in paused/busy/remaining_work
+    (so routers keep counting it as load) and in the stats block."""
+    eng = make_engine(params, max_batch=1, n_steps=6,
+                      sched_policy="strict_priority", preempt=True)
+    eng.submit(Request(request_id=0, seq_len=10, seed=0, priority=0))
+    eng.step()
+    eng.submit(Request(request_id=1, seq_len=10, seed=1, n_steps=2,
+                       priority=1))
+    eng.step()                               # admission parks request 0
+    assert eng.paused == 1
+    assert eng.preempt_count == 1
+    assert eng.busy
+    assert eng.remaining_work() > 2          # paused remainder still counted
+    assert eng.stats()["paused"] == 1
+    out = {r.request_id: r for r in eng.run_all()}
+    assert sorted(out) == [0, 1]
+    assert out[0].preemptions == 1 and out[1].preemptions == 0
+
+
+# --------------------------------------------------------------------------- #
+# Cluster: per-class stats, shed accounting, EDF-aware rebalancing
+# --------------------------------------------------------------------------- #
+
+
+def make_cluster(params, n_workers=2, n_steps=3, max_batch=2, seq_len=10,
+                 **kw):
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    return ServingCluster(params, CFG, proc,
+                          SamplerConfig(method="theta_trapezoidal",
+                                        n_steps=n_steps, theta=0.5),
+                          n_workers=n_workers, max_batch=max_batch,
+                          seq_len=seq_len,
+                          solver_engine=_iid_masked_engine(), **kw)
+
+
+def test_cluster_per_class_stats_and_shed(params):
+    cl = make_cluster(params, sched_policy="edf", shed=True, step_time_s=1.0)
+    for i in range(4):
+        assert cl.submit(Request(request_id=i, seq_len=10, seed=i,
+                                 priority=0)) is None
+    for i in (4, 5):
+        assert cl.submit(Request(request_id=i, seq_len=10, seed=i,
+                                 priority=1, deadline=1000.0)) is None
+    # 3 steps x 1.0 s/step can never land inside 0.5 s: shed at Router.submit.
+    res = cl.submit(Request(request_id=6, seq_len=10, seed=6, priority=1,
+                            deadline=0.5))
+    assert res is not None and res.reason == "infeasible"
+    done = cl.run_all()
+    assert sorted(r.request_id for r in done) == list(range(6))
+    st = cl.stats()
+    assert st.shed_requests == 1
+    assert set(st.per_class) == {0, 1}
+    assert st.per_class[0]["served"] == 4
+    assert st.per_class[1]["served"] == 2 and st.per_class[1]["shed"] == 1
+    assert st.per_class[1]["deadline_hits"] == 2
+    assert st.per_class[1]["deadline_misses"] == 1  # the shed one
+    assert st.per_class[1]["deadline_hit_rate"] == pytest.approx(2 / 3)
+    assert st.deadline_hit_rate == pytest.approx(2 / 3)
+    assert st.per_class[0]["latency_p95_s"] >= st.per_class[0]["latency_p50_s"]
+
+
+def test_cluster_rebalance_with_sla_policy(params):
+    """Queue-level rebalancing over SLA-scheduled workers steals the LEAST
+    urgent entries and loses nothing."""
+    cl = make_cluster(params, policy="round_robin", rebalance=False,
+                      sched_policy="edf")
+    # Pile a mixed-urgency queue onto worker 0 while rebalance is off.
+    cl.submit(Request(request_id=0, seq_len=10, seed=0, n_steps=8))
+    cl.submit(Request(request_id=1, seq_len=10, seed=1, n_steps=8))
+    for i in range(2, 6):
+        cl.workers[0].engine.submit(
+            Request(request_id=i, seq_len=10, seed=i,
+                    deadline=None if i % 2 else 500.0))
+    cl.rebalance = True
+    results = cl.run_all()
+    assert cl.rebalanced > 0
+    assert sorted(r.request_id for r in results) == list(range(6))
+
+
+# --------------------------------------------------------------------------- #
+# Fabric: SLA fields survive replay; worker sheds settle the ledger
+# --------------------------------------------------------------------------- #
+
+
+def make_fabric(params, n_workers=2, n_steps=3, max_batch=2, seq_len=10,
+                **kw):
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    return ServingFabric(params, CFG, proc,
+                         SamplerConfig(method="theta_trapezoidal",
+                                       n_steps=n_steps, theta=0.5),
+                         n_workers=n_workers, max_batch=max_batch,
+                         seq_len=seq_len,
+                         solver_engine=_iid_masked_engine(), **kw)
+
+
+def test_fabric_replay_preserves_sla_fields(params):
+    """A request recovered from a killed worker is replayed with its ORIGINAL
+    priority and deadline (and original submit stamp), so deadline verdicts
+    span the failure, not the retry."""
+    fab = make_fabric(params, sched_policy="edf")
+    for i in range(6):
+        fab.submit(Request(request_id=i, seq_len=10, seed=i,
+                           priority=i % 2, deadline=1e6 if i % 2 else None))
+    fab.kill_worker(0, at_tick=2)
+    results = {r.request_id: r for r in fab.run_all()}
+    st = fab.stats()
+    assert st.recovered > 0 and st.in_flight == 0
+    assert sorted(results) == list(range(6))
+    for i, r in results.items():
+        assert r.status == "ok"
+        assert r.priority == i % 2
+        assert r.deadline_met is (True if i % 2 else None)
+    assert st.deadline_hits == 3 and st.deadline_misses == 0
+    assert set(st.per_class) == {0, 1}
+    assert st.per_class[1]["deadline_hit_rate"] == 1.0
+
+
+def test_fabric_worker_shed_settles_ledger(params):
+    """A worker-side shed is a deliberate drop: it settles the dispatch
+    ledger (no replay, no duplicate) and lands in the results exactly once."""
+    fab = make_fabric(params, n_workers=1, shed=True, step_time_s=1.0)
+    fab.submit(Request(request_id=0, seq_len=10, seed=0))
+    fab.submit(Request(request_id=1, seq_len=10, seed=1, deadline=0.5))
+    results = fab.run_all()
+    st = fab.stats()
+    assert sorted(r.request_id for r in results) == [0, 1]
+    by_id = {r.request_id: r for r in results}
+    assert by_id[0].status == "ok"
+    assert by_id[1].status == "shed" and by_id[1].reason == "infeasible"
+    assert st.shed_requests == 1
+    assert st.in_flight == 0 and st.recovered == 0
+    assert st.deadline_misses == 1
+
+
+def test_loopback_buffers_submit_time_sheds(params):
+    """LoopbackTransport never loses a submit-time shed: the worker engine
+    returns it synchronously, the transport buffers it, and the next tick
+    report delivers it like any other result."""
+    eng = make_engine(params, shed=True, step_time_s=1.0, max_batch=1)
+    tp = LoopbackTransport([PoolWorker(0, eng)])
+    tp.submit(0, Request(request_id=7, seq_len=10, seed=7, n_steps=4,
+                         deadline=1.0), submit_t=0.0)
+    reports = tp.tick()
+    (res,) = [r for r in reports[0].results if r.status == "shed"]
+    assert res.request_id == 7 and res.reason == "infeasible"
+    assert not any(r.status == "shed" for r in tp.tick()[0].results)
+
+
+# --------------------------------------------------------------------------- #
+# ProcessTransport: slow is not dead
+# --------------------------------------------------------------------------- #
+
+
+class _FakeConn:
+    """Scriptable pipe end: each tick pops one poll behavior (bool to return
+    or an exception to raise); recv() pops a canned reply."""
+
+    def __init__(self, polls, replies=()):
+        self.polls = collections.deque(polls)
+        self.replies = collections.deque(replies)
+        self.sent = []
+        self.poll_timeouts = []
+
+    def send(self, msg):
+        self.sent.append(msg)
+
+    def poll(self, timeout=None):
+        self.poll_timeouts.append(timeout)
+        action = self.polls.popleft()
+        if isinstance(action, Exception):
+            raise action
+        return action
+
+    def recv(self):
+        return self.replies.popleft()
+
+
+def _stub_transport(workers, tick_timeout_s=10.0):
+    tp = ProcessTransport.__new__(ProcessTransport)
+    tp.tick_timeout_s = tick_timeout_s
+    tp.tick_index = 0
+    tp._workers = workers
+    return tp
+
+
+def _hb(wid):
+    return Heartbeat(worker_id=wid, tick=0, queued=0, backlog=0,
+                     remaining_work=0)
+
+
+def test_process_transport_slow_worker_recovers_late(params):
+    """A worker that misses its reply window is SLOW, not dead: the tick is
+    left in flight, the next drain waits a wider (backoff) window, and the
+    reply that lands is delivered with Heartbeat.late=True."""
+    conn = _FakeConn(polls=[False, True],
+                     replies=[("tick", [], _hb(0))])
+    tp = _stub_transport({0: _ProcWorker(proc=None, conn=conn)})
+    r1 = tp.tick()
+    assert r1[0].heartbeat is None           # missed the window
+    w = tp._workers[0]
+    assert w.missed == 1 and w.awaiting and not w.pipe_dead
+    r2 = tp.tick()
+    hb = r2[0].heartbeat
+    assert hb is not None and hb.late is True
+    assert hb.tick == 2                      # delivery tick, not send tick
+    assert w.missed == 0 and not w.awaiting
+    # Exactly ONE tick command crossed the pipe: the retry drains, not resends.
+    assert conn.sent == [("tick",)]
+    # The second drain waited the widened window (2x after one miss).
+    assert conn.poll_timeouts[1] > tp.tick_timeout_s * 1.5
+
+
+def test_process_transport_dead_pipe_fenced(params):
+    """A pipe error means no reply can ever come: the worker is marked
+    pipe_dead, later ticks skip it instantly, and steals return empty."""
+    conn = _FakeConn(polls=[BrokenPipeError()])
+    tp = _stub_transport({0: _ProcWorker(proc=None, conn=conn)})
+    r1 = tp.tick()
+    assert r1[0].heartbeat is None
+    w = tp._workers[0]
+    assert w.pipe_dead and not w.awaiting
+    assert 0 not in tp.tick()                # fenced: not even polled
+    assert tp.steal_queued(0) == []
+    assert conn.sent == [("tick",)]          # nothing sent after the fence
+
+
+def test_heartbeat_late_defaults_false():
+    assert _hb(3).late is False
