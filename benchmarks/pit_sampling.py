@@ -1,0 +1,200 @@
+"""Parallel-in-time sampling: sequential rounds traded for pool width.
+
+Two legs, both gated (an assertion failure fails the section):
+
+* **toy** — the 8-state absorbing dense chain (every live state decays into
+  an absorber; the reverse-time hazard concentrates jumps near t = 0, so
+  wide Picard windows certify long identity prefixes per sweep).  For
+  theta-trapezoidal and tau-leaping at each step count the leg runs the
+  per-slot sequential baseline and the full-window PIT solver from the same
+  key: tokens must match **bit for bit** (TV parity is then free — the rows
+  report it anyway), and the gate is mean sweeps <= n_steps / 2 at the
+  reference step count — PIT finishes in at least 2x fewer sequential
+  rounds than stepping.
+
+* **serving** — the ServingEngine's low-load latency mode on a masked toy
+  model over a constant schedule (wide horizon: the reveal times cluster at
+  the end of reverse sampling, PIT's favourable regime).  Requests are
+  served one at a time (load << 0.25: latency == own service rounds) on a
+  virtual clock that advances one unit per executed sequential round, with
+  and without ``pit_window``.  Gates: p50 latency ratio >= 1.5x, and tokens
+  bit-identical between the sequential engine and PIT under every sweep
+  schedule (scheduler stride 1, 3, auto).
+
+    PYTHONPATH=src python -m benchmarks.pit_sampling
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from .common import csv_row
+
+import jax
+import numpy as np
+
+from repro.core import (
+    DenseCTMC,
+    DenseEngine,
+    SamplerConfig,
+    advance_many,
+    constant_schedule,
+    finalize,
+    get_solver,
+    init_pit_state,
+    init_state,
+    masked_process,
+    pit_finalize,
+    pit_run,
+)
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serve import Request, ServingEngine
+
+
+def _toy(n_states: int = 8, t_max: float = 8.0, seed: int = 0) -> DenseCTMC:
+    q = np.zeros((n_states, n_states))
+    q[n_states - 1, :n_states - 1] = 1.0
+    np.fill_diagonal(q, -q.sum(axis=0))
+    p0 = np.zeros(n_states)
+    p0[:n_states - 1] = np.random.default_rng(seed).dirichlet(
+        np.ones(n_states - 1) * 2.0)
+    return DenseCTMC(q=q, p0=p0, t_max=t_max)
+
+
+def _tv(tokens, exact: np.ndarray) -> float:
+    freq = np.bincount(np.asarray(tokens).reshape(-1), minlength=len(exact))
+    return float(0.5 * np.abs(freq / freq.sum() - exact).sum())
+
+
+def toy_leg(batch: int = 512, steps_grid=(16, 32), methods=("theta_trapezoidal",
+            "tau_leaping"), round_margin: float = 2.0,
+            seed: int = 7) -> list[str]:
+    toy = _toy()
+    engine = DenseEngine(toy)
+    key = jax.random.PRNGKey(seed)
+    rows = []
+    ref_steps = max(steps_grid)
+    for method in methods:
+        for steps in steps_grid:
+            cfg = SamplerConfig(method=method, n_steps=steps, theta=0.5)
+            t_end = float(np.asarray(engine.time_grid(cfg)[-1]))
+            exact = toy.marginal_np(t_end)
+
+            st = init_state(key, engine, cfg, batch=batch,
+                            solver=get_solver(method)(), per_slot=True)
+            st = advance_many(st, steps)
+            seq = np.asarray(finalize(st))
+
+            t0 = time.time()
+            state = pit_run(init_pit_state(key, engine, cfg, batch=batch))
+            pit = np.asarray(pit_finalize(state))
+            us = (time.time() - t0) * 1e6
+
+            assert (pit == seq).all(), (
+                f"{method} T={steps}: PIT tokens diverge from sequential")
+            sweeps = float(np.asarray(state.sweeps).mean())
+            ratio = steps / sweeps
+            rows.append(csv_row(
+                f"pit_sampling/toy/{method}/steps{steps}", us,
+                f"mean_sweeps={sweeps:.2f},round_ratio={ratio:.2f},"
+                f"tv={_tv(pit, exact):.4f},bitpar=True"))
+            if steps == ref_steps:
+                assert ratio >= round_margin, (
+                    f"{method} T={steps}: {sweeps:.2f} mean sweeps is only "
+                    f"{ratio:.2f}x under sequential; gate {round_margin}x")
+                rows.append(csv_row(
+                    f"pit_sampling/toy/{method}/round_gate", 0.0,
+                    f"ok,round_ratio={ratio:.2f}"))
+    return rows
+
+
+def _drive(eng, clock) -> list:
+    """run_all on the virtual clock: one unit per executed sequential round
+    (pool steps for sequential slots, Picard sweeps for PIT runs)."""
+    out = []
+    while eng.busy:
+        before = eng.global_steps + eng.pit_sweep_rounds
+        out.extend(eng.step())
+        clock[0] += float(eng.global_steps + eng.pit_sweep_rounds - before)
+    return out
+
+
+def serving_leg(n_requests: int = 6, n_steps: int = 32, window: int = 8,
+                seq_len: int = 16, latency_margin: float = 1.5,
+                seed: int = 0) -> list[str]:
+    cfg = ModelConfig(name="pit-bench", family="dense", n_layers=2,
+                      d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                      d_ff=128, vocab_size=23, dtype="float32")
+    # Wide constant-rate horizon: reveals concentrate late in reverse time,
+    # the regime where sweeps certify long prefixes (cf. the toy leg).
+    process = masked_process(cfg.vocab_size, constant_schedule(t_max=12.0))
+    params, _ = init_params(jax.random.PRNGKey(seed), cfg)
+    sampler = SamplerConfig(method="theta_trapezoidal", n_steps=n_steps,
+                            theta=0.5)
+
+    def serve(**engine_kw):
+        clock = [0.0]
+        eng = ServingEngine(params, cfg, process, sampler, max_batch=window,
+                            seq_len=seq_len, finalize_batch=1,
+                            clock=lambda: clock[0], **engine_kw)
+        lat, toks = [], {}
+        t0 = time.time()
+        # One request at a time: the low-load regime where latency is pure
+        # service rounds (offered load << 0.25 of the pool).
+        for i in range(n_requests):
+            eng.submit(Request(request_id=i, seq_len=seq_len, seed=i,
+                               time_parallel=True))
+            for res in _drive(eng, clock):
+                lat.append(res.latency_s)
+                toks[res.request_id] = np.asarray(res.tokens)
+        return float(np.percentile(lat, 50)), toks, eng.stats(), \
+            (time.time() - t0) * 1e6
+
+    rows = []
+    p50_seq, toks_seq, _, us = serve()
+    rows.append(csv_row("pit_sampling/serve/sequential", us,
+                        f"served={len(toks_seq)},p50_rounds={p50_seq:.1f}"))
+
+    p50_pit = None
+    for stride in (1, 3, "auto"):
+        p50, toks, st, us = serve(pit_window=window,
+                                  scheduler_stride=stride)
+        assert st["pit_completed"] == n_requests, "PIT leg lost requests"
+        for i in range(n_requests):
+            assert (toks[i] == toks_seq[i]).all(), (
+                f"stride {stride}: request {i} tokens diverge from "
+                f"sequential serving")
+        if stride == 1:
+            p50_pit = p50
+        rows.append(csv_row(
+            f"pit_sampling/serve/pit_stride{stride}", us,
+            f"served={len(toks)},p50_rounds={p50:.1f},"
+            f"mean_sweeps={st['pit_mean_sweeps_per_request']:.2f},"
+            f"round_reduction={st['pit_round_reduction']:.2f},bitpar=True"))
+
+    ratio = p50_seq / p50_pit
+    assert ratio >= latency_margin, (
+        f"PIT p50 {p50_pit:.1f} rounds vs sequential {p50_seq:.1f}: "
+        f"{ratio:.2f}x < required {latency_margin}x")
+    rows.append(csv_row("pit_sampling/serve/latency_gate", 0.0,
+                        f"ok,p50_ratio={ratio:.2f}"))
+    return rows
+
+
+def run(batch: int = 512, n_requests: int = 6, full: bool = False) -> list[str]:
+    rows = toy_leg(batch=4096 if full else batch,
+                   steps_grid=(16, 32, 64) if full else (16, 32))
+    rows += serving_leg(n_requests=10 if full else n_requests)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("\n".join(run(full=args.full)))
+
+
+if __name__ == "__main__":
+    main()

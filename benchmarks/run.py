@@ -20,6 +20,7 @@ EXPERIMENTS.md-scale numbers.
   serve_fabric       -> multi-host fabric failure recovery / req/s retention
   serve_sla          -> SLA scheduling: EDF+preemption+shed vs fifo overload
   adaptive_stepping  -> adaptive theta pair: TV-vs-NFE + dynamic-NFE serving
+  pit_sampling       -> parallel-in-time: round compression + low-load latency
 """
 from __future__ import annotations
 
@@ -97,6 +98,7 @@ def main() -> None:
         adaptive_stepping,
         image_nfe,
         kernels_bench,
+        pit_sampling,
         roofline_report,
         serve_throughput,
         text_nfe,
@@ -148,6 +150,11 @@ def main() -> None:
         # TV-vs-NFE parity gate + the dynamic-NFE serving gate (fixed mean
         # NFE / adaptive mean NFE >= 1.3x on a mixed-tolerance batch).
         "adaptive_stepping": lambda: adaptive_stepping.run(full=args.full),
+        # Parallel-in-time gates: bit parity + >= 2x fewer sequential rounds
+        # on the toy, >= 1.5x p50 latency at low load in serving.  Own
+        # section so the pit-smoke CI job's `--sections pit_sampling` run
+        # merges into BENCH_solvers.json without clobbering other rows.
+        "pit_sampling": lambda: pit_sampling.run(full=args.full),
     }
     if args.list_sections:
         print("\n".join(sections))

@@ -93,6 +93,17 @@ from .adaptive import (
     ErrorEstimator,
     StepController,
 )
+from .pit import (
+    PITState,
+    PITTauLeapSolver,
+    PITThetaTrapezoidalSolver,
+    init_pit_state,
+    pit_finalize,
+    pit_run,
+    pit_supported,
+    pit_sweep,
+    pit_sweeps,
+)
 
 __all__ = [
     # registry
@@ -115,6 +126,10 @@ __all__ = [
     # adaptive stepping
     "AdaptiveThetaTrapezoidalSolver", "ControllerState", "ErrorEstimator",
     "StepController",
+    # parallel-in-time
+    "PITState", "init_pit_state", "pit_sweep", "pit_sweeps", "pit_run",
+    "pit_finalize", "pit_supported",
+    "PITThetaTrapezoidalSolver", "PITTauLeapSolver",
     # entrypoint
     "sample", "SampleResult",
     # legacy wrappers

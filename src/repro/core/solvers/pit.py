@@ -1,0 +1,374 @@
+"""Parallel-in-time (Picard) trajectory solver: sweeps over all time-slices.
+
+Sequential stepping pays ``n_steps`` score-network rounds of latency per
+trajectory even when the batch is one row wide.  The parallel-in-time (PIT)
+family (cf. *Accelerating Discrete Diffusion Models with Parallel-In-Time
+Sampling*, arXiv:2607.00773) instead maintains the WHOLE trajectory
+``x_0 .. x_T`` as one batched state and refines it with Jacobi/Picard sweeps:
+one sweep applies every per-step map
+
+    x_{i+1} <- Phi_i(x_i)      for all i at once, from the previous iterate,
+
+through a single batched forward — per-row ``t``/``dt`` are already runtime
+operands of the solver stack (and of the fused kernel), so all slices share
+one compile.  Latency is then ``sweeps`` sequential rounds instead of
+``n_steps``; the extra width fills otherwise-idle pool slots.
+
+**Why the fixed point is the sequential trajectory, bitwise.**  Each slice's
+step key is ``fold_in(loop_key, i)`` — *fixed across sweeps*, and exactly the
+key the sequential per-slot loop folds for step ``i`` (``fold_key_slices``).
+Each slice's (t0, t1) comes from the same closed-form grid law
+(:func:`~.state.slot_interval`).  So the per-step maps ``Phi_i`` are the
+*same deterministic functions* the sequential path composes, and the
+sequential trajectory is the unique fixed point of a sweep.  Convergence is
+detected structurally, not by tolerance:
+
+* slice 0 of the window is always exact (it starts as the prior / the last
+  retired slice);
+* after a sweep, if the first ``p`` window rows came back unchanged they
+  already held their exact values, and row ``p + 1`` — computed from exact
+  row ``p`` — is NOW exact.  So every sweep certifies (and retires) at least
+  ``min(p + 1, window)`` slices;
+* retiring >= 1 slice per sweep bounds the sweep count by ``n_steps`` — PIT
+  is never *more* sequential rounds than stepping — while shared-noise
+  coupling (a masked slice's jump decision thins against an analytic
+  intensity, so many maps coalesce after few iterates) typically certifies
+  long prefixes per sweep.
+
+Because retired slices carry exact sequential values regardless of how wide
+the window was or how many sweeps ran, the final tokens are bit-identical to
+the sequential trajectory — and therefore invariant across sweep schedules
+and window placements (the serving layer's determinism bar).
+
+Two consumption modes over one :class:`PITState`:
+
+* **full window** (``window = n_steps``): the registered whole-trajectory
+  solvers ``pit_theta_trapezoidal`` / ``pit_tau_leap`` run
+  :func:`pit_run` to convergence — drop-in ``sample()`` methods;
+* **sliding window** (``window < n_steps``): a fixed window of ``W`` slices
+  refines while the converged prefix retires and fresh tail slices enter by
+  constant extrapolation — constant memory in ``n_steps``, and what the
+  ``ServingEngine`` consumes (``window`` = the free slots it can fill).
+
+``window = 1`` degenerates *exactly* to sequential stepping: each sweep can
+only certify the single freshly computed slice, so sweeps == steps and every
+intermediate state matches the sequential loop bit-for-bit.
+
+Sweeps mirror ``advance_many``'s execution discipline: :func:`pit_sweeps` is
+a donated jitted ``lax.scan`` over :func:`pit_sweep` (treat the call as
+consuming the input state), and :func:`pit_run` a donated jitted
+``lax.while_loop``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import Solver
+from .registry import get_solver, register_solver
+from .rng import fold_key_slices
+from .state import _intern_context, _slot_prior, slot_interval
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------------- #
+# PITState pytree
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class PITState:
+    """A batch of N trajectories, each holding a window of W + 1 time-slices.
+
+    ``traj[n, 0]`` is the last *certified* slice ``x_{lo[n]}`` (the prior at
+    init); rows ``1 .. W`` hold the current iterates of
+    ``x_{lo + 1} .. x_{lo + W}``.  A trajectory is converged once
+    ``lo == target``, at which point ``traj[n, 0]`` is the final canvas
+    ``x_T`` — bit-identical to sequential stepping under the same key.
+    """
+
+    #: slice window per trajectory, [N, W + 1, ...] (last dims = canvas dims).
+    traj: Array
+    #: certified prefix length per trajectory, [N] — slices 0..lo are exact.
+    lo: Array
+    #: sweeps executed while unconverged, [N] (the realized sequential rounds).
+    sweeps: Array
+    #: total step count T per trajectory, [N].
+    target: Array
+    #: per-trajectory loop keys, [N] — the sequential fold's key, verbatim.
+    rng: jax.Array
+    #: shared backward grid [n_steps + 1]; only the endpoints are consulted
+    #: (the per-slice intervals come from the closed-form grid law).
+    times: Array
+    #: solver.prepare() output (None for the schemes PIT supports today).
+    aux: Any
+    #: run context (static, identity-hashed) — same object the sequential
+    #: per-slot state would carry.
+    ctx: Any
+    #: static window width W.
+    window: int
+
+
+jax.tree_util.register_pytree_node(
+    PITState,
+    lambda s: ((s.traj, s.lo, s.sweeps, s.target, s.rng, s.times, s.aux),
+               (s.ctx, s.window)),
+    lambda meta, ch: PITState(traj=ch[0], lo=ch[1], sweeps=ch[2], target=ch[3],
+                              rng=ch[4], times=ch[5], aux=ch[6],
+                              ctx=meta[0], window=meta[1]),
+)
+
+
+def pit_supported(solver, config=None) -> Optional[str]:
+    """None if ``solver`` can run parallel-in-time, else the reason it can't.
+
+    PIT re-applies ``solver.step`` at fixed per-slice keys, so it needs a
+    stepwise solver whose step math is deterministic given (key, x, t0, t1, i)
+    — adaptive solvers re-plan their own grid per sweep (the fixed-point
+    argument breaks), and whole-trajectory solvers have no per-step map.
+    """
+    if not getattr(solver, "supports_stepwise", True):
+        return "whole-trajectory solver has no per-step map"
+    if getattr(solver, "adaptive", False):
+        return "adaptive solvers re-plan their grid; no fixed per-slice maps"
+    return None
+
+
+def init_pit_state(
+    key: jax.Array,
+    engine,
+    config,
+    batch: int,
+    seq_len: Optional[int] = None,
+    *,
+    window: Optional[int] = None,
+    n_steps: Optional[int] = None,
+    solver=None,
+    slot_keys: Optional[jax.Array] = None,
+) -> PITState:
+    """Build the sweep-0 state: every window row = the t = t_max prior.
+
+    Key discipline matches the sequential per-slot path exactly: ``key`` is
+    split into one key per trajectory and fed through the engine prior
+    (``init_state(per_slot=True)``'s derivation), so a converged PIT batch is
+    bit-identical to a per-slot sequential batch initialized from the same
+    ``key``.  Pass ``slot_keys`` (a [batch] key batch) instead to use
+    pre-derived per-trajectory keys verbatim — the ``admit_slot`` discipline,
+    which is how the serving layer gets request-key parity.
+
+    ``n_steps`` overrides the config's step count (per-request budgets);
+    like ``admit_slot``, an override requires aux-free, budget-agnostic
+    solvers.  ``window`` defaults to the full ``n_steps`` (no sliding).
+    """
+    if solver is None:
+        solver = get_solver(config.method)()
+    reason = pit_supported(solver, config)
+    if reason is not None:
+        raise ValueError(
+            f"solver {getattr(solver, 'name', type(solver).__name__)!r} "
+            f"cannot run parallel-in-time: {reason}")
+    configure = getattr(engine, "configure", None)
+    if configure is not None:
+        engine = configure(config)
+    ctx = _intern_context(solver, engine, config)
+    times = engine.time_grid(config)
+    aux = solver.prepare(engine, config)
+    t = config.n_steps if n_steps is None else n_steps
+    if t != config.n_steps:
+        if aux is not None or not getattr(solver, "supports_step_budgets",
+                                          True):
+            raise ValueError(
+                f"solver {config.method!r} bakes config.n_steps into its "
+                "per-step math or aux; PIT n_steps overrides are not "
+                "supported")
+    w = t if window is None else min(int(window), t)
+    if w < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    if slot_keys is None:
+        slot_keys = jax.random.split(key, batch)
+    x0, loop_keys = jax.vmap(
+        lambda k: _slot_prior(engine, k, seq_len))(slot_keys)
+    # Constant-in-time initial guess: every window row starts at the prior.
+    traj = jnp.repeat(x0[:, None], w + 1, axis=1)
+    return PITState(
+        traj=traj,
+        lo=jnp.zeros((batch,), jnp.int32),
+        sweeps=jnp.zeros((batch,), jnp.int32),
+        target=jnp.full((batch,), t, jnp.int32),
+        rng=loop_keys,
+        times=times,
+        aux=aux,
+        ctx=ctx,
+        window=w,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# The sweep
+# --------------------------------------------------------------------------- #
+
+
+def pit_sweep(state: PITState) -> PITState:
+    """One Picard sweep: evaluate all window slices through ONE batched step,
+    certify + retire the converged prefix, slide the window.
+
+    Jit-safe with the state as the only argument (the context rides in the
+    pytree's static aux).  Converged trajectories (``lo == target``) pass
+    through unchanged — their rows ride as masked padding, exactly like
+    drained slots under the sequential ``advance``.
+    """
+    ctx = state.ctx
+    w = state.window
+    n = state.traj.shape[0]
+    canvas_dims = state.traj.ndim - 2
+
+    # Step index of each window row: row j (1-based) applies Phi_{lo + j - 1}.
+    i = state.lo[:, None] + jnp.arange(w)[None, :]          # [N, W]
+    active = i < state.target[:, None]
+    i_c = jnp.minimum(i, state.target[:, None] - 1)
+    # Fixed per-(trajectory, slice) keys: the sequential fold, verbatim.
+    keys = fold_key_slices(state.rng, i_c)                  # [N * W]
+    tgt = jnp.broadcast_to(state.target[:, None], i.shape).reshape(-1)
+    t0, t1 = slot_interval(state.times, ctx.config, i_c.reshape(-1), tgt)
+
+    # All slices of all trajectories flattened onto the step's batch axis —
+    # one forward, one compile, per-row t/dt runtime operands.
+    x_in = state.traj[:, :w].reshape((n * w,) + state.traj.shape[2:])
+    extra = {"valid": active.reshape(-1)} if ctx.passes_valid else {}
+    x_out = ctx.solver.step(keys, ctx.engine, x_in, t0, t1, ctx.config,
+                            i=i_c.reshape(-1), aux=state.aux, **extra)
+
+    old = state.traj[:, 1:]
+    x_out = x_out.reshape(old.shape)
+    keep = active.reshape(active.shape + (1,) * canvas_dims)
+    x_out = jnp.where(keep, x_out, old)
+
+    # Certification: unchanged prefix rows already held their exact values,
+    # and the row after the prefix was just computed from an exact input.
+    changed = ((x_out != old).reshape(n, w, -1).any(axis=-1)) & active
+    p = jnp.cumprod(1 - changed.astype(jnp.int32), axis=1).sum(axis=1)
+    rem = state.target - state.lo
+    m = jnp.minimum(jnp.minimum(p + 1, w), rem)             # 0 once converged
+
+    # Slide: new row r = old row r + m; overflow rows clip to the last row —
+    # constant extrapolation seeds the fresh tail slices entering the window.
+    traj = jnp.concatenate([state.traj[:, :1], x_out], axis=1)
+    traj = jax.vmap(
+        lambda tr, mm: tr[jnp.clip(jnp.arange(w + 1) + mm, 0, w)])(traj, m)
+
+    unconverged = (state.lo < state.target).astype(jnp.int32)
+    return dataclasses.replace(
+        state, traj=traj, lo=state.lo + m, sweeps=state.sweeps + unconverged)
+
+
+@functools.partial(jax.jit, static_argnames="k", donate_argnums=0)
+def _sweep_scan(state: PITState, k: int) -> PITState:
+    state, _ = jax.lax.scan(lambda s, _: (pit_sweep(s), None), state, None,
+                            length=k)
+    return state
+
+
+def pit_sweeps(state: PITState, k: int) -> PITState:
+    """``k`` sweeps as ONE device launch — ``advance_many``'s scan discipline.
+
+    The input state's buffers are donated: treat the call as consuming and
+    keep using the returned state.  ``k`` is static; each distinct sweep
+    count compiles once per (context, window, batch) triple.
+    """
+    if k < 1:
+        raise ValueError(f"pit_sweeps requires k >= 1, got {k}")
+    return _sweep_scan(state, k)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _run_to_convergence(state: PITState) -> PITState:
+    return jax.lax.while_loop(
+        lambda s: jnp.any(s.lo < s.target), pit_sweep, state)
+
+
+def pit_run(state: PITState) -> PITState:
+    """Sweep until every trajectory converges (``lo == target``).
+
+    Terminates in at most ``max(target)`` sweeps — each sweep certifies at
+    least one slice per unconverged trajectory.  Donates the input state.
+    """
+    return _run_to_convergence(state)
+
+
+def pit_finalize(state: PITState) -> Array:
+    """Engine finalize pass over the converged canvases (``traj[:, 0]``)."""
+    ctx = state.ctx
+    return ctx.engine.finalize(state.traj[:, 0], state.times[-1])
+
+
+def sweep_cache_size() -> int:
+    """Compiled ``pit_sweeps`` executables alive in this process (the
+    ``advance_cache_size`` convention — compile-count guards in tests)."""
+    return _sweep_scan._cache_size()
+
+
+# --------------------------------------------------------------------------- #
+# Registered whole-trajectory solvers
+# --------------------------------------------------------------------------- #
+
+
+class _PITSolver(Solver):
+    """Whole-trajectory parallel-in-time wrapper over a registered base scheme.
+
+    ``run()`` integrates by full-window Picard sweeps to convergence instead
+    of sequential stepping — tokens are bit-identical to the base scheme's
+    stepwise path under the same key (the per-slot parity family, not the
+    lockstep one: PIT is a per-trajectory-key discipline).  ``run_nfe``
+    reports the sequential worst case (``n_steps`` rounds); the realized
+    sweep count is data-dependent — drive :func:`init_pit_state` /
+    :func:`pit_run` directly to observe it (benchmarks do).
+    """
+
+    base_method = ""
+    supports_stepwise = False
+    supports_step_budgets = True
+    #: introspection flag for registry tables: refines the whole trajectory
+    #: jointly, trading sequential rounds for batch width.
+    parallel = True
+
+    @classmethod
+    def validate(cls, config) -> None:
+        get_solver(cls.base_method).validate(config)
+
+    def run(self, key, engine, config, batch, seq_len=None, trace_fn=None):
+        if trace_fn is not None:
+            raise ValueError(
+                f"{self.name} refines all steps jointly and does not support "
+                "per-step tracing")
+        base = get_solver(self.base_method)()
+        state = init_pit_state(key, engine, config, batch, seq_len,
+                               solver=base)
+        state = pit_run(state)
+        return pit_finalize(state), None
+
+    def step(self, key, engine, x, t0, t1, config, *, i=None, aux=None,
+             valid=None):
+        raise ValueError(
+            f"{self.name} has no sequential per-step form; use sample()/"
+            "run(), or drive pit_sweep/pit_sweeps on an init_pit_state")
+
+
+@register_solver("pit_theta_trapezoidal")
+class PITThetaTrapezoidalSolver(_PITSolver):
+    """Parallel-in-time theta-trapezoidal (second order, 2 NFE per round)."""
+
+    base_method = "theta_trapezoidal"
+    nfe_per_step = 2
+
+
+@register_solver("pit_tau_leap")
+class PITTauLeapSolver(_PITSolver):
+    """Parallel-in-time first-order tau-leaping baseline."""
+
+    base_method = "tau_leaping"
+    nfe_per_step = 1

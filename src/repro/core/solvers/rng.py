@@ -44,6 +44,29 @@ def fold_key(key: jax.Array, data: Array) -> jax.Array:
     return jax.vmap(jax.random.fold_in)(key, data)
 
 
+def fold_key_slices(key: jax.Array, data: Array) -> jax.Array:
+    """Per-(slot, slice) step keys for parallel-in-time sweeps.
+
+    ``key`` is a per-slot key batch [N]; ``data`` is an [N, W] grid of step
+    indices (one window of W time-slices per slot).  Returns a flat [N * W]
+    key batch where row ``n * W + j`` is ``fold_in(key[n], data[n, j])`` —
+    exactly the key the *sequential* per-slot loop would fold for step
+    ``data[n, j]`` of slot ``n``.  A parallel-in-time sweep that evaluates
+    all W slices through one batched forward therefore consumes the very
+    same per-step streams as sequential stepping, which is what makes a
+    converged trajectory bit-identical to the sequential one (and, via
+    ``rbits`` on the flat batch, seeds the fused kernel's counter-RNG with
+    per-(slot, slice) row seeds — distinct slices get distinct seeds, never
+    distinct counters; see ``kernels/prng.py``).
+    """
+    if not is_batched_key(key):
+        raise ValueError("fold_key_slices requires a per-slot key batch")
+    data = jnp.asarray(data)
+    n, w = data.shape
+    rep = jnp.repeat(key, w, axis=0)  # [N * W] (slot n's key, W times)
+    return fold_key(rep, data.reshape(-1))
+
+
 def _per_slot(draw, key: jax.Array, shape: tuple):
     """Row-independent draw: row b of the [B, ...] result comes from key[b]."""
     return jax.vmap(lambda k: draw(k, shape[1:]))(key)

@@ -233,19 +233,27 @@ def init_state(
     )
 
 
-def _slot_interval(state: SolverState, config, i: Array, target: Array):
+def slot_interval(times: Array, config, i: Array, target: Array):
     """Per-slot (t0, t1): step i of a target-step grid over [t_max, t_stop].
 
     Evaluates the config's grid law in closed form so every slot can walk a
     grid of its own resolution (per-request NFE budgets) without materializing
-    per-slot time arrays.
+    per-slot time arrays.  Shared verbatim by the sequential per-slot
+    ``advance`` and the parallel-in-time sweeps (``pit.py``): both paths
+    stepping the same (i, target) pair over the same ``times`` endpoints is
+    what makes a converged parallel-in-time trajectory bit-identical to the
+    sequential one.
     """
-    t_hi = state.times[0]
-    t_lo = state.times[-1]
+    t_hi = times[0]
+    t_lo = times[-1]
     m = target.astype(jnp.float32)
     u0 = grid_fraction(i.astype(jnp.float32) / m, config.grid)
     u1 = grid_fraction((i.astype(jnp.float32) + 1.0) / m, config.grid)
     return t_hi - (t_hi - t_lo) * u0, t_hi - (t_hi - t_lo) * u1
+
+
+def _slot_interval(state: SolverState, config, i: Array, target: Array):
+    return slot_interval(state.times, config, i, target)
 
 
 def advance(state: SolverState) -> SolverState:

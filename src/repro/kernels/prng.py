@@ -35,7 +35,13 @@ collision probability to the 2^64 birthday bound (~1e-9 at 2^18 rows).
 Counter layout per row: ctr 0 is the thinning uniform; ctr ``1 + c`` is the
 Gumbel for vocab column ``c``.  Distinct jump updates must use distinct row
 seeds (the solver layer derives them from its per-step PRNG keys via
-``jax.random.bits``), never distinct counters.
+``jax.random.bits``), never distinct counters.  This covers multi-*slice*
+batches too: a parallel-in-time sweep (``core.solvers.pit``) evaluates W time
+slices of one trajectory through a single kernel launch by folding each slice's
+step index into the slot key first (``rng.fold_key_slices``) and drawing row
+seeds from the folded keys — slice j's rows therefore carry the *same* seeds
+the sequential per-step loop would have used for step j, which is what makes a
+converged parallel trajectory bit-identical to sequential stepping.
 """
 from __future__ import annotations
 

@@ -26,6 +26,18 @@ path); ``--fabric process`` runs one engine-owning OS process per worker.
 ``--kill-worker ID@TICK`` (repeatable) crash-injects mid-run: the dead
 worker's requests are replayed with their original (seed, request_id) keys,
 so served tokens are bit-identical to the failure-free run.
+
+Parallel-in-time low-load mode trades idle pool width for per-request
+latency — a ``--time-parallel`` request claims ``--pit-window`` slots and
+refines its whole trajectory by Picard sweeps through the same fused kernel,
+finishing in fewer sequential rounds than solver steps with bit-identical
+tokens:
+
+    ... --pit-window 8 --time-parallel --requests 2
+
+``--salvage`` makes deadline shedding work-conserving: estimated-unreachable
+requests park in a salvage queue and are still served if capacity frees
+before they truly expire.
 """
 from __future__ import annotations
 
@@ -164,6 +176,22 @@ def main() -> None:
                     help="graceful overload degradation: drop requests whose "
                          "deadline provably cannot be met (surfaced as "
                          "Result(status='shed'), never silently lost)")
+    ap.add_argument("--salvage", action="store_true",
+                    help="work-conserving shedding: requests whose deadline "
+                         "looks unreachable park in a salvage queue instead "
+                         "of being dropped, served if capacity frees before "
+                         "they truly expire (implies nothing without --shed "
+                         "-- it refines the shed estimate path)")
+    ap.add_argument("--pit-window", type=int, default=0,
+                    help="parallel-in-time low-load mode: reserve this many "
+                         "pool slots per --time-parallel request and refine "
+                         "its whole trajectory window by Picard sweeps "
+                         "(tokens bit-identical to sequential serving; 0 = "
+                         "off)")
+    ap.add_argument("--time-parallel", action="store_true",
+                    help="mark every request time_parallel: eligible for the "
+                         "--pit-window latency mode when enough slots are "
+                         "free (falls back to sequential otherwise)")
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="per-request deadline in milliseconds after submit "
                          "(0 = no deadline); with --priority-mix only the "
@@ -186,12 +214,18 @@ def main() -> None:
     if not 0.0 <= args.priority_mix <= 1.0:
         ap.error("--priority-mix must be in [0, 1]")
 
+    if args.pit_window and args.run_to_completion:
+        ap.error("--pit-window needs the continuous compacted pool "
+                 "(drop --run-to-completion)")
+    if args.pit_window and args.dense_pool:
+        ap.error("--pit-window needs the compacted pool (drop --dense-pool)")
     engine_kw = dict(max_batch=args.max_batch, seq_len=args.seq_len,
                      scheduler_stride=stride, compact=not args.dense_pool,
                      finalize_batch=args.finalize_batch,
                      continuous=not args.run_to_completion,
                      sched_policy=args.sched_policy, preempt=args.preempt,
-                     shed=args.shed)
+                     shed=args.shed, salvage=args.salvage,
+                     pit_window=args.pit_window or None)
     mesh = make_host_mesh()
     with mesh:
         if args.fabric != "off":
@@ -229,7 +263,8 @@ def main() -> None:
                 else None
             requests.append(Request(request_id=i, seq_len=args.seq_len,
                                     seed=args.seed + i, rtol=args.rtol,
-                                    priority=prio, deadline=dl))
+                                    priority=prio, deadline=dl,
+                                    time_parallel=args.time_parallel))
         arrivals = (poisson_arrivals(args.requests, 1.0 / args.arrival_rate,
                                      seed=args.trace_seed)
                     if args.arrival_rate > 0 else None)
@@ -280,6 +315,20 @@ def main() -> None:
               f"{st.heartbeat_timeout} ticks), {st.deaths} deaths, "
               f"{st.recovered} requests replayed, {st.joins} joins, "
               f"{st.rebalanced} rebalanced")
+        if st.pit_requests or st.salvaged:
+            print(f"pit: {st.pit_completed}/{st.pit_requests} served "
+                  f"parallel-in-time ({st.pit_fallbacks} fallbacks, "
+                  f"{st.pit_sweeps} sweeps, "
+                  f"{st.pit_round_reduction:.2f}x round reduction), "
+                  f"{st.salvaged} salvaged")
+        if st.step_time_s is not None:
+            line = (f"calibrated step time {st.step_time_s * 1e3:.1f} ms "
+                    f"(EWMA over tick round-trips)")
+            if args.deadline_ms > 0:
+                line += (f"; --deadline-ms {args.deadline_ms:g} covers "
+                         f"~{args.deadline_ms / 1e3 / st.step_time_s:.0f} "
+                         f"steps")
+            print(line)
         for w in st.per_worker:
             state = ("live" if w["alive"]
                      else f"died tick {w['died_tick']}")
@@ -294,6 +343,12 @@ def main() -> None:
             print(f"adaptive: {st.accepted_steps} accepted / "
                   f"{st.rejected_steps} rejected steps, "
                   f"mean NFE/request {st.mean_nfe_per_request:.1f}")
+        if st.pit_requests or st.salvaged:
+            print(f"pit: {st.pit_completed}/{st.pit_requests} served "
+                  f"parallel-in-time ({st.pit_fallbacks} fallbacks, "
+                  f"{st.pit_sweeps} sweeps, "
+                  f"{st.pit_round_reduction:.2f}x round reduction), "
+                  f"{st.salvaged} salvaged")
         for w in st.per_worker:
             print(f"  worker {w['worker_id']}: served {w['served']}, "
                   f"occupancy {w['occupancy']:.1%}, "
@@ -313,6 +368,14 @@ def main() -> None:
                   f"{stats['rejected_steps']} rejected steps "
                   f"(reject rate {stats['reject_rate']:.1%}), "
                   f"mean NFE/request {stats['mean_nfe_per_request']:.1f}")
+        if stats.get("pit_requests") or stats.get("salvaged"):
+            print(f"pit[window {stats['pit_window']}]: "
+                  f"{stats['pit_completed']}/{stats['pit_requests']} served "
+                  f"parallel-in-time ({stats['pit_fallbacks']} fallbacks, "
+                  f"{stats['pit_sweep_rounds']} sweep rounds, "
+                  f"{stats['pit_round_reduction']:.2f}x round reduction, "
+                  f"mean {stats['pit_mean_sweeps_per_request']:.1f} "
+                  f"sweeps/request), {stats['salvaged']} salvaged")
     print("first sample head:", toks[0, :24].tolist())
 
 

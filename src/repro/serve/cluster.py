@@ -249,6 +249,19 @@ class ClusterStats:
     deadline_misses: int
     #: hits / (hits + misses); 1.0 when no request carried a deadline.
     deadline_hit_rate: float
+    #: work-conserving salvage: estimated-unreachable requests served anyway
+    #: on otherwise-idle capacity across the fleet.
+    salvaged: int
+    #: parallel-in-time serving across the fleet: requests launched / finished
+    #: time-parallel, requests that fell back to a sequential slot for lack of
+    #: window capacity, total realized sweeps, and the fleet-level sequential
+    #: round reduction (sum of PIT step budgets over realized sweeps; 0.0
+    #: when nothing ran time-parallel — never a division error).
+    pit_requests: int
+    pit_completed: int
+    pit_fallbacks: int
+    pit_sweeps: int
+    pit_round_reduction: float
     #: per-priority-class breakdown: ``{priority: {"served", "shed",
     #: "deadline_hits", "deadline_misses", "deadline_hit_rate",
     #: "latency_p50_s", "latency_p95_s"}}`` — the SLA gate's primary view.
@@ -439,6 +452,8 @@ class Router:
         per_worker = []
         paid = active = fin_rows = 0
         accepted = rejected = realized_nfe = served_w = preemptions = 0
+        salvaged = pit_req = pit_done = pit_fb = pit_sweeps = 0
+        pit_steps = 0
         for w in self.workers:
             st = w.engine.stats()
             paid += st["paid_slot_steps"]
@@ -449,6 +464,12 @@ class Router:
             realized_nfe += st.get("realized_nfe", 0)
             served_w += st["requests_served"]
             preemptions += st.get("preemptions", 0)
+            salvaged += st.get("salvaged", 0)
+            pit_req += st.get("pit_requests", 0)
+            pit_done += st.get("pit_completed", 0)
+            pit_fb += st.get("pit_fallbacks", 0)
+            pit_sweeps += st.get("pit_sweeps", 0)
+            pit_steps += st.get("pit_steps", 0)
             per_worker.append(dict(worker_id=w.worker_id, served=w.served,
                                    backlog=w.backlog,
                                    device=str(w.device) if w.device else None,
@@ -491,6 +512,13 @@ class Router:
             deadline_misses=misses,
             deadline_hit_rate=(hits / (hits + misses)) if (hits + misses)
                               else 1.0,
+            salvaged=salvaged,
+            pit_requests=pit_req,
+            pit_completed=pit_done,
+            pit_fallbacks=pit_fb,
+            pit_sweeps=pit_sweeps,
+            pit_round_reduction=(pit_steps / pit_sweeps) if pit_sweeps
+                                else 0.0,
             per_class=per_class,
             per_worker=per_worker,
         )

@@ -68,7 +68,30 @@ monolithic whole-batch run.  The engine also exposes an AR decode path
   are shed at ``submit()`` with ``reason="infeasible"``;
 * ``clock`` / ``step_time_s`` make deadline accounting testable: benchmarks
   inject a virtual step-unit clock and a unit step time, production uses the
-  wall clock and a per-step EWMA measured on the fly.
+  wall clock and a per-step EWMA measured on the fly;
+* ``salvage=True`` makes shedding **work-conserving**: a queued request whose
+  deadline is *estimated* unreachable (but not yet expired) is parked in a
+  salvage pool instead of shed outright, and still admitted if slots are
+  free after every feasible candidate has one — the estimate is pessimistic
+  under preemption/early finishes, so free capacity should never idle while
+  unexpired work waits.  Only a request whose deadline has truly passed
+  becomes ``Result(status="shed", reason="deadline")``; salvaged admissions
+  count on the ``salvaged`` scoreboard.
+
+**Parallel-in-time low-load mode** (``pit_window=W``): when a request is
+flagged ``time_parallel`` and the pool has >= W free slots, the engine serves
+it through :mod:`repro.core.solvers.pit` instead of stepping it sequentially —
+the request's whole time grid refines as one W-wide sliding window of Picard
+sweeps riding the reserved slots' capacity, finishing in ``sweeps`` scheduler
+rounds instead of ``n_steps`` (the realized count lands in
+``Result.sweeps``; tokens are bit-identical to sequential serving under the
+same request key, hence deterministic across sweep schedules and window
+placements).  Reserved slots are excluded from admission (``free_slots``)
+but still pad compaction buckets; paid-row accounting threads through
+``paid_slot_steps`` (W rows per sweep) so occupancy stays honest.  When the
+pool cannot spare a full window the request falls back to a sequential slot
+(``pit_fallbacks``).  PIT runs are never preempted, and a preempted
+sequential trajectory always resumes sequentially.
 """
 from __future__ import annotations
 
@@ -89,7 +112,10 @@ from repro.core import (
     budget_supported,
     finalize,
     get_solver,
+    init_pit_state,
     init_state,
+    pit_supported,
+    pit_sweeps,
     sample,
 )
 from repro.models import decode_step, denoise_logits, init_decode_state
@@ -142,6 +168,11 @@ class Request:
     #: scheduling priority class — higher wins under ``strict_priority``
     #: (and feeds per-class latency/deadline stats everywhere).
     priority: int = 0
+    #: serve this request parallel-in-time when the engine has ``pit_window``
+    #: set and enough free slots — ``sweeps`` scheduler rounds instead of
+    #: ``n_steps``, identical tokens.  A hint, not a demand: engines without
+    #: a window (or without the capacity right now) serve it sequentially.
+    time_parallel: bool = False
     #: lifecycle state, maintained by the engine.
     status: str = QUEUED
 
@@ -181,6 +212,10 @@ class Result:
     deadline_met: Optional[bool] = None
     #: times this request's trajectory was preempted (paused + resumed).
     preemptions: int = 0
+    #: parallel-in-time serving only: Picard sweeps the request's trajectory
+    #: took to converge — its realized *sequential* round count (``nfe`` is
+    #: then ``sweeps * nfe_per_step``); zero for sequentially served requests.
+    sweeps: int = 0
 
 
 #: a drained request waiting for its batched finalize forward: the slot is
@@ -195,6 +230,28 @@ class _PendingFinish:
     accepted: int = 0
     rejected: int = 0
     preemptions: int = 0
+    sweeps: int = 0
+
+
+#: a live parallel-in-time run: one request refining its whole time grid as a
+#: sliding window of Picard sweeps over ``len(slots)`` reserved pool slots.
+#: The PITState lives outside the SlotPool (its own [1, W + 1, ...] window
+#: buffer); the reserved slot ids are the capacity accounting — admission
+#: cannot hand them out while the run is live, but their frozen pool rows
+#: still pad compaction buckets.
+@dataclasses.dataclass
+class _PITRun:
+    req: Request
+    submit_t: float
+    admit_t: float
+    slots: List[int]
+    state: Any
+    #: the request's full step budget T (the sequential round count avoided).
+    steps: int
+    #: host mirrors of ``state.lo[0]`` / ``state.sweeps[0]``, refreshed once
+    #: per tick (the PIT analog of ``_steps_host``).
+    lo: int = 0
+    sweeps: int = 0
 
 
 #: a preempted trajectory parked in the engine's paused-store: the pool-row
@@ -269,7 +326,9 @@ class ServingEngine:
                  shed: bool = False,
                  max_queue: Optional[int] = None,
                  step_time_s: Optional[float] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 pit_window: Optional[int] = None,
+                 salvage: bool = False):
         if scheduler_stride == "auto":
             if auto_stride_max < 1:
                 raise ValueError(f"auto_stride_max must be >= 1, got "
@@ -309,9 +368,25 @@ class ServingEngine:
         self._sched = resolve_sched_policy(sched_policy)
         self._preempt = bool(preempt)
         self._shed = bool(shed)
+        self._salvage = bool(salvage)
         self._max_queue = max_queue
         self.step_time_s = step_time_s
         self._clock = clock
+        # Parallel-in-time low-load mode: window width, live runs, and the
+        # slot ids those runs have reserved (capacity accounting).
+        if pit_window is not None:
+            if not 2 <= pit_window <= max_batch:
+                raise ValueError(
+                    f"pit_window must be in [2, max_batch={max_batch}] "
+                    f"(width 1 is just sequential stepping), got {pit_window}")
+            if not continuous or not compact:
+                raise ValueError(
+                    "pit_window requires continuous=True and compact=True "
+                    "(PIT drains flow through the bucketed pending-finalize "
+                    "path)")
+        self._pit_window = pit_window
+        self._pit_runs: List[_PITRun] = []
+        self._pit_reserved: set = set()
         #: EWMA of measured wall seconds per solver step (feeds deadline
         #: feasibility when no explicit step_time_s is given).
         self._step_ewma: Optional[float] = None
@@ -330,6 +405,12 @@ class ServingEngine:
                 f"solver {sampler.method!r} integrates whole trajectories; "
                 "preemption requires a stepwise solver (there is no step "
                 "boundary to park a monolithic run at)")
+        if self._pit_window is not None:
+            reason = pit_supported(self._solver, sampler)
+            if reason is not None:
+                raise ValueError(
+                    f"pit_window requires a parallel-in-time-capable solver; "
+                    f"{sampler.method!r} cannot: {reason}")
         #: steps even a maximally lucky trajectory must run (deadline
         #: feasibility floor); refined below for adaptive solvers.
         self._min_steps_floor = 1
@@ -404,6 +485,15 @@ class ServingEngine:
         self.preempt_count = 0
         self.deadline_hits = 0
         self.deadline_misses = 0
+        #: estimated-unreachable requests served anyway on free capacity.
+        self.salvaged = 0
+        # parallel-in-time accounting (all-zero without pit_window)
+        self.pit_requests = 0
+        self.pit_completed = 0
+        self.pit_fallbacks = 0
+        self.pit_sweep_rounds = 0
+        self._pit_sweeps_total = 0
+        self._pit_steps_total = 0
 
     # ------------------------------------------------------------- lifecycle
     def validate(self, req: Request) -> None:
@@ -541,7 +631,10 @@ class ServingEngine:
             return queued + len(self.active_slots) * self.sampler.n_steps
         running = sum(self._slot_remaining(s) for s in self.active_slots)
         paused = sum(self._paused_remaining(p) for p in self._paused)
-        return queued + running + paused
+        # A live PIT run owes at most (steps - lo) more sweeps (each sweep
+        # retires >= 1 slice) — the honest worst-case round count.
+        pit = sum(r.steps - r.lo for r in self._pit_runs)
+        return queued + running + paused + pit
 
     def place(self, device) -> None:
         """Commit the engine's pool state to ``device`` (cluster workers pin
@@ -564,6 +657,16 @@ class ServingEngine:
 
     @property
     def free_slots(self) -> List[int]:
+        """Slots admission may hand out — excludes PIT-reserved capacity."""
+        return [s for s, r in enumerate(self._slot_req)
+                if r is None and s not in self._pit_reserved]
+
+    @property
+    def _pad_slots(self) -> List[int]:
+        """Unoccupied pool rows usable as compaction padding.  Includes the
+        PIT-reserved slots: their pool rows are frozen (the PIT window buffer
+        lives outside the pool), so they pad buckets as no-ops — only
+        *admission* must not touch them."""
         return [s for s, r in enumerate(self._slot_req) if r is None]
 
     @property
@@ -586,7 +689,7 @@ class ServingEngine:
         (the same shape the cluster Router exposes, so drivers can poll
         either)."""
         return bool(self._queue or self.active_slots or self._paused
-                    or self._pending)
+                    or self._pending or self._pit_runs)
 
     def _slot_budget(self, slot: int) -> int:
         req = self._slot_req[slot]
@@ -745,6 +848,7 @@ class ServingEngine:
         cands.sort(key=lambda c: self._sched.key(c[2], now))
 
         shed: List[Result] = []
+        salvage: List[tuple] = []
         if self._shed:
             st = self._step_time()
             free = len(self.free_slots)
@@ -762,21 +866,38 @@ class ServingEngine:
                     continue
                 finish_est = (now + wait_est
                               + self._cand_remaining(kind, payload) * st)
-                if now >= view.deadline_t or finish_est > view.deadline_t:
+                if now >= view.deadline_t:
+                    # Truly expired: the only case that sheds under salvage.
                     req = payload.req if kind == "p" else payload[0]
                     submit_t = (payload.submit_t if kind == "p"
                                 else payload[1])
                     shed.append(self._make_shed(req, submit_t, "deadline",
                                                 now))
+                elif finish_est > view.deadline_t:
+                    if self._salvage:
+                        # Estimated unreachable but not expired: park for the
+                        # post-fill salvage pass instead of dropping — the
+                        # estimate is pessimistic (preemption, early finishes,
+                        # PIT round compression all beat it).
+                        salvage.append((kind, payload, view))
+                    else:
+                        req = payload.req if kind == "p" else payload[0]
+                        submit_t = (payload.submit_t if kind == "p"
+                                    else payload[1])
+                        shed.append(self._make_shed(req, submit_t,
+                                                    "deadline", now))
                 else:
                     kept.append((kind, payload, view))
             cands = kept
 
-        for slot in self.free_slots:
-            if not cands:
-                break
+        while cands and self.free_slots:
             kind, payload, _ = cands.pop(0)
-            self._admit_into(slot, kind, payload, now)
+            if (kind == "q" and self._pit_window is not None
+                    and payload[0].time_parallel):
+                if self._start_pit(payload[0], payload[1], now):
+                    continue
+                self.pit_fallbacks += 1
+            self._admit_into(self.free_slots[0], kind, payload, now)
 
         if self._preempt and self._stepwise:
             while cands:
@@ -793,21 +914,109 @@ class ServingEngine:
                 self._park(victim)
                 self._admit_into(victim, kind, payload, now)
 
-        # Leftovers go back where they came from, original order preserved.
+        # Work-conserving salvage: capacity still free after every feasible
+        # candidate got a slot goes to the estimated-unreachable waiters
+        # rather than idling (they shed only once their deadline truly
+        # passes, on a later tick).  Salvage never preempts feasible work.
+        while salvage and self.free_slots:
+            kind, payload, _ = salvage.pop(0)
+            if (kind == "q" and self._pit_window is not None
+                    and payload[0].time_parallel
+                    and self._start_pit(payload[0], payload[1], now)):
+                self.salvaged += 1
+                continue
+            self._admit_into(self.free_slots[0], kind, payload, now)
+            self.salvaged += 1
+
+        # Leftovers go back where they came from, original order preserved
+        # (salvage leftovers after the feasible ones: they re-enter the shed
+        # check — and eventually expire — next tick).
+        leftovers = cands + salvage
         parked = self._paused  # entries _park appended during preemption
-        self._paused = [payload for kind, payload, _ in cands
+        self._paused = [payload for kind, payload, _ in leftovers
                         if kind == "p"] + parked
         self._queue = collections.deque(
-            payload for kind, payload, _ in cands if kind == "q")
+            payload for kind, payload, _ in leftovers if kind == "q")
         return shed
+
+    def _start_pit(self, req: Request, submit_t: float, now: float) -> bool:
+        """Launch ``req`` parallel-in-time across ``pit_window`` reserved free
+        slots.  Returns False (caller falls back to a sequential slot) when
+        the pool cannot spare a full window right now."""
+        steps = self.sampler.n_steps if req.n_steps is None else req.n_steps
+        w = min(self._pit_window, steps)
+        free = self.free_slots
+        if w < 2 or len(free) < w:
+            return False
+        # Same key discipline as SlotPool.admit: the request key drives the
+        # slot prior and the per-step folds verbatim, so tokens are
+        # bit-identical to sequential serving of the same request.
+        state = init_pit_state(
+            None, self._solver_engine, self.sampler, batch=1,
+            seq_len=self.seq_len, window=w,
+            n_steps=req.n_steps, solver=self._solver,
+            slot_keys=self.request_key(req)[None])
+        slots = free[:w]
+        self._pit_reserved.update(slots)
+        self._pit_runs.append(_PITRun(req=req, submit_t=submit_t,
+                                      admit_t=now, slots=slots, state=state,
+                                      steps=steps))
+        req.status = RUNNING
+        self.pit_requests += 1
+        return True
+
+    def _advance_pit(self) -> None:
+        """One tick of sweeps for every live PIT run; completed runs release
+        their reserved slots and join the pending-finalize buffer."""
+        if not self._pit_runs:
+            return
+        if self.scheduler_stride == "auto":
+            cap = (self.auto_stride_max if self._queue
+                   else max(1, self.auto_stride_max // 2))
+        else:
+            cap = self.scheduler_stride
+        live: List[_PITRun] = []
+        for run in self._pit_runs:
+            # Each sweep retires >= 1 slice, so (steps - lo) sweeps always
+            # suffice; pow-2 floor keeps distinct compiled scan lengths
+            # O(log), mirroring the auto-stride discipline.
+            k = max(1, min(run.steps - run.lo, cap))
+            k = 1 << (k.bit_length() - 1)
+            run.state = pit_sweeps(run.state, k)
+            self.pit_sweep_rounds += k
+            w = run.state.window
+            self._paid_slot_steps += w * k
+            # One small host fetch per run per tick — the PIT analog of the
+            # bucket step-counter fetch.
+            lo = int(run.state.lo[0])
+            run.sweeps = int(run.state.sweeps[0])
+            self._active_slot_steps += lo - run.lo
+            run.lo = lo
+            if lo < run.steps:
+                live.append(run)
+                continue
+            # Converged: traj[:, 0] is the final canvas — the row joins the
+            # batched finalize exactly like a sequential drain.
+            self._pit_reserved.difference_update(run.slots)
+            self.pit_completed += 1
+            self._pit_sweeps_total += run.sweeps
+            self._pit_steps_total += run.steps
+            self._pending.append(_PendingFinish(
+                req=run.req, submit_t=run.submit_t, admit_t=run.admit_t,
+                row=run.state.traj[0, 0], steps=run.steps,
+                sweeps=run.sweeps))
+        self._pit_runs = live
 
     def _make_result(self, req: Request, submit_t: float, admit_t: float,
                      finish_t: float, steps: int, tokens_row: np.ndarray,
                      accepted: int = 0, rejected: int = 0,
-                     preemptions: int = 0) -> Result:
+                     preemptions: int = 0, sweeps: int = 0) -> Result:
         req.status = FINISHED
         self.requests_served += 1
-        nfe = steps * self._solver.nfe_per_step
+        # A PIT-served request's latency-relevant NFE is its realized sweep
+        # count (each sweep = nfe_per_step forwards over the window); the
+        # window-width compute is priced in paid_slot_steps, not here.
+        nfe = (sweeps if sweeps else steps) * self._solver.nfe_per_step
         self._nfe_served += nfe
         deadline_met = None
         if req.deadline is not None:
@@ -828,6 +1037,7 @@ class ServingEngine:
             priority=req.priority,
             deadline_met=deadline_met,
             preemptions=preemptions,
+            sweeps=sweeps,
         )
 
     def _emit_slot(self, slot: int, finish_t: float, steps: int,
@@ -870,6 +1080,20 @@ class ServingEngine:
         remaining = max(1, min(remaining, cap))
         return 1 << (remaining.bit_length() - 1)
 
+    def _settle_pending(self, shed: List[Result]) -> List[Result]:
+        """End-of-tick pending-finalize policy: flush when the batch fills,
+        the engine idles (no sequential slots AND no PIT runs), or the oldest
+        drain has waited ``finalize_batch`` ticks — a long-running neighbor
+        must not head-of-line-block a finished request's result (and its
+        reported latency) indefinitely."""
+        if self._pending:
+            self._pending_age += 1
+            if (len(self._pending) >= self.finalize_batch
+                    or not (self.active_slots or self._pit_runs)
+                    or self._pending_age > self.finalize_batch):
+                return shed + self._flush_pending()
+        return shed
+
     def _flush_pending(self) -> List[Result]:
         """Finish every pending drained request in one bucketed finalize
         forward (slot-masked: only the drained rows run, padded to the
@@ -885,7 +1109,7 @@ class ServingEngine:
         out = [self._make_result(p.req, p.submit_t, p.admit_t, finish_t,
                                  p.steps, tokens[j], accepted=p.accepted,
                                  rejected=p.rejected,
-                                 preemptions=p.preemptions)
+                                 preemptions=p.preemptions, sweeps=p.sweeps)
                for j, p in enumerate(self._pending)]
         self._pending.clear()
         self._pending_age = 0
@@ -901,14 +1125,19 @@ class ServingEngine:
             return self._run_monolithic()
         shed = self._admit()
         active = self.active_slots
-        if not active:
+        if not active and not self._pit_runs:
             return shed + self._flush_pending()
+        if not active:
+            # PIT-only tick: no sequential slots to advance, but live runs
+            # still sweep (and may drain into the pending buffer).
+            self._advance_pit()
+            return self._settle_pending(shed)
         stride = self._tick_stride(active)
         self.last_stride = stride
         wall0 = time.perf_counter()
 
         if self.compact:
-            sub, perm = self._pool.advance_compacted(active, self.free_slots,
+            sub, perm = self._pool.advance_compacted(active, self._pad_slots,
                                                      stride)
             width = len(perm)
             # One host fetch of the bucket's step counters per tick; the
@@ -991,17 +1220,8 @@ class ServingEngine:
                               if self._adaptive else 0),
                     preemptions=self._slot_preempt[slot]))
                 self._slot_req[slot] = None
-            if self._pending:
-                # Flush when the batch fills, the pool idles, OR the oldest
-                # drain has waited finalize_batch ticks — a long-running
-                # neighbor must not head-of-line-block a finished request's
-                # result (and its reported latency) indefinitely.
-                self._pending_age += 1
-                if (len(self._pending) >= self.finalize_batch
-                        or not self.active_slots
-                        or self._pending_age > self.finalize_batch):
-                    return shed + self._flush_pending()
-            return shed
+            self._advance_pit()
+            return self._settle_pending(shed)
         if not done:
             return shed
         # Legacy dense pool: one whole-pool finalize forward per finishing
@@ -1039,7 +1259,8 @@ class ServingEngine:
         """Serve until the queue, every slot, every paused snapshot, and the
         pending-finalize buffer have drained (completion order)."""
         results: List[Result] = []
-        while self._queue or self.active_slots or self._paused:
+        while (self._queue or self.active_slots or self._paused
+               or self._pit_runs):
             results.extend(self.step())
         results.extend(self._flush_pending())
         return results
@@ -1060,8 +1281,10 @@ class ServingEngine:
         return {
             "requests_served": served,
             "global_steps": self.global_steps,
-            # in-grid solver forward launches + the batched finalize launches
-            "score_evals": (self.global_steps * self._solver.nfe_per_step
+            # in-grid solver forward launches (sequential strides + PIT sweep
+            # rounds) + the batched finalize launches
+            "score_evals": ((self.global_steps + self.pit_sweep_rounds)
+                            * self._solver.nfe_per_step
                             + self.finalize_passes),
             "finalize_passes": self.finalize_passes,
             "finalize_rows": self._finalize_rows,
@@ -1096,6 +1319,27 @@ class ServingEngine:
                 self.deadline_hits
                 / (self.deadline_hits + self.deadline_misses)
                 if (self.deadline_hits + self.deadline_misses) else 1.0),
+            # work-conserving shed salvage
+            "salvage": self._salvage,
+            "salvaged": self.salvaged,
+            # parallel-in-time serving (all-zero without pit_window; ratios
+            # division-safe on idle/never-ticked engines)
+            "pit_window": self._pit_window or 0,
+            "pit_requests": self.pit_requests,
+            "pit_completed": self.pit_completed,
+            "pit_active": len(self._pit_runs),
+            "pit_fallbacks": self.pit_fallbacks,
+            "pit_sweep_rounds": self.pit_sweep_rounds,
+            "pit_sweeps": self._pit_sweeps_total,
+            "pit_steps": self._pit_steps_total,
+            "pit_mean_sweeps_per_request": (
+                self._pit_sweeps_total / self.pit_completed
+                if self.pit_completed else 0.0),
+            # sequential rounds avoided: sum(T) over completed PIT requests
+            # divided by their realized sweeps (1.0 = no reduction).
+            "pit_round_reduction": (
+                self._pit_steps_total / self._pit_sweeps_total
+                if self._pit_sweeps_total else 0.0),
         }
 
 

@@ -148,6 +148,22 @@ class FabricStats:
     deadline_misses: int
     deadline_hit_rate: float
     per_class: Dict[int, dict]
+    #: salvage-queue rescues across the fleet (work-conserving shedding).
+    salvaged: int
+    #: parallel-in-time serving across the fleet (engines running with
+    #: ``pit_window``): admissions, completions, width-short fallbacks,
+    #: sweep rounds, and the fleet-wide sequential-round reduction
+    #: sum(steps) / sum(sweeps) over completed PIT requests.
+    pit_requests: int
+    pit_completed: int
+    pit_fallbacks: int
+    pit_sweeps: int
+    pit_round_reduction: float
+    #: fleet-mean calibrated wall-clock seconds per solver step, from the
+    #: transport's tick round-trips (None on virtual-clock transports or
+    #: before enough heartbeats arrived) — the figure ``--deadline-ms``
+    #: should be judged against in ``--fabric process`` runs.
+    step_time_s: Optional[float]
     #: per-handle detail incl. the last heartbeat's engine stats.
     per_worker: List[dict]
 
@@ -452,13 +468,25 @@ class FabricRouter(Router):
             cls["latency_p50_s"] = _pct(lats, 50)
             cls["latency_p95_s"] = _pct(lats, 95)
             per_class[prio] = cls
+        salvaged = pit_req = pit_done = pit_fb = pit_sweeps = pit_steps = 0
+        step_times: List[float] = []
         for h in self.workers:
+            est = self.transport.step_time_estimate(h.worker_id)
+            if h.alive and est is not None:
+                step_times.append(est)
+            eng = dict(h.last_hb.stats) if h.last_hb else {}
+            salvaged += eng.get("salvaged", 0)
+            pit_req += eng.get("pit_requests", 0)
+            pit_done += eng.get("pit_completed", 0)
+            pit_fb += eng.get("pit_fallbacks", 0)
+            pit_sweeps += eng.get("pit_sweeps", 0)
+            pit_steps += eng.get("pit_steps", 0)
             per_worker.append(dict(
                 worker_id=h.worker_id, alive=h.alive, served=h.served,
                 backlog=h.backlog, joined_tick=h.joined_tick,
                 died_tick=h.died_tick, last_heartbeat_tick=h.last_hb_tick,
                 queued=h.queued_est, remaining_work=h.remaining_work,
-                engine=dict(h.last_hb.stats) if h.last_hb else {}))
+                step_time_s=est, engine=eng))
         return FabricStats(
             n_workers=len(self.live_workers),
             n_spawned=len(self.workers),
@@ -485,6 +513,15 @@ class FabricRouter(Router):
             deadline_hit_rate=(hits / (hits + misses)) if (hits + misses)
                               else 1.0,
             per_class=per_class,
+            salvaged=salvaged,
+            pit_requests=pit_req,
+            pit_completed=pit_done,
+            pit_fallbacks=pit_fb,
+            pit_sweeps=pit_sweeps,
+            pit_round_reduction=(pit_steps / pit_sweeps) if pit_sweeps
+                                else 0.0,
+            step_time_s=(sum(step_times) / len(step_times)) if step_times
+                        else None,
             per_worker=per_worker,
         )
 

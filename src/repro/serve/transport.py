@@ -131,6 +131,14 @@ class Transport:
         live id or inventing one raises ValueError."""
         raise NotImplementedError
 
+    def step_time_estimate(self, worker_id: int) -> Optional[float]:
+        """Calibrated wall-clock seconds per solver step on ``worker_id``,
+        or None where the transport has no wall-clock signal (loopback runs
+        on a virtual clock; a process worker needs at least two heartbeats).
+        The process transport measures this from tick round-trips, which is
+        what makes ``--deadline-ms`` meaningful across the pipe."""
+        return None
+
     def close(self) -> None:
         """Tear the fleet down (no-op where there is nothing to release)."""
 
@@ -408,6 +416,14 @@ class _ProcWorker:
     #: the pipe errored — no reply can ever come (DEAD as far as this
     #: transport can tell; the router's liveness timeout makes the call).
     pipe_dead: bool = False
+    #: monotonic stamp of the in-flight tick command's send (round-trip
+    #: timing survives missed windows: ``awaiting`` keeps it pinned to the
+    #: original send, so a late reply still measures its full round trip).
+    sent_t: float = 0.0
+    #: ``global_steps`` from the last heartbeat (None until one arrives).
+    last_steps: Optional[int] = None
+    #: EWMA of wall-clock seconds per solver step, from tick round-trips.
+    step_ewma: Optional[float] = None
 
 
 class ProcessTransport(Transport):
@@ -423,6 +439,13 @@ class ProcessTransport(Transport):
     the router replays its ledger.  Killed or crashed pipes fail fast — a
     closed pipe polls ready and raises, so dead workers never cost the
     timeout.
+
+    Each drained reply also folds its round trip into a per-worker
+    wall-clock **step-time EWMA** (:meth:`step_time_estimate`, seconds per
+    solver step from the heartbeat's ``global_steps`` delta): the worker's
+    in-engine deadline EWMA never sees pipe and scheduling overhead, so this
+    calibrated figure is what ``--deadline-ms`` feasibility should be judged
+    against in ``--fabric process`` runs.
     """
 
     def __init__(self, spec: HostEngineSpec, n_workers: int,
@@ -522,6 +545,7 @@ class ProcessTransport(Transport):
                 try:
                     w.conn.send(("tick",))
                     w.awaiting = True
+                    w.sent_t = time.monotonic()
                 except (BrokenPipeError, OSError):
                     w.pipe_dead = True  # no reply will come, ever
                     continue
@@ -543,6 +567,7 @@ class ProcessTransport(Transport):
                     if tag == "tick":
                         hb.tick = self.tick_index  # delivery tick
                         hb.late = w.missed > 0
+                        self._observe_step_time(w, hb)
                         report = TickReport(results, hb)
                         w.awaiting = False
                         w.missed = 0
@@ -553,6 +578,31 @@ class ProcessTransport(Transport):
                 w.pipe_dead = True  # dead pipe: silence from here on
             reports[wid] = report
         return reports
+
+    @staticmethod
+    def _observe_step_time(w: _ProcWorker, hb: Heartbeat) -> None:
+        """Fold one tick round-trip into the worker's step-time EWMA.
+
+        The worker's own engine runs on the real clock, so *its* deadline
+        EWMA only sees in-engine step latency; the round trip additionally
+        prices pipe serialization and scheduling delay — the figure a
+        deadline quoted at the router actually has to beat.  Steps executed
+        come from the heartbeat's ``global_steps`` delta (a tick that
+        executed no solver steps, e.g. admit-only, carries no signal and is
+        skipped).  Same 0.8/0.2 blend as ``ServingEngine._step_ewma``."""
+        steps = hb.stats.get("global_steps")
+        if steps is None:
+            return
+        elapsed = time.monotonic() - w.sent_t
+        if w.last_steps is not None and steps > w.last_steps:
+            per = elapsed / (steps - w.last_steps)
+            w.step_ewma = per if w.step_ewma is None else \
+                0.8 * w.step_ewma + 0.2 * per
+        w.last_steps = steps
+
+    def step_time_estimate(self, worker_id: int) -> Optional[float]:
+        w = self._workers.get(worker_id)
+        return w.step_ewma if w is not None else None
 
     def kill(self, worker_id: int) -> None:
         w = self._workers.get(worker_id)

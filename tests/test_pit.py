@@ -1,0 +1,423 @@
+"""Parallel-in-time trajectory solver: bit-parity with sequential stepping
+across windows and sweep schedules, registered whole-trajectory solvers,
+serving-engine integration (reserved slots, fallbacks, stride invariance),
+work-conserving salvage shedding, and compile-count guards.
+
+The parity bar is exact array equality: a converged PIT trajectory IS the
+sequential trajectory (same per-slice keys, same grid law), so every test
+compares tokens with ``==``, never a tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DenseCTMC,
+    DenseEngine,
+    MaskedEngine,
+    SamplerConfig,
+    advance_many,
+    finalize,
+    get_solver,
+    init_pit_state,
+    init_state,
+    loglinear_schedule,
+    masked_process,
+    pit_finalize,
+    pit_run,
+    pit_supported,
+    pit_sweeps,
+    sample,
+)
+from repro.core.solvers.pit import sweep_cache_size
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serve import Request, ServingEngine
+
+# --------------------------------------------------------------------------- #
+# Toy engine: absorbing CTMC.  The reverse-time hazard of an absorbing chain
+# concentrates jumps near t = 0, so wide windows certify long identity
+# prefixes per sweep — the regime where PIT's round compression is large.
+# --------------------------------------------------------------------------- #
+
+S = 8
+
+
+def absorbing_engine(t_max=8.0):
+    q = np.zeros((S, S))
+    q[S - 1, :S - 1] = 1.0  # every live state decays into the absorber
+    np.fill_diagonal(q, -q.sum(axis=0))
+    p0 = np.zeros(S)
+    p0[:S - 1] = np.random.default_rng(0).dirichlet(np.ones(S - 1) * 2.0)
+    return DenseEngine(DenseCTMC(q=q, p0=p0, t_max=t_max))
+
+
+def sequential_tokens(key, engine, cfg, batch):
+    """The per-slot stepwise baseline PIT must match bit-for-bit."""
+    st = init_state(key, engine, cfg, batch=batch,
+                    solver=get_solver(cfg.method)(), per_slot=True)
+    st = advance_many(st, cfg.n_steps)
+    return np.asarray(finalize(st))
+
+
+# --------------------------------------------------------------------------- #
+# Core parity
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("method", ["theta_trapezoidal", "tau_leaping"])
+def test_full_window_matches_sequential(method):
+    eng = absorbing_engine()
+    cfg = SamplerConfig(method=method, n_steps=16, theta=0.5)
+    key = jax.random.PRNGKey(7)
+    seq = sequential_tokens(key, eng, cfg, batch=64)
+
+    state = pit_run(init_pit_state(key, eng, cfg, batch=64))
+    assert np.asarray(state.lo == state.target).all()
+    np.testing.assert_array_equal(np.asarray(pit_finalize(state)), seq)
+    sweeps = np.asarray(state.sweeps)
+    assert (sweeps >= 1).all() and (sweeps <= 16).all()
+    # The whole point: the absorbing toy converges in far fewer rounds.
+    assert sweeps.mean() <= 16 / 2
+
+
+@pytest.mark.parametrize("window", [4, 6])
+def test_sliding_window_parity(window):
+    eng = absorbing_engine()
+    cfg = SamplerConfig(method="theta_trapezoidal", n_steps=16, theta=0.5)
+    key = jax.random.PRNGKey(3)
+    seq = sequential_tokens(key, eng, cfg, batch=32)
+    state = pit_run(init_pit_state(key, eng, cfg, batch=32, window=window))
+    np.testing.assert_array_equal(np.asarray(pit_finalize(state)), seq)
+
+
+def test_window_one_degenerates_to_sequential():
+    """W = 1 is sequential stepping: one certified slice per sweep, exactly
+    n_steps sweeps, bit-identical tokens."""
+    eng = absorbing_engine()
+    cfg = SamplerConfig(method="tau_leaping", n_steps=12)
+    key = jax.random.PRNGKey(11)
+    state = pit_run(init_pit_state(key, eng, cfg, batch=16, window=1))
+    np.testing.assert_array_equal(np.asarray(state.sweeps),
+                                  np.full(16, 12, np.int32))
+    np.testing.assert_array_equal(np.asarray(pit_finalize(state)),
+                                  sequential_tokens(key, eng, cfg, batch=16))
+
+
+def test_sweep_schedule_invariance():
+    """Tokens (and realized sweep counts) are invariant to how sweeps are
+    chunked onto device launches — pit_run vs k=1 polling vs k=4 strides."""
+    eng = absorbing_engine()
+    cfg = SamplerConfig(method="theta_trapezoidal", n_steps=16, theta=0.5)
+    key = jax.random.PRNGKey(5)
+
+    ran = pit_run(init_pit_state(key, eng, cfg, batch=32))
+
+    def drive(k):
+        st = init_pit_state(key, eng, cfg, batch=32)
+        while not np.asarray(st.lo >= st.target).all():
+            st = pit_sweeps(st, k)
+        return st
+
+    for k in (1, 4):
+        st = drive(k)
+        np.testing.assert_array_equal(np.asarray(pit_finalize(st)),
+                                      np.asarray(pit_finalize(ran)))
+        # Converged trajectories stop counting sweeps, so even overshooting
+        # chunk schedules agree on the realized sequential rounds.
+        np.testing.assert_array_equal(np.asarray(st.sweeps),
+                                      np.asarray(ran.sweeps))
+
+
+def test_n_steps_override_parity():
+    """Per-request budgets: an n_steps override (the admit_slot discipline)
+    converges to that budget's sequential trajectory."""
+    eng = absorbing_engine()
+    cfg = SamplerConfig(method="tau_leaping", n_steps=16)
+    key = jax.random.PRNGKey(2)
+    state = pit_run(init_pit_state(key, eng, cfg, batch=8, n_steps=6))
+    np.testing.assert_array_equal(
+        np.asarray(pit_finalize(state)),
+        sequential_tokens(key, eng, SamplerConfig(method="tau_leaping",
+                                                  n_steps=6), batch=8))
+
+
+# --------------------------------------------------------------------------- #
+# Registered whole-trajectory solvers
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("method,base,nfe_per_step", [
+    ("pit_theta_trapezoidal", "theta_trapezoidal", 2),
+    ("pit_tau_leap", "tau_leaping", 1),
+])
+def test_registered_pit_solvers(method, base, nfe_per_step):
+    eng = absorbing_engine()
+    key = jax.random.PRNGKey(9)
+    res = sample(key, eng, SamplerConfig(method=method, n_steps=16,
+                                         theta=0.5), batch=32)
+    seq = sequential_tokens(key, eng, SamplerConfig(method=base, n_steps=16,
+                                                    theta=0.5), batch=32)
+    np.testing.assert_array_equal(np.asarray(res.tokens), seq)
+    cls = get_solver(method)
+    assert cls.parallel and not cls.supports_stepwise
+
+
+def test_pit_solver_has_no_step():
+    with pytest.raises(ValueError, match="per-step"):
+        get_solver("pit_theta_trapezoidal")().step(
+            None, None, None, None, None, None)
+
+
+def test_pit_supported_rejects_adaptive_and_whole_trajectory():
+    assert pit_supported(get_solver("theta_trapezoidal")()) is None
+    assert "adaptive" in pit_supported(
+        get_solver("adaptive_theta_trapezoidal")())
+    assert pit_supported(get_solver("pit_tau_leap")()) is not None
+    eng = absorbing_engine()
+    with pytest.raises(ValueError, match="parallel-in-time"):
+        init_pit_state(jax.random.PRNGKey(0), eng,
+                       SamplerConfig(method="adaptive_theta_trapezoidal",
+                                     n_steps=8), batch=4)
+
+
+def test_sweep_compile_cache_is_bounded():
+    """Re-driving the same (context, window, batch, k) shapes must reuse the
+    compiled sweep executable — serving polls pit_sweeps every tick."""
+    eng = absorbing_engine()
+    cfg = SamplerConfig(method="tau_leaping", n_steps=8)
+    st = init_pit_state(jax.random.PRNGKey(0), eng, cfg, batch=4, window=4)
+    st = pit_sweeps(st, 2)
+    before = sweep_cache_size()
+    for _ in range(4):
+        st = pit_sweeps(st, 2)
+    assert sweep_cache_size() == before
+
+
+# --------------------------------------------------------------------------- #
+# Serving integration
+# --------------------------------------------------------------------------- #
+
+CFG = ModelConfig(name="pit", family="dense", n_layers=2, d_model=64,
+                  n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                  vocab_size=23, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)[0]
+
+
+def make_engine(params, n_steps=8, max_batch=8, seq_len=16, **kw):
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    return ServingEngine(params, CFG, proc,
+                         SamplerConfig(method="theta_trapezoidal",
+                                       n_steps=n_steps, theta=0.5),
+                         max_batch=max_batch, seq_len=seq_len,
+                         finalize_batch=1, **kw)
+
+
+def test_engine_validates_pit_window(params):
+    with pytest.raises(ValueError, match="pit_window"):
+        make_engine(params, pit_window=1)
+    with pytest.raises(ValueError, match="pit_window"):
+        make_engine(params, max_batch=4, pit_window=8)
+    with pytest.raises(ValueError, match="continuous"):
+        make_engine(params, pit_window=4, compact=False)
+    with pytest.raises(ValueError, match="parallel-in-time"):
+        proc = masked_process(CFG.vocab_size, loglinear_schedule())
+        ServingEngine(params, CFG, proc,
+                      SamplerConfig(method="adaptive_theta_trapezoidal",
+                                    n_steps=8),
+                      max_batch=8, seq_len=16, pit_window=4)
+
+
+def test_serving_pit_tokens_bit_identical(params):
+    """A time_parallel request's tokens match sequential serving of the same
+    request exactly, in fewer sequential rounds."""
+    seq_eng = make_engine(params)
+    seq_eng.submit(Request(request_id=42, seq_len=16, seed=5))
+    seq_res = seq_eng.run_all()[0]
+
+    pit_eng = make_engine(params, pit_window=4)
+    pit_eng.submit(Request(request_id=42, seq_len=16, seed=5,
+                           time_parallel=True))
+    pit_res = pit_eng.run_all()[0]
+
+    np.testing.assert_array_equal(pit_res.tokens, seq_res.tokens)
+    assert pit_res.sweeps > 0
+    assert pit_res.sweeps <= 8
+    assert pit_res.nfe == pit_res.sweeps * 2  # realized sequential rounds
+    st = pit_eng.stats()
+    assert st["pit_requests"] == st["pit_completed"] == 1
+    assert st["pit_round_reduction"] == pytest.approx(8 / pit_res.sweeps)
+    assert st["pit_mean_sweeps_per_request"] == pytest.approx(pit_res.sweeps)
+
+
+def test_serving_pit_stride_invariance(params):
+    """Tokens and realized sweep counts are scheduler-stride invariant —
+    PIT's per-tick chunking is a launch schedule, not a semantic."""
+    outs = []
+    for stride in (1, 3, "auto"):
+        eng = make_engine(params, pit_window=4, scheduler_stride=stride)
+        eng.submit(Request(request_id=7, seq_len=16, seed=1,
+                           time_parallel=True))
+        outs.append(eng.run_all()[0])
+    for res in outs[1:]:
+        np.testing.assert_array_equal(res.tokens, outs[0].tokens)
+        assert res.sweeps == outs[0].sweeps
+
+
+def test_serving_pit_mixed_traffic(params):
+    """A PIT run coexists with sequential traffic: its reserved slots are
+    excluded from fill, everyone's tokens match their solo runs."""
+    solo = {}
+    for i in range(3):
+        eng = make_engine(params)
+        eng.submit(Request(request_id=i, seq_len=16, seed=i))
+        solo[i] = eng.run_all()[0].tokens
+
+    eng = make_engine(params, max_batch=8, pit_window=4)
+    eng.submit(Request(request_id=0, seq_len=16, seed=0, time_parallel=True))
+    eng.submit(Request(request_id=1, seq_len=16, seed=1))
+    eng.submit(Request(request_id=2, seq_len=16, seed=2))
+    eng.step()
+    # The PIT run holds 4 of 8 slots; the two sequential requests hold 2.
+    assert len(eng._pit_reserved) == 4
+    assert len(eng.active_slots) == 2
+    results = {r.request_id: r for r in eng.run_all()}
+    assert not eng._pit_reserved  # released on completion
+    for i in range(3):
+        np.testing.assert_array_equal(results[i].tokens, solo[i])
+    assert results[0].sweeps > 0
+    assert results[1].sweeps == results[2].sweeps == 0
+
+
+def test_serving_pit_falls_back_when_pool_crowded(params):
+    """time_parallel is a hint: without a full window of free slots the
+    request runs sequentially (counted, tokens unchanged)."""
+    eng = make_engine(params, max_batch=4, pit_window=4)
+    for i in range(3):
+        eng.submit(Request(request_id=i, seq_len=16, seed=i))
+    eng.step()  # 3 of 4 slots busy: no window of 4 left
+    eng.submit(Request(request_id=9, seq_len=16, seed=9,
+                       time_parallel=True))
+    results = {r.request_id: r for r in eng.run_all()}
+    assert eng.pit_fallbacks == 1
+    assert eng.pit_requests == 0
+    assert results[9].sweeps == 0
+
+    solo = make_engine(params)
+    solo.submit(Request(request_id=9, seq_len=16, seed=9))
+    np.testing.assert_array_equal(results[9].tokens,
+                                  solo.run_all()[0].tokens)
+
+
+def test_serving_pit_only_ticks_and_idle_stats(params):
+    """An engine whose only work is a PIT run still makes progress, and the
+    stats are division-safe before any tick."""
+    eng = make_engine(params, pit_window=8)
+    st = eng.stats()  # never ticked: no ZeroDivisionError anywhere
+    assert st["pit_round_reduction"] == 0.0
+    assert st["pit_mean_sweeps_per_request"] == 0.0
+    assert st["pit_window"] == 8
+
+    eng.submit(Request(request_id=0, seq_len=16, seed=0, time_parallel=True))
+    ticks = 0
+    while eng.busy:
+        eng.step()
+        ticks += 1
+        assert ticks < 64
+    assert eng.pit_completed == 1
+    assert eng.stats()["pit_round_reduction"] > 0.0
+
+
+def test_request_n_steps_respected_by_pit(params):
+    eng = make_engine(params, n_steps=8, pit_window=4)
+    eng.submit(Request(request_id=0, seq_len=16, seed=3, n_steps=4,
+                       time_parallel=True))
+    res = eng.run_all()[0]
+    assert res.steps == 4
+
+    seq = make_engine(params, n_steps=8)
+    seq.submit(Request(request_id=0, seq_len=16, seed=3, n_steps=4))
+    np.testing.assert_array_equal(res.tokens, seq.run_all()[0].tokens)
+
+
+# --------------------------------------------------------------------------- #
+# Work-conserving salvage shedding (virtual clock)
+# --------------------------------------------------------------------------- #
+
+
+def _clocked_engine(params, clock_holder, **kw):
+    return make_engine(params, clock=lambda: clock_holder[0],
+                       step_time_s=1.0, shed=True, **kw)
+
+
+def _drive(eng, clock_holder):
+    out = []
+    while eng.busy:
+        before = eng.global_steps
+        out.extend(eng.step())
+        clock_holder[0] += float(eng.global_steps - before)
+    return out
+
+
+def test_salvage_serves_estimated_unreachable(params):
+    """Three deadline=12 requests on 2 slots (8 steps each): the third's
+    finish estimate (~16) busts the deadline.  Without salvage it sheds;
+    with salvage it waits, gets the freed capacity, and is SERVED (late)."""
+    for salvage in (False, True):
+        clock = [0.0]
+        eng = _clocked_engine(params, clock, max_batch=2, salvage=salvage)
+        shed_now = []
+        for i in range(3):
+            res = eng.submit(Request(request_id=i, seq_len=16, seed=i,
+                                     deadline=12.0))
+            if res is not None:
+                shed_now.append(res)
+        results = shed_now + _drive(eng, clock)
+        by_status = {r.request_id: r.status for r in results}
+        assert by_status[0] == by_status[1] == "ok"
+        if salvage:
+            assert by_status[2] == "ok"
+            assert eng.salvaged == 1
+            late = [r for r in results if r.request_id == 2][0]
+            assert late.deadline_met is False
+        else:
+            assert by_status[2] == "shed"
+            assert eng.salvaged == 0
+
+
+def test_salvage_still_sheds_truly_expired(params):
+    """A request whose deadline has already passed sheds with reason
+    'deadline' even under salvage — salvage is work-conserving, not SLA
+    amnesty."""
+    clock = [0.0]
+    eng = _clocked_engine(params, clock, max_batch=2, salvage=True)
+    eng.submit(Request(request_id=0, seq_len=16, seed=0))
+    eng.submit(Request(request_id=1, seq_len=16, seed=1))
+    eng.step()  # both slots busy
+    eng.submit(Request(request_id=2, seq_len=16, seed=2, deadline=12.0))
+    clock[0] = 13.0  # expire it before any capacity frees
+    results = _drive(eng, clock)
+    expired = [r for r in results if r.request_id == 2][0]
+    assert expired.status == "shed" and expired.reason == "deadline"
+    assert eng.salvaged == 0
+
+
+def test_salvaged_request_tokens_unchanged(params):
+    """Salvage changes WHEN a request runs, never what it samples."""
+    solo = make_engine(params)
+    solo.submit(Request(request_id=2, seq_len=16, seed=2))
+    expect = solo.run_all()[0].tokens
+
+    clock = [0.0]
+    eng = _clocked_engine(params, clock, max_batch=2, salvage=True)
+    for i in range(3):
+        eng.submit(Request(request_id=i, seq_len=16, seed=i,
+                           deadline=12.0))
+    results = _drive(eng, clock)
+    late = [r for r in results if r.request_id == 2][0]
+    np.testing.assert_array_equal(late.tokens, expect)

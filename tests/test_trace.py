@@ -1,0 +1,158 @@
+"""Arrival-trace generators: seeded determinism, straggler placement,
+priority/deadline shapes, chaos-schedule invariants, input validation.
+
+Every generator in ``repro.serve.trace`` is documented as a pure function of
+its arguments — benchmarks and chaos runs replay bit-identically from a seed.
+These tests pin that contract.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.trace import (
+    FailureEvent,
+    failure_schedule,
+    poisson_arrivals,
+    poisson_trace,
+    skewed_trace,
+    sla_trace,
+)
+
+
+# --------------------------------------------------------------------------- #
+# poisson_arrivals
+# --------------------------------------------------------------------------- #
+
+
+def test_poisson_arrivals_deterministic_and_monotone():
+    a = poisson_arrivals(64, mean_gap=2.0, seed=7)
+    b = poisson_arrivals(64, mean_gap=2.0, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (64,)
+    assert a[0] == 0.0
+    assert (np.diff(a) >= 0).all()
+    # A different seed is a different trace.
+    c = poisson_arrivals(64, mean_gap=2.0, seed=8)
+    assert (a != c).any()
+
+
+def test_poisson_arrivals_mean_gap_scales():
+    a = poisson_arrivals(4096, mean_gap=1.0, seed=0)
+    b = poisson_arrivals(4096, mean_gap=3.0, seed=0)
+    # Same seed => same unit exponentials, so the spans scale exactly 3x.
+    np.testing.assert_allclose(b[-1] / a[-1], 3.0, rtol=1e-12)
+    # And the realized mean gap is near its parameter.
+    assert np.diff(a).mean() == pytest.approx(1.0, rel=0.1)
+
+
+def test_poisson_arrivals_validates():
+    with pytest.raises(ValueError, match="n_requests"):
+        poisson_arrivals(0, mean_gap=1.0)
+
+
+# --------------------------------------------------------------------------- #
+# poisson_trace / skewed_trace
+# --------------------------------------------------------------------------- #
+
+
+def test_poisson_trace_deterministic():
+    a1, b1 = poisson_trace(128, max_batch=8, short_steps=4, long_steps=32,
+                           seed=5)
+    a2, b2 = poisson_trace(128, max_batch=8, short_steps=4, long_steps=32,
+                           seed=5)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(b1, b2)
+    assert set(np.unique(b1)) <= {4, 32}
+
+
+def test_poisson_trace_straggler_fraction():
+    _, budgets = poisson_trace(4096, max_batch=8, short_steps=4,
+                               long_steps=32, p_long=0.3, seed=0)
+    assert (budgets == 32).mean() == pytest.approx(0.3, abs=0.03)
+
+
+def test_skewed_trace_pins_stragglers():
+    arrivals, budgets = skewed_trace(40, max_batch=8, short_steps=4,
+                                     long_steps=32, period=4, seed=1)
+    idx = np.arange(40)
+    np.testing.assert_array_equal(budgets[idx % 4 == 0], 32)
+    np.testing.assert_array_equal(budgets[idx % 4 != 0], 4)
+    assert arrivals[0] == 0.0 and (np.diff(arrivals) >= 0).all()
+    # Determinism.
+    a2, b2 = skewed_trace(40, max_batch=8, short_steps=4, long_steps=32,
+                          period=4, seed=1)
+    np.testing.assert_array_equal(arrivals, a2)
+    np.testing.assert_array_equal(budgets, b2)
+
+
+def test_skewed_trace_validates_period():
+    with pytest.raises(ValueError, match="period"):
+        skewed_trace(8, max_batch=4, short_steps=2, long_steps=8, period=0)
+
+
+# --------------------------------------------------------------------------- #
+# sla_trace
+# --------------------------------------------------------------------------- #
+
+
+def test_sla_trace_deterministic_and_shaped():
+    out1 = sla_trace(256, max_batch=8, n_steps=16, p_high=0.25, seed=9)
+    out2 = sla_trace(256, max_batch=8, n_steps=16, p_high=0.25, seed=9)
+    for x, y in zip(out1, out2):
+        np.testing.assert_array_equal(x, y)
+    arrivals, budgets, priorities, deadlines = out1
+    assert (budgets == 16).all()
+    assert set(np.unique(priorities)) <= {0, 1}
+    assert priorities.mean() == pytest.approx(0.25, abs=0.08)
+    # High class carries the factor-scaled deadline; bulk is deadline-free.
+    np.testing.assert_array_equal(deadlines[priorities == 1], 2.0 * 16)
+    assert np.isinf(deadlines[priorities == 0]).all()
+
+
+def test_sla_trace_low_deadline_factor():
+    _, _, priorities, deadlines = sla_trace(
+        64, max_batch=4, n_steps=8, p_high=0.5, high_deadline_factor=3.0,
+        low_deadline_factor=10.0, seed=2)
+    np.testing.assert_array_equal(deadlines[priorities == 1], 24.0)
+    np.testing.assert_array_equal(deadlines[priorities == 0], 80.0)
+
+
+def test_sla_trace_validates_p_high():
+    with pytest.raises(ValueError, match="p_high"):
+        sla_trace(8, max_batch=4, n_steps=4, p_high=1.5)
+
+
+# --------------------------------------------------------------------------- #
+# failure_schedule
+# --------------------------------------------------------------------------- #
+
+
+def test_failure_schedule_deterministic_and_bounded():
+    ev1 = failure_schedule(8, n_failures=4, horizon=50, seed=11)
+    ev2 = failure_schedule(8, n_failures=4, horizon=50, seed=11)
+    assert ev1 == ev2
+    assert len(ev1) == 4
+    victims = [e.worker_id for e in ev1]
+    assert len(set(victims)) == 4  # drawn without replacement
+    assert all(0 <= w < 8 for w in victims)
+    for e in ev1:
+        assert isinstance(e, FailureEvent)
+        assert 1 <= e.kill_tick < 50
+        if e.rejoin_tick is not None:
+            assert e.kill_tick < e.rejoin_tick <= 50
+    assert [e.kill_tick for e in ev1] == sorted(e.kill_tick for e in ev1)
+
+
+def test_failure_schedule_rejoin_probability_extremes():
+    none_rejoin = failure_schedule(16, 16, horizon=100, p_rejoin=0.0, seed=3)
+    assert all(e.rejoin_tick is None for e in none_rejoin)
+    all_rejoin = failure_schedule(16, 16, horizon=100, p_rejoin=1.0, seed=3)
+    assert all(e.rejoin_tick is not None for e in all_rejoin)
+
+
+def test_failure_schedule_validates():
+    with pytest.raises(ValueError, match="n_failures"):
+        failure_schedule(4, -1, horizon=10)
+    with pytest.raises(ValueError, match="cannot kill"):
+        failure_schedule(2, 3, horizon=10)
+    with pytest.raises(ValueError, match="horizon"):
+        failure_schedule(4, 1, horizon=1, min_tick=1)
