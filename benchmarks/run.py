@@ -43,17 +43,20 @@ def parse_row(row: str) -> dict:
     return {"name": name, "us_per_call": us_val, "derived": derived}
 
 
-def write_json(path: str, sections: dict, failures: int) -> None:
+def write_json(path: str, sections: dict, failures: int,
+               observability: dict | None = None) -> None:
     """Mirror the CSV rows into BENCH_solvers.json, preserving history.
 
-    Sections not re-run (``--only``) keep their previous rows, so partial
-    runs never erase the rest of the trajectory file.
+    Sections not re-run (``--only``) keep their previous rows — and their
+    previous ``observability`` entries — so partial runs never erase the
+    rest of the trajectory file.
     """
     payload = {
         "schema": "bench_solvers/v1",
         "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "failures": failures,
         "sections": {},
+        "observability": {},
         "history": {},
     }
     if os.path.exists(path):
@@ -62,10 +65,12 @@ def write_json(path: str, sections: dict, failures: int) -> None:
                 prev = json.load(f)
             payload["history"] = prev.get("history", {})
             payload["sections"] = prev.get("sections", {})
+            payload["observability"] = prev.get("observability", {})
         except (json.JSONDecodeError, OSError):
             pass
     payload["sections"].update(
         {name: [parse_row(r) for r in rows] for name, rows in sections.items()})
+    payload["observability"].update(observability or {})
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -167,9 +172,13 @@ def main() -> None:
         sections = {k: v for k, v in sections.items()
                     if any(fnmatch.fnmatch(k, p) for p in pats)}
 
+    from repro.obs.jit import RecompileTracker  # noqa: PLC0415
+
     print("name,us_per_call,derived")
     failures = 0
     collected: dict[str, list[str]] = {}
+    observability: dict[str, dict] = {}
+    recompiles = RecompileTracker()
     for name, fn in sections.items():
         t0 = time.time()
         try:
@@ -179,14 +188,20 @@ def main() -> None:
                 print(row, flush=True)
             rows.append(f"{name}/TOTAL,{(time.time()-t0)*1e6:.1f},ok")
             print(rows[-1], flush=True)
+            ok = True
         except Exception:  # noqa: BLE001
             failures += 1
             rows = [f"{name}/TOTAL,0.0,FAILED"]
             print(rows[-1], flush=True)
             traceback.print_exc(file=sys.stderr)
+            ok = False
         collected[name] = rows
+        # Per-section accounting: wall time + new jit executables compiled
+        # while the section ran (delta over the shared solver caches).
+        observability[name] = {"wall_s": round(time.time() - t0, 3),
+                               "ok": ok, "recompiles": recompiles.delta()}
     if args.json_out:
-        write_json(args.json_out, collected, failures)
+        write_json(args.json_out, collected, failures, observability)
         print(f"wrote {args.json_out}", file=sys.stderr)
     if failures:
         raise SystemExit(1)

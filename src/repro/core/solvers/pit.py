@@ -312,6 +312,12 @@ def sweep_cache_size() -> int:
     return _sweep_scan._cache_size()
 
 
+def run_cache_size() -> int:
+    """Compiled ``pit_run`` (sweep-to-convergence) executables alive in this
+    process — same convention as :func:`sweep_cache_size`."""
+    return _run_to_convergence._cache_size()
+
+
 # --------------------------------------------------------------------------- #
 # Registered whole-trajectory solvers
 # --------------------------------------------------------------------------- #

@@ -35,7 +35,7 @@ stepwise solver on the masked and uniform engines.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -134,6 +134,10 @@ class SlotPool:
                 f"bucket_ladder must be widths in [1, capacity] ending at "
                 f"capacity={self.capacity}, got {ladder}")
         self.bucket_ladder = ladder
+        #: optional ``(n_active, width, k)`` observer called on every advance
+        #: — the obs layer's bucket-utilisation hook.  Purely observational:
+        #: never influences which bucket runs.
+        self.on_advance: Optional[Callable[[int, int, int], None]] = None
 
     # ------------------------------------------------------------------ sizing
     def bucket_width(self, n_active: int) -> int:
@@ -169,6 +173,8 @@ class SlotPool:
         sub = _gather(self.state, jnp.asarray(perm))
         sub = advance_many(sub, k)
         self.state = _scatter(self.state, sub, jnp.asarray(perm))
+        if self.on_advance is not None:
+            self.on_advance(n, w, k)
         return sub, perm
 
     def advance_all(self, k: int) -> SolverState:
@@ -176,6 +182,8 @@ class SlotPool:
         steps with the full state's buffers donated.  Kept as the
         bit-identity baseline the compacted executor is tested against."""
         self.state = advance_many(self.state, k)
+        if self.on_advance is not None:
+            self.on_advance(self.capacity, self.capacity, k)
         return self.state
 
     # ---------------------------------------------------------------- finalize

@@ -63,6 +63,43 @@ from repro.serve import (
 )
 
 
+def export_obs(args, target) -> None:
+    """Flush the run's recorder + metrics to the requested output files.
+
+    Works for all three targets: a single engine exposes ``.obs`` and
+    ``.metrics`` directly; the cluster router and fabric expose the shared
+    recorder as ``.obs`` and merge per-worker registries in
+    ``metrics_snapshot()``.  Safe after ``close()`` — process workers ship
+    their buffers with every tick, so nothing is lost with the children.
+    """
+    from repro.obs.export import (
+        write_chrome_trace,
+        write_events_jsonl,
+        write_prometheus,
+    )
+    from repro.obs.jit import recompile_counts
+
+    obs = target.obs
+    events = obs.events()
+    snapshot = (target.metrics_snapshot()
+                if hasattr(target, "metrics_snapshot")
+                else target.metrics.snapshot())
+    if args.trace_out:
+        names = {-1: "fabric"} if args.fabric != "off" else {0: "engine"}
+        n = write_chrome_trace(args.trace_out, events, process_names=names)
+        print(f"obs: wrote {args.trace_out} ({n} chrome-trace events)")
+    if args.events_out:
+        write_events_jsonl(args.events_out, events)
+        print(f"obs: wrote {args.events_out} ({len(events)} JSONL events)")
+    if args.metrics_out:
+        n = write_prometheus(args.metrics_out, snapshot)
+        print(f"obs: wrote {args.metrics_out} ({n} prometheus samples)")
+    recomp = recompile_counts()
+    print(f"obs: {len(events)} events recorded ({obs.dropped} dropped), "
+          f"compiled executables alive: "
+          + ", ".join(f"{k}={v}" for k, v in sorted(recomp.items())))
+
+
 def drive(target, requests, arrivals=None):
     """Run ``requests`` through an engine or cluster.
 
@@ -200,6 +237,21 @@ def main() -> None:
                     help="fraction of requests marked high priority "
                          "(priority 1, carrying --deadline-ms); the rest are "
                          "priority 0 bulk work")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the observability recorder + metrics "
+                         "registry even without an output file (served "
+                         "tokens stay bit-identical either way)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "run here (implies --obs; open in ui.perfetto.dev "
+                         "or chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text-exposition snapshot of "
+                         "the run's metrics here (implies --obs)")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="write the raw trace events as sorted-key JSONL "
+                         "here (implies --obs; byte-stable under a virtual "
+                         "clock, used by the chaos-replay CI check)")
     args = ap.parse_args()
     if args.kill_worker and args.fabric == "off":
         ap.error("--kill-worker requires --fabric loopback|process")
@@ -219,13 +271,15 @@ def main() -> None:
                  "(drop --run-to-completion)")
     if args.pit_window and args.dense_pool:
         ap.error("--pit-window needs the compacted pool (drop --dense-pool)")
+    obs_on = bool(args.obs or args.trace_out or args.metrics_out
+                  or args.events_out)
     engine_kw = dict(max_batch=args.max_batch, seq_len=args.seq_len,
                      scheduler_stride=stride, compact=not args.dense_pool,
                      finalize_batch=args.finalize_batch,
                      continuous=not args.run_to_completion,
                      sched_policy=args.sched_policy, preempt=args.preempt,
                      shed=args.shed, salvage=args.salvage,
-                     pit_window=args.pit_window or None)
+                     pit_window=args.pit_window or None, obs=obs_on)
     mesh = make_host_mesh()
     with mesh:
         if args.fabric != "off":
@@ -275,6 +329,8 @@ def main() -> None:
             if args.fabric != "off":
                 target.close()
     dt = time.monotonic() - t0
+    if obs_on:
+        export_obs(args, target)
     shed = [r for r in results if r.status == "shed"]
     results = [r for r in results if r.status != "shed"]
     if not results:

@@ -1,0 +1,37 @@
+"""Serving-stack observability: structured tracing, metrics, exporters.
+
+The serving layers (engine -> cluster -> fabric) expose per-layer ``stats()``
+dicts, but a dict of totals cannot answer *where a request's latency went* —
+queue vs. preemption vs. sweeps vs. recompiles.  This package is the
+cross-cutting telemetry layer:
+
+* :mod:`~repro.obs.events` — :class:`TraceRecorder`, a ring-buffered
+  span/instant event recorder with a zero-overhead disabled path
+  (:data:`NULL_RECORDER`).  Every serving layer emits its lifecycle through
+  one recorder; all timestamps flow through the injected engine ``clock``, so
+  virtual-clock runs produce *deterministic* event streams and seeded chaos
+  schedules replay to byte-identical traces;
+* :mod:`~repro.obs.metrics` — :class:`MetricsRegistry` of counters / gauges /
+  fixed-bucket histograms / summaries, snapshot-able and mergeable across
+  engine -> cluster -> fabric (process workers ship snapshots home inside
+  ``TickReport``);
+* :mod:`~repro.obs.export` — Chrome-trace-format JSON (open in Perfetto; one
+  track per worker/slot), Prometheus text exposition, and JSONL event dumps,
+  each with a validator (the CI obs-smoke job runs them);
+* :mod:`~repro.obs.jit` — :class:`RecompileTracker` over the solver stack's
+  jit-cache surfaces (``advance_cache_size`` / ``sweep_cache_size`` / the
+  fused kernel), so compile storms show up as trace instants and counters;
+* :mod:`~repro.obs.stats_util` — the idle-safe percentile / division helpers
+  every ``stats()`` surface shares (one copy, bit-compatible).
+"""
+from .events import NULL_RECORDER, TraceRecorder, resolve_recorder
+from .jit import RecompileTracker, recompile_counts
+from .metrics import MetricsRegistry, merge_snapshots
+from .stats_util import hit_rate, pct, safe_div
+
+__all__ = [
+    "TraceRecorder", "NULL_RECORDER", "resolve_recorder",
+    "MetricsRegistry", "merge_snapshots",
+    "RecompileTracker", "recompile_counts",
+    "pct", "safe_div", "hit_rate",
+]

@@ -1,0 +1,168 @@
+"""Structured trace events: a ring-buffered recorder with a no-op twin.
+
+One :class:`TraceRecorder` collects the full serving lifecycle as flat event
+dicts — submit -> queued -> admitted -> per-tick advance spans ->
+preempt/park -> restore -> salvage/shed/finalize, plus worker lifecycle
+(heartbeat, late, declared-dead, ledger replay, rejoin/respawn) and
+parallel-in-time events (reserve, sweep, converge, fallback).  Events use the
+Chrome Trace Event vocabulary directly (``ph="i"`` instants, ``ph="X"``
+complete spans, ``pid``/``tid`` tracks), so export is a unit conversion, not
+a transformation.
+
+**Determinism.**  Emitters pass explicit ``ts`` stamps taken from the clocks
+the serving layers already run on (the engine's injected ``clock``, the
+fabric's tick counter) — the recorder only falls back to its own clock when
+no stamp is given.  Under a virtual clock every stamp is a pure function of
+the schedule, so a seeded chaos run recorded twice produces *byte-identical*
+event streams (asserted in ``tests/test_obs.py``).
+
+**Zero overhead when off.**  :data:`NULL_RECORDER` is a singleton whose
+``enabled`` is False and whose methods are no-ops; hot paths additionally
+guard on ``enabled`` so a disabled engine never builds an args dict.  Token
+outputs never depend on the recorder either way — tracing is observation,
+not scheduling.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import time
+from typing import Callable, Dict, Iterable, List, Optional
+
+#: one trace event: ``{"name", "cat", "ph", "ts", "pid", "tid", "args"}``
+#: (+ ``"dur"`` for ``ph="X"`` spans).  Timestamps are in the emitting
+#: clock's units (seconds on the wall clock); exporters scale to µs.
+Event = Dict[str, object]
+
+
+class TraceRecorder:
+    """Ring-buffered structured event recorder.
+
+    ``capacity`` bounds memory: the oldest events fall off when the ring
+    fills (``dropped`` counts them, so truncation is never silent).  ``pid``
+    is the default track id for events that don't carry one — the engine
+    overrides it per worker via ``obs_pid``.
+    """
+
+    enabled = True
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic,
+                 capacity: int = 65536, pid: int = 0):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self._clock = clock
+        self.capacity = capacity
+        self.pid = pid
+        self.dropped = 0
+        self._buf: collections.deque = collections.deque(maxlen=capacity)
+
+    # ---------------------------------------------------------------- emission
+    def emit(self, event: Event) -> None:
+        if len(self._buf) == self.capacity:
+            self.dropped += 1
+        self._buf.append(event)
+
+    def instant(self, name: str, *, cat: str = "serve",
+                ts: Optional[float] = None, pid: Optional[int] = None,
+                tid: int = 0, **args) -> None:
+        """One point-in-time event (``ph="i"``)."""
+        self.emit({"name": name, "cat": cat, "ph": "i",
+                   "ts": self._clock() if ts is None else ts,
+                   "pid": self.pid if pid is None else pid,
+                   "tid": tid, "args": args})
+
+    def complete(self, name: str, ts: float, dur: float, *,
+                 cat: str = "serve", pid: Optional[int] = None,
+                 tid: int = 0, **args) -> None:
+        """One finished span (``ph="X"``): started at ``ts``, lasted ``dur``."""
+        self.emit({"name": name, "cat": cat, "ph": "X", "ts": ts, "dur": dur,
+                   "pid": self.pid if pid is None else pid,
+                   "tid": tid, "args": args})
+
+    @contextlib.contextmanager
+    def span(self, name: str, *, cat: str = "serve",
+             pid: Optional[int] = None, tid: int = 0, **args):
+        """Record the enclosed block as a complete span on this recorder's
+        clock.  Yields the args dict so the block can add measured fields."""
+        t0 = self._clock()
+        try:
+            yield args
+        finally:
+            self.complete(name, t0, self._clock() - t0, cat=cat, pid=pid,
+                          tid=tid, **args)
+
+    # ------------------------------------------------------------- collection
+    def extend(self, events: Iterable[Event],
+               pid: Optional[int] = None) -> None:
+        """Merge events shipped from elsewhere (a process worker's drained
+        buffer).  ``pid`` re-stamps their track id — child engines emit on
+        pid 0, the fabric files them under the worker id."""
+        for ev in events:
+            if pid is not None:
+                ev = dict(ev, pid=pid)
+            self.emit(ev)
+
+    def events(self) -> List[Event]:
+        """Snapshot of the ring's current contents (oldest first)."""
+        return list(self._buf)
+
+    def drain(self) -> List[Event]:
+        """Pop and return everything buffered — the per-tick shipping verb
+        for process workers (each event crosses the pipe exactly once)."""
+        out = list(self._buf)
+        self._buf.clear()
+        return out
+
+    def clear(self) -> None:
+        self._buf.clear()
+        self.dropped = 0
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+
+class _NullRecorder(TraceRecorder):
+    """The disabled twin: same surface, no state, no work.  A singleton —
+    identity-comparable, safe to share across every engine of a fleet."""
+
+    enabled = False
+
+    def __init__(self):
+        super().__init__(capacity=1)
+
+    def emit(self, event: Event) -> None:
+        pass
+
+    def instant(self, *a, **kw) -> None:
+        pass
+
+    def complete(self, *a, **kw) -> None:
+        pass
+
+    @contextlib.contextmanager
+    def span(self, *a, **kw):
+        yield {}
+
+    def extend(self, events, pid=None) -> None:
+        pass
+
+
+NULL_RECORDER = _NullRecorder()
+
+
+def resolve_recorder(obs, clock: Optional[Callable[[], float]] = None
+                     ) -> TraceRecorder:
+    """The ctor-argument convention every serving layer shares.
+
+    ``None``/``False`` -> :data:`NULL_RECORDER` (tracing off).  ``True`` ->
+    a fresh recorder on ``clock`` (or the wall clock) — the picklable spelling
+    a :class:`~repro.serve.transport.HostEngineSpec` ships to process workers.
+    A ready :class:`TraceRecorder` passes through (the shared-recorder fleet
+    spelling)."""
+    if obs is None or obs is False:
+        return NULL_RECORDER
+    if obs is True:
+        return TraceRecorder(clock=clock or time.monotonic)
+    if isinstance(obs, TraceRecorder):
+        return obs
+    raise TypeError(f"obs must be None/bool or a TraceRecorder, got {obs!r}")

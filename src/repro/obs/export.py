@@ -1,0 +1,259 @@
+"""Exporters: Chrome trace JSON (Perfetto), Prometheus text, JSONL events.
+
+Three output formats over the obs layer's two data shapes:
+
+* :func:`chrome_trace` — the Chrome Trace Event Format (the ``traceEvents``
+  array form): open the file at https://ui.perfetto.dev or
+  ``chrome://tracing``.  Recorder events already use the format's vocabulary
+  (``ph``/``pid``/``tid``); here timestamps scale from clock units (seconds)
+  to microseconds and per-track metadata names each ``pid`` track "worker N"
+  and each ``tid`` track after its pool slot;
+* :func:`prometheus_text` — the text exposition format over a registry
+  snapshot: counters and gauges verbatim, histograms as cumulative
+  ``_bucket{le=...}`` series plus ``_sum``/``_count``, summaries as
+  ``{quantile=...}`` series computed by the same ``stats_util.pct`` math the
+  serving stats use;
+* :func:`events_jsonl` — one sorted-key JSON object per line.  Byte-stable
+  for identical event streams, which is what makes the chaos-replay
+  determinism test an exact file comparison.
+
+Each format has a validator (:func:`validate_chrome_trace`,
+:func:`validate_prometheus`) raising ``ValueError`` with the first offending
+record; ``python -m repro.obs.export TRACE [METRICS]`` runs them from the
+command line — the CI obs-smoke job's parse gate.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, Iterable, List, Optional
+
+from .stats_util import pct
+
+#: recorder clocks run in seconds; Chrome traces want microseconds.
+_US = 1e6
+
+_NAME_RE = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*")
+_SAMPLE_RE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? [-+]?[0-9.eE+\-naifNAIF]+$")
+
+
+# --------------------------------------------------------------------------- #
+# Chrome trace (Perfetto)
+# --------------------------------------------------------------------------- #
+
+
+def chrome_trace(events: Iterable[dict], *,
+                 process_names: Optional[Dict[int, str]] = None) -> dict:
+    """Recorder events -> a Chrome-trace JSON object.
+
+    ``process_names`` overrides the default "worker N" label per pid track
+    (single-engine traces read better as ``{0: "engine"}``)."""
+    out: List[dict] = []
+    pids = {}
+    tids = set()
+    for ev in events:
+        pid = int(ev.get("pid", 0))
+        tid = int(ev.get("tid", 0))
+        pids.setdefault(pid, None)
+        tids.add((pid, tid))
+        ce = {"name": str(ev["name"]), "cat": str(ev.get("cat", "serve")),
+              "ph": str(ev.get("ph", "i")), "ts": float(ev["ts"]) * _US,
+              "pid": pid, "tid": tid, "args": dict(ev.get("args", {}))}
+        if ce["ph"] == "i":
+            ce["s"] = "t"  # instant scope: thread
+        if "dur" in ev:
+            ce["dur"] = float(ev["dur"]) * _US
+        out.append(ce)
+    meta: List[dict] = []
+    for pid in sorted(pids):
+        name = (process_names or {}).get(pid, f"worker {pid}")
+        meta.append({"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+                     "args": {"name": name}})
+    for pid, tid in sorted(tids):
+        meta.append({"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+                     "args": {"name": "engine" if tid == 0
+                              else f"slot {tid}"}})
+    return {"traceEvents": meta + out, "displayTimeUnit": "ms"}
+
+
+def validate_chrome_trace(doc: dict) -> int:
+    """Schema-check a Chrome-trace object; returns the event count.
+
+    Not a full spec implementation — the invariants Perfetto's importer
+    needs: a ``traceEvents`` list whose entries carry a string ``name``, a
+    known ``ph``, numeric ``ts`` (metadata excepted), integer ``pid``/
+    ``tid``, a dict ``args``, and a numeric ``dur`` on complete spans."""
+    if not isinstance(doc, dict) or not isinstance(
+            doc.get("traceEvents"), list):
+        raise ValueError("chrome trace must be an object with a "
+                         "'traceEvents' list")
+    for i, ev in enumerate(doc["traceEvents"]):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            raise ValueError(f"{where}: not an object")
+        if not isinstance(ev.get("name"), str):
+            raise ValueError(f"{where}: missing string 'name'")
+        ph = ev.get("ph")
+        if ph not in ("B", "E", "X", "i", "I", "M", "C"):
+            raise ValueError(f"{where}: unknown ph {ph!r}")
+        if not (isinstance(ev.get("pid"), int)
+                and isinstance(ev.get("tid"), int)):
+            raise ValueError(f"{where}: pid/tid must be integers")
+        if ph != "M" and not isinstance(ev.get("ts"), (int, float)):
+            raise ValueError(f"{where}: missing numeric 'ts'")
+        if ph == "X" and not isinstance(ev.get("dur"), (int, float)):
+            raise ValueError(f"{where}: complete span missing 'dur'")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            raise ValueError(f"{where}: 'args' must be an object")
+    return len(doc["traceEvents"])
+
+
+def write_chrome_trace(path: str, events: Iterable[dict], *,
+                       process_names: Optional[Dict[int, str]] = None) -> int:
+    doc = chrome_trace(events, process_names=process_names)
+    n = validate_chrome_trace(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, sort_keys=True)
+        f.write("\n")
+    return n
+
+
+# --------------------------------------------------------------------------- #
+# JSONL event dump
+# --------------------------------------------------------------------------- #
+
+
+def events_jsonl(events: Iterable[dict]) -> str:
+    """One sorted-key JSON object per line — byte-stable for identical
+    streams (the chaos-replay determinism gate compares these exactly)."""
+    return "".join(json.dumps(ev, sort_keys=True) + "\n" for ev in events)
+
+
+def write_events_jsonl(path: str, events: Iterable[dict]) -> None:
+    with open(path, "w") as f:
+        f.write(events_jsonl(events))
+
+
+# --------------------------------------------------------------------------- #
+# Prometheus text exposition
+# --------------------------------------------------------------------------- #
+
+
+def _fmt(value: float) -> str:
+    return repr(float(value))
+
+
+def _split_key(key: str):
+    """``name{a="b"}`` -> (name, ``{a="b"}`` or "")."""
+    brace = key.find("{")
+    return (key, "") if brace < 0 else (key[:brace], key[brace:])
+
+
+def _with_label(labelstr: str, extra: str) -> str:
+    if not labelstr:
+        return "{" + extra + "}"
+    return labelstr[:-1] + ("," if labelstr != "{}" else "") + extra + "}"
+
+
+def prometheus_text(snapshot: dict) -> str:
+    """A registry snapshot (or :func:`merge_snapshots` output) -> the
+    Prometheus text exposition format."""
+    help_map = snapshot.get("help", {})
+    lines: List[str] = []
+    seen_types: set = set()
+
+    def head(name: str, mtype: str) -> None:
+        if name in seen_types:
+            return
+        seen_types.add(name)
+        if name in help_map:
+            lines.append(f"# HELP {name} {help_map[name]}")
+        lines.append(f"# TYPE {name} {mtype}")
+
+    for key in sorted(snapshot.get("counters", {})):
+        name, labels = _split_key(key)
+        head(name, "counter")
+        lines.append(f"{key} {_fmt(snapshot['counters'][key])}")
+    for key in sorted(snapshot.get("gauges", {})):
+        name, labels = _split_key(key)
+        head(name, "gauge")
+        lines.append(f"{key} {_fmt(snapshot['gauges'][key])}")
+    for key in sorted(snapshot.get("histograms", {})):
+        name, labels = _split_key(key)
+        h = snapshot["histograms"][key]
+        head(name, "histogram")
+        cum = 0
+        for ub, c in zip(h["bounds"], h["counts"]):
+            cum += c
+            le = _with_label(labels, f'le="{_fmt(ub)}"')
+            lines.append(f"{name}_bucket{le} {cum}")
+        cum += h["counts"][-1]
+        le = _with_label(labels, 'le="+Inf"')
+        lines.append(f"{name}_bucket{le} {cum}")
+        lines.append(f"{name}_sum{labels} {_fmt(h['sum'])}")
+        lines.append(f"{name}_count{labels} {h['count']}")
+    for key in sorted(snapshot.get("summaries", {})):
+        name, labels = _split_key(key)
+        vals = snapshot["summaries"][key]
+        head(name, "summary")
+        for q in (0.5, 0.95, 0.99):
+            ql = _with_label(labels, f'quantile="{q}"')
+            lines.append(f"{name}{ql} {_fmt(pct(vals, 100 * q))}")
+        lines.append(f"{name}_sum{labels} {_fmt(sum(vals))}")
+        lines.append(f"{name}_count{labels} {len(vals)}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def validate_prometheus(text: str) -> int:
+    """Line-check a text exposition; returns the sample count.  Accepts
+    ``# HELP``/``# TYPE`` comments and ``name{labels} value`` samples."""
+    samples = 0
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line or line.startswith("#"):
+            continue
+        if not _SAMPLE_RE.match(line):
+            raise ValueError(f"line {lineno}: not a valid exposition "
+                             f"sample: {line!r}")
+        samples += 1
+    return samples
+
+
+def write_prometheus(path: str, snapshot: dict) -> int:
+    text = prometheus_text(snapshot)
+    n = validate_prometheus(text)
+    with open(path, "w") as f:
+        f.write(text)
+    return n
+
+
+# --------------------------------------------------------------------------- #
+# CLI validation entry point (the CI obs-smoke parse gate)
+# --------------------------------------------------------------------------- #
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="validate obs export files (Chrome trace JSON and/or "
+                    "Prometheus text exposition)")
+    ap.add_argument("trace", nargs="?", default=None,
+                    help="Chrome-trace JSON file (--trace-out output)")
+    ap.add_argument("metrics", nargs="?", default=None,
+                    help="Prometheus text file (--metrics-out output)")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("nothing to validate")
+    if args.trace:
+        with open(args.trace) as f:
+            n = validate_chrome_trace(json.load(f))
+        print(f"{args.trace}: valid chrome trace ({n} events)")
+    if args.metrics:
+        with open(args.metrics) as f:
+            n = validate_prometheus(f.read())
+        print(f"{args.metrics}: valid prometheus exposition ({n} samples)")
+
+
+if __name__ == "__main__":
+    main()

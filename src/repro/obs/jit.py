@@ -1,0 +1,105 @@
+"""Recompile accounting over the solver stack's jit-cache surfaces.
+
+XLA recompiles are the serving stack's silent latency cliff: a new (shape,
+stride, run-context) combination stalls a tick for seconds while everything
+else waits.  The solver stack already exposes its compile caches —
+``state.advance_cache_size()`` (the strided ``advance_many`` scan),
+``pit.sweep_cache_size()`` / ``pit.run_cache_size()`` (the Picard sweep
+scans), and the fused kernel's own jit cache — so compile storms are
+countable.  :class:`RecompileTracker` samples those counters, reports deltas,
+and (given a recorder/registry) turns each growth into a ``jit.recompile``
+trace instant plus a ``recompiles_total{cache=...}`` counter: a compile storm
+shows up as a cluster of instants on the trace and a fleet-level number on
+the Prometheus side.
+
+Sampling a jit cache size is a dict ``len()``, so per-tick observation is
+free; the serving engine calls :meth:`RecompileTracker.observe` once per
+tick when tracing is on, and ``benchmarks/run.py`` stamps per-section deltas
+into ``BENCH_solvers.json``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+
+def default_sources() -> Dict[str, Callable[[], int]]:
+    """The solver stack's live jit-cache surfaces, by cache name.
+
+    Imported lazily so the obs layer stays importable without jax compiled
+    modules loaded; a surface that fails to import is simply absent."""
+    sources: Dict[str, Callable[[], int]] = {}
+    try:
+        from repro.core.solvers.state import advance_cache_size  # noqa: PLC0415
+        sources["advance"] = advance_cache_size
+    except ImportError:  # pragma: no cover - partial builds only
+        pass
+    try:
+        from repro.core.solvers.pit import (  # noqa: PLC0415
+            run_cache_size,
+            sweep_cache_size,
+        )
+        sources["pit_sweep"] = sweep_cache_size
+        sources["pit_run"] = run_cache_size
+    except ImportError:  # pragma: no cover
+        pass
+    try:
+        from repro.kernels.fused_jump import fused_jump  # noqa: PLC0415
+        sources["fused_jump"] = fused_jump._cache_size
+    except ImportError:  # pragma: no cover
+        pass
+    return sources
+
+
+class RecompileTracker:
+    """Delta-tracking over named jit-cache-size callables.
+
+    ``counts()`` is the current absolute cache sizes; ``delta()`` returns the
+    growth since the last ``delta()`` (or construction) and advances the
+    baseline; ``total()`` is cumulative growth since construction.
+    :meth:`observe` is the serving hook: take a delta and emit it as trace
+    instants + counters."""
+
+    def __init__(self, sources: Optional[Dict[str, Callable[[], int]]] = None):
+        self.sources = default_sources() if sources is None else dict(sources)
+        self._start = self.counts()
+        self._base = dict(self._start)
+
+    def counts(self) -> Dict[str, int]:
+        return {name: int(fn()) for name, fn in self.sources.items()}
+
+    def delta(self) -> Dict[str, int]:
+        """Per-cache growth since the last delta; advances the baseline.
+        Only grown caches appear — an empty dict means no recompiles."""
+        now = self.counts()
+        out = {name: now[name] - self._base.get(name, 0)
+               for name in now if now[name] > self._base.get(name, 0)}
+        self._base = now
+        return out
+
+    def total(self) -> Dict[str, int]:
+        """Cumulative per-cache growth since construction (all caches)."""
+        now = self.counts()
+        return {name: now[name] - self._start.get(name, 0) for name in now}
+
+    def observe(self, recorder=None, metrics=None,
+                ts: Optional[float] = None, pid: Optional[int] = None
+                ) -> Dict[str, int]:
+        """Take a delta and surface it: one ``jit.recompile`` instant per
+        grown cache on ``recorder`` and a ``recompiles_total{cache=...}``
+        counter bump on ``metrics``.  Returns the delta."""
+        grew = self.delta()
+        for cache, n in grew.items():
+            if recorder is not None:
+                recorder.instant("jit.recompile", cat="jit", ts=ts, pid=pid,
+                                 cache=cache, count=n)
+            if metrics is not None:
+                metrics.counter(
+                    "recompiles_total", labels={"cache": cache},
+                    help="jit executables compiled, by cache").inc(n)
+        return grew
+
+
+def recompile_counts() -> Dict[str, int]:
+    """Current absolute jit-cache sizes across the default surfaces — the
+    one-shot spelling for launchers and benchmark reports."""
+    return {name: int(fn()) for name, fn in default_sources().items()}

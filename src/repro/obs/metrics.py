@@ -1,0 +1,195 @@
+"""Metrics registry: counters, gauges, fixed-bucket histograms, summaries.
+
+A :class:`MetricsRegistry` is the numeric half of the obs layer — the
+hand-rolled p50/p95 lists and idle-safe ratios scattered across the serving
+``stats()`` surfaces, as named, exportable instruments:
+
+* **Counter** — monotone total (``requests_served_total``);
+* **Gauge** — last-set level (``slots_active``);
+* **Histogram** — fixed bucket bounds, cumulative-countable (Prometheus
+  ``_bucket``/``_sum``/``_count`` exposition);
+* **Summary** — raw observations; percentiles come from
+  :func:`repro.obs.stats_util.pct`, the same arithmetic the ``stats()``
+  surfaces use, so a summary's p50/p95 is bit-compatible with the
+  hand-rolled math it subsumes.
+
+Registries aggregate across the fleet by snapshot-and-merge:
+``snapshot()`` is a plain picklable dict (process workers ship theirs home
+inside ``TickReport``), and :func:`merge_snapshots` folds any number of them
+into one fleet view — counters/histograms sum, gauges keep the last writer,
+summaries concatenate their observations (fleet percentiles are computed
+over the union, exactly like the cluster's pooled latency lists).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .stats_util import pct
+
+#: default latency-ish bucket bounds (seconds); +Inf is implicit.
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    0.001, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+    30.0, 60.0)
+
+
+def _key(name: str, labels: Optional[Dict[str, str]]) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{labels[k]}"' for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(f"counters only go up, got {amount}")
+        self.value += amount
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+
+class Histogram:
+    __slots__ = ("bounds", "counts", "sum", "count")
+
+    def __init__(self, bounds: Sequence[float] = DEFAULT_BUCKETS):
+        b = tuple(float(x) for x in bounds)
+        if not b or list(b) != sorted(b):
+            raise ValueError(f"bucket bounds must be sorted, got {bounds}")
+        self.bounds = b
+        self.counts = [0] * (len(b) + 1)  # last bucket is +Inf
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        self.sum += value
+        self.count += 1
+        for i, ub in enumerate(self.bounds):
+            if value <= ub:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1
+
+
+class Summary:
+    """Raw-observation summary; quantiles via :func:`stats_util.pct`."""
+
+    __slots__ = ("values",)
+
+    def __init__(self):
+        self.values: List[float] = []
+
+    def observe(self, value: float) -> None:
+        self.values.append(float(value))
+
+    def quantile(self, q: float) -> float:
+        return pct(self.values, q)
+
+
+class MetricsRegistry:
+    """Get-or-create instrument registry, one per engine/router.
+
+    ``labels`` make one logical metric fan out into per-label series
+    (``requests_shed_total{reason="deadline"}``) — the key is the rendered
+    Prometheus series name, so snapshots round-trip through exposition
+    unambiguously."""
+
+    def __init__(self):
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+        self._summaries: Dict[str, Summary] = {}
+        self._help: Dict[str, str] = {}
+
+    def _register(self, store: dict, name: str,
+                  labels: Optional[Dict[str, str]], help: str, factory):
+        key = _key(name, labels)
+        inst = store.get(key)
+        if inst is None:
+            inst = store[key] = factory()
+            if help:
+                self._help[name] = help
+        return inst
+
+    def counter(self, name: str, labels: Optional[Dict[str, str]] = None,
+                help: str = "") -> Counter:
+        return self._register(self._counters, name, labels, help, Counter)
+
+    def gauge(self, name: str, labels: Optional[Dict[str, str]] = None,
+              help: str = "") -> Gauge:
+        return self._register(self._gauges, name, labels, help, Gauge)
+
+    def histogram(self, name: str, labels: Optional[Dict[str, str]] = None,
+                  buckets: Sequence[float] = DEFAULT_BUCKETS,
+                  help: str = "") -> Histogram:
+        return self._register(self._histograms, name, labels, help,
+                              lambda: Histogram(buckets))
+
+    def summary(self, name: str, labels: Optional[Dict[str, str]] = None,
+                help: str = "") -> Summary:
+        return self._register(self._summaries, name, labels, help, Summary)
+
+    # ------------------------------------------------------------- aggregation
+    def snapshot(self) -> dict:
+        """Plain-dict (picklable, JSON-able) view of every instrument."""
+        return {
+            "counters": {k: c.value for k, c in self._counters.items()},
+            "gauges": {k: g.value for k, g in self._gauges.items()},
+            "histograms": {k: {"bounds": list(h.bounds),
+                               "counts": list(h.counts),
+                               "sum": h.sum, "count": h.count}
+                           for k, h in self._histograms.items()},
+            "summaries": {k: list(s.values)
+                          for k, s in self._summaries.items()},
+            "help": dict(self._help),
+        }
+
+
+def merge_snapshots(snaps: Iterable[Optional[dict]]) -> dict:
+    """Fold registry snapshots into one fleet-level snapshot.
+
+    Counters and histogram cells sum; gauges keep the last writer (fleet
+    gauges are per-worker levels — exporters see each worker's latest);
+    summaries concatenate observations so fleet percentiles run over the
+    union.  ``None`` entries (workers with obs off, dead workers) are
+    skipped.  Histogram merges require identical bucket bounds — fleets are
+    homogeneous by construction, so a mismatch is a bug, not data."""
+    out: dict = {"counters": {}, "gauges": {}, "histograms": {},
+                 "summaries": {}, "help": {}}
+    for snap in snaps:
+        if not snap:
+            continue
+        for k, v in snap.get("counters", {}).items():
+            out["counters"][k] = out["counters"].get(k, 0.0) + v
+        out["gauges"].update(snap.get("gauges", {}))
+        for k, h in snap.get("histograms", {}).items():
+            acc = out["histograms"].get(k)
+            if acc is None:
+                out["histograms"][k] = {"bounds": list(h["bounds"]),
+                                        "counts": list(h["counts"]),
+                                        "sum": h["sum"],
+                                        "count": h["count"]}
+                continue
+            if acc["bounds"] != list(h["bounds"]):
+                raise ValueError(f"histogram {k!r} bucket bounds differ "
+                                 f"across snapshots")
+            acc["counts"] = [a + b for a, b in zip(acc["counts"],
+                                                   h["counts"])]
+            acc["sum"] += h["sum"]
+            acc["count"] += h["count"]
+        for k, vals in snap.get("summaries", {}).items():
+            out["summaries"].setdefault(k, []).extend(vals)
+        out["help"].update(snap.get("help", {}))
+    return out

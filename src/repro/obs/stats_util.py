@@ -1,0 +1,37 @@
+"""Idle-safe accounting helpers shared by every ``stats()`` surface.
+
+``ServingEngine.stats()``, ``ClusterStats``, and ``FabricStats`` all need the
+same three guards — a percentile of a possibly-empty list, a ratio of
+possibly-zero totals, and a hit rate that reads 1.0 when nothing carried a
+deadline.  One copy here keeps the outputs bit-compatible across layers (the
+golden-schema tests pin the keys, these helpers pin the arithmetic).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def pct(values: Sequence[float], q: float) -> float:
+    """``np.percentile`` over ``values``; 0.0 on an empty list (an idle
+    engine reports clean zeros, never a NaN)."""
+    return float(np.percentile(np.asarray(values), q)) if values else 0.0
+
+
+def safe_div(num: float, den: float, default: float = 0.0) -> float:
+    """``num / den`` with ``default`` when the denominator is falsy —
+    occupancy/ratio accounting on a never-ticked engine."""
+    return (num / den) if den else default
+
+
+def hit_rate(hits: int, misses: int) -> float:
+    """Deadline scoreboard ratio: hits over decided outcomes, 1.0 when no
+    request carried a deadline (vacuously met)."""
+    total = hits + misses
+    return (hits / total) if total else 1.0
+
+
+def mean(values: Sequence[float]) -> Optional[float]:
+    """Arithmetic mean, None on empty (fleet step-time aggregation)."""
+    return (sum(values) / len(values)) if values else None

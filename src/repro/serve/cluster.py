@@ -54,6 +54,8 @@ import numpy as np
 
 from repro.core import DiffusionProcess, MaskedEngine, SamplerConfig
 from repro.models.config import ModelConfig
+from repro.obs import NULL_RECORDER, merge_snapshots, resolve_recorder
+from repro.obs.stats_util import hit_rate, pct, safe_div
 from repro.sharding.rules import data_shard_devices
 
 from .engine import (
@@ -172,6 +174,9 @@ class PoolWorker:
         self.device = device
         #: requests this worker finished (router-maintained).
         self.served = 0
+        # Trace track: a fleet sharing one recorder still separates per
+        # worker, because every engine emit stamps its own obs_pid.
+        engine.obs_pid = worker_id
         engine.place(device)
 
     @property
@@ -202,8 +207,9 @@ class PoolWorker:
 # --------------------------------------------------------------------------- #
 
 
-def _pct(values: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(values), q)) if values else 0.0
+#: kept as the module-local spelling (fabric imports it); one arithmetic,
+#: shared with every other stats surface via obs.stats_util.
+_pct = pct
 
 
 @dataclasses.dataclass
@@ -298,6 +304,12 @@ class Router:
         if len(set(ids)) != len(ids):
             raise ValueError(f"duplicate worker_ids: {ids}")
         self.workers = list(workers)
+        #: the fleet's trace recorder: logical/loopback fleets share one
+        #: instance across worker engines (ServingCluster resolves it once),
+        #: so exporting from here sees every worker's track.  FabricRouter
+        #: overrides with its own (handles have no engines).
+        self.obs = (workers[0].engine.obs
+                    if hasattr(workers[0], "engine") else NULL_RECORDER)
         self.policy = (get_policy(policy)() if isinstance(policy, str)
                        else policy)
         self.rebalance = rebalance
@@ -448,6 +460,12 @@ class Router:
         return results
 
     # ------------------------------------------------------------- accounting
+    def metrics_snapshot(self) -> dict:
+        """Fleet-level metrics: every worker engine's registry merged
+        (counters/histograms sum, summaries pool their observations)."""
+        return merge_snapshots(w.engine.metrics.snapshot()
+                               for w in self.workers)
+
     def stats(self) -> ClusterStats:
         per_worker = []
         paid = active = fin_rows = 0
@@ -481,9 +499,8 @@ class Router:
         for prio in sorted(self._class_counts):
             cls = dict(self._class_counts[prio])
             lats = self._class_latencies.get(prio, [])
-            dl = cls["deadline_hits"] + cls["deadline_misses"]
-            cls["deadline_hit_rate"] = (cls["deadline_hits"] / dl) if dl \
-                else 1.0
+            cls["deadline_hit_rate"] = hit_rate(cls["deadline_hits"],
+                                                cls["deadline_misses"])
             cls["latency_p50_s"] = _pct(lats, 50)
             cls["latency_p95_s"] = _pct(lats, 95)
             per_class[prio] = cls
@@ -496,12 +513,11 @@ class Router:
             global_queued=len(self._queue),
             paid_slot_steps=paid,
             active_slot_steps=active,
-            occupancy=(active / paid) if paid else 0.0,
+            occupancy=safe_div(active, paid),
             finalize_rows=fin_rows,
             accepted_steps=accepted,
             rejected_steps=rejected,
-            mean_nfe_per_request=(realized_nfe / served_w) if served_w
-                                 else 0.0,
+            mean_nfe_per_request=safe_div(realized_nfe, served_w),
             queue_delay_p50_s=_pct(self._queue_delays, 50),
             queue_delay_p95_s=_pct(self._queue_delays, 95),
             latency_p50_s=_pct(self._latencies, 50),
@@ -510,15 +526,13 @@ class Router:
             preemptions=preemptions,
             deadline_hits=hits,
             deadline_misses=misses,
-            deadline_hit_rate=(hits / (hits + misses)) if (hits + misses)
-                              else 1.0,
+            deadline_hit_rate=hit_rate(hits, misses),
             salvaged=salvaged,
             pit_requests=pit_req,
             pit_completed=pit_done,
             pit_fallbacks=pit_fb,
             pit_sweeps=pit_sweeps,
-            pit_round_reduction=(pit_steps / pit_sweeps) if pit_sweeps
-                                else 0.0,
+            pit_round_reduction=safe_div(pit_steps, pit_sweeps),
             per_class=per_class,
             per_worker=per_worker,
         )
@@ -561,6 +575,12 @@ class ServingCluster(Router):
         elif len(devices) != n_workers:
             raise ValueError(f"devices must have one entry per worker, got "
                              f"{len(devices)} for {n_workers} workers")
+        # Resolve the recorder ONCE and share it: every worker engine emits
+        # into the same ring (tracks separated by obs_pid), so one export
+        # call sees the whole fleet.  obs=True/None/False both normalize
+        # here; passing a ready TraceRecorder shares that instance.
+        engine_kw["obs"] = resolve_recorder(engine_kw.pop("obs", None),
+                                            clock=engine_kw.get("clock"))
         injected = engine_kw.get("solver_engine") is not None
         if all(d is None for d in devices) and not injected:
             # Logical fleet on one device: share a single solver engine

@@ -121,7 +121,11 @@ from repro.core import (
 from repro.models import decode_step, denoise_logits, init_decode_state
 from repro.models.config import ModelConfig
 
-from .sla import SchedPolicy, SlaView, resolve_sched_policy
+from repro.obs import MetricsRegistry, resolve_recorder
+from repro.obs.jit import RecompileTracker
+from repro.obs.stats_util import hit_rate, safe_div
+
+from .sla import SchedPolicy, SlaView, resolve_sched_policy, view_args
 
 Params = Any
 
@@ -328,7 +332,8 @@ class ServingEngine:
                  step_time_s: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic,
                  pit_window: Optional[int] = None,
-                 salvage: bool = False):
+                 salvage: bool = False,
+                 obs=None):
         if scheduler_stride == "auto":
             if auto_stride_max < 1:
                 raise ValueError(f"auto_stride_max must be >= 1, got "
@@ -372,6 +377,18 @@ class ServingEngine:
         self._max_queue = max_queue
         self.step_time_s = step_time_s
         self._clock = clock
+        # Observability.  The recorder never reads the scheduling clock
+        # itself: every emit below passes an explicit ``ts`` taken from a
+        # stamp the serving path already computed, so enabling tracing makes
+        # zero extra ``clock()`` calls and token outputs are bit-identical
+        # with tracing on or off.  ``_now`` tracks the latest such stamp for
+        # events emitted between stampings (tick spans, PIT sweeps).
+        self.obs = resolve_recorder(obs, clock=clock)
+        self._obs_on = self.obs.enabled
+        self.obs_pid = 0  # trace track id; PoolWorker overrides per worker
+        self.metrics = MetricsRegistry()
+        self._recompiles = RecompileTracker() if self._obs_on else None
+        self._now = 0.0
         # Parallel-in-time low-load mode: window width, live runs, and the
         # slot ids those runs have reserved (capacity accounting).
         if pit_window is not None:
@@ -425,6 +442,8 @@ class ServingEngine:
                 step=jnp.full((max_batch,), sampler.n_steps, jnp.int32),
                 t=jnp.broadcast_to(state.times[-1], (max_batch,)))
             self._pool = SlotPool(state, bucket_ladder=bucket_ladder)
+            if self._obs_on:
+                self._pool.on_advance = self._note_advance
             # Host-side mirror of the step counters, refreshed once per tick
             # (stride boundary) — the ONLY per-tick device fetch on the
             # non-streaming path.
@@ -552,11 +571,32 @@ class ServingEngine:
             return "infeasible"
         return None
 
+    def _note_advance(self, n_active: int, width: int, k: int) -> None:
+        """SlotPool ``on_advance`` observer: bucket-utilisation metrics.
+        Installed only when obs is on, so the disabled path never pays it."""
+        self.metrics.counter(
+            "pool_advances_total",
+            help="compacted/dense pool advance launches").inc()
+        self.metrics.histogram(
+            "bucket_width",
+            buckets=tuple(float(w) for w in self._pool.bucket_ladder),
+            help="compaction bucket width per advance launch").observe(width)
+        self.metrics.counter(
+            "slot_steps_paid_total",
+            help="pool rows x solver steps executed").inc(width * k)
+
     def _make_shed(self, req: Request, submit_t: float, reason: str,
                    now: float) -> Result:
         self.shed_requests += 1
         if req.deadline is not None:
             self.deadline_misses += 1
+        if self._obs_on:
+            self.obs.instant("req.shed", ts=now, pid=self.obs_pid,
+                             rid=req.request_id, reason=reason,
+                             **view_args(self._view(req, submit_t)))
+            self.metrics.counter(
+                "requests_shed_total", labels={"reason": reason},
+                help="requests dropped by admission control").inc()
         return make_shed_result(req, submit_t, reason, now)
 
     def submit(self, req: Request,
@@ -583,6 +623,14 @@ class ServingEngine:
             return self._make_shed(req, submit_t, reason, now)
         req.status = QUEUED
         self._queue.append((req, submit_t))
+        if self._obs_on:
+            self._now = now
+            self.obs.instant("req.submit", ts=now, pid=self.obs_pid,
+                             rid=req.request_id, queued=len(self._queue),
+                             **view_args(self._view(req, submit_t)))
+            self.metrics.counter(
+                "requests_submitted_total",
+                help="requests accepted into the queue").inc()
         return None
 
     def steal_queued(self, n: int = 1,
@@ -758,7 +806,7 @@ class ServingEngine:
             return max(1, min(budget, self._min_steps_floor))
         return budget
 
-    def _park(self, slot: int) -> None:
+    def _park(self, slot: int, now: float = 0.0) -> None:
         """Preempt RUNNING slot ``slot``: snapshot its per-slot rows (keys,
         step index, time, budget, controller rows), freeze the slot, and
         stash a :class:`_Paused` entry.  Restoring the snapshot resumes the
@@ -782,6 +830,14 @@ class ServingEngine:
         # sees no phantom steps on the frozen row.
         self._steps_host[slot] = budget
         self.preempt_count += 1
+        if self._obs_on:
+            self.obs.instant("req.preempt", ts=now, pid=self.obs_pid,
+                             rid=req.request_id, slot=slot,
+                             steps=self._paused[-1].steps,
+                             **view_args(self._view(req, submit_t)))
+            self.metrics.counter(
+                "preemptions_total",
+                help="RUNNING slots parked by the scheduler").inc()
 
     def _admit_into(self, slot: int, kind: str, payload, now: float) -> None:
         """Admit one candidate — a fresh QUEUED request (``kind="q"``) or a
@@ -819,6 +875,13 @@ class ServingEngine:
             self._slot_preempt[slot] = 0
         req.status = RUNNING
         self._slot_req[slot] = req
+        if self._obs_on:
+            self.obs.instant("req.resume" if kind == "p" else "req.admit",
+                             ts=now, pid=self.obs_pid, rid=req.request_id,
+                             slot=slot)
+            self.metrics.counter(
+                "admissions_total", labels={"kind": kind},
+                help="slot admissions (q=fresh, p=resumed snapshot)").inc()
 
     def _admit(self) -> List[Result]:
         """Admission at a step boundary, in sched-policy order.
@@ -837,6 +900,7 @@ class ServingEngine:
         if not self._queue and not self._paused:
             return []
         now = self._clock()
+        self._now = now
 
         cands: List[tuple] = []
         for p in self._paused:
@@ -897,6 +961,14 @@ class ServingEngine:
                 if self._start_pit(payload[0], payload[1], now):
                     continue
                 self.pit_fallbacks += 1
+                if self._obs_on:
+                    self.obs.instant("pit.fallback", cat="pit", ts=now,
+                                     pid=self.obs_pid,
+                                     rid=payload[0].request_id)
+                    self.metrics.counter(
+                        "pit_fallbacks_total",
+                        help="time-parallel requests served "
+                             "sequentially (no free window)").inc()
             self._admit_into(self.free_slots[0], kind, payload, now)
 
         if self._preempt and self._stepwise:
@@ -911,7 +983,7 @@ class ServingEngine:
                 if not self._sched.preempts(view, victim_view, now):
                     break
                 cands.pop(0)
-                self._park(victim)
+                self._park(victim, now)
                 self._admit_into(victim, kind, payload, now)
 
         # Work-conserving salvage: capacity still free after every feasible
@@ -920,13 +992,21 @@ class ServingEngine:
         # passes, on a later tick).  Salvage never preempts feasible work.
         while salvage and self.free_slots:
             kind, payload, _ = salvage.pop(0)
+            req = payload.req if kind == "p" else payload[0]
             if (kind == "q" and self._pit_window is not None
                     and payload[0].time_parallel
                     and self._start_pit(payload[0], payload[1], now)):
                 self.salvaged += 1
-                continue
-            self._admit_into(self.free_slots[0], kind, payload, now)
-            self.salvaged += 1
+            else:
+                self._admit_into(self.free_slots[0], kind, payload, now)
+                self.salvaged += 1
+            if self._obs_on:
+                self.obs.instant("req.salvage", ts=now, pid=self.obs_pid,
+                                 rid=req.request_id)
+                self.metrics.counter(
+                    "salvaged_total",
+                    help="estimated-unreachable requests served on "
+                         "free capacity").inc()
 
         # Leftovers go back where they came from, original order preserved
         # (salvage leftovers after the feasible ones: they re-enter the shed
@@ -963,6 +1043,13 @@ class ServingEngine:
                                       steps=steps))
         req.status = RUNNING
         self.pit_requests += 1
+        if self._obs_on:
+            self.obs.instant("pit.reserve", cat="pit", ts=now,
+                             pid=self.obs_pid, rid=req.request_id,
+                             window=w, steps=steps, slots=list(slots))
+            self.metrics.counter(
+                "pit_requests_total",
+                help="requests launched parallel-in-time").inc()
         return True
 
     def _advance_pit(self) -> None:
@@ -992,6 +1079,14 @@ class ServingEngine:
             run.sweeps = int(run.state.sweeps[0])
             self._active_slot_steps += lo - run.lo
             run.lo = lo
+            if self._obs_on:
+                self.obs.instant("pit.sweep", cat="pit", ts=self._now,
+                                 pid=self.obs_pid, rid=run.req.request_id,
+                                 k=k, lo=lo, steps=run.steps,
+                                 sweeps=run.sweeps)
+                self.metrics.counter(
+                    "pit_sweep_rounds_total",
+                    help="Picard sweep rounds executed").inc(k)
             if lo < run.steps:
                 live.append(run)
                 continue
@@ -999,6 +1094,10 @@ class ServingEngine:
             # batched finalize exactly like a sequential drain.
             self._pit_reserved.difference_update(run.slots)
             self.pit_completed += 1
+            if self._obs_on:
+                self.obs.instant("pit.converged", cat="pit", ts=self._now,
+                                 pid=self.obs_pid, rid=run.req.request_id,
+                                 sweeps=run.sweeps, steps=run.steps)
             self._pit_sweeps_total += run.sweeps
             self._pit_steps_total += run.steps
             self._pending.append(_PendingFinish(
@@ -1025,6 +1124,29 @@ class ServingEngine:
                 self.deadline_hits += 1
             else:
                 self.deadline_misses += 1
+        if self._obs_on:
+            self.obs.instant("req.finish", ts=finish_t, pid=self.obs_pid,
+                             rid=req.request_id, steps=steps, nfe=nfe,
+                             sweeps=sweeps, preemptions=preemptions,
+                             deadline_met=deadline_met)
+            self.metrics.counter(
+                "requests_served_total",
+                help="requests finished with tokens").inc()
+            self.metrics.summary(
+                "request_latency_s",
+                help="submit -> finish, engine clock").observe(
+                    finish_t - submit_t)
+            self.metrics.summary(
+                "queue_delay_s",
+                help="submit -> first admission, engine clock").observe(
+                    admit_t - submit_t)
+            self.metrics.summary(
+                "request_nfe", help="score-fn evals per request").observe(nfe)
+            if deadline_met is not None:
+                self.metrics.counter(
+                    "deadline_outcomes_total",
+                    labels={"outcome": "hit" if deadline_met else "miss"},
+                    help="deadline-carrying requests by outcome").inc()
         return Result(
             request_id=req.request_id,
             tokens=np.asarray(tokens_row[: req.seq_len]),
@@ -1106,6 +1228,13 @@ class ServingEngine:
         self.finalize_passes += passes
         self._finalize_rows += paid
         finish_t = self._clock()
+        if self._obs_on:
+            self._now = finish_t
+            self.obs.instant("finalize.flush", ts=finish_t, pid=self.obs_pid,
+                             rows=len(rows), passes=passes, paid_rows=paid)
+            self.metrics.counter(
+                "finalize_passes_total",
+                help="batched finalize forward launches").inc(passes)
         out = [self._make_result(p.req, p.submit_t, p.admit_t, finish_t,
                                  p.steps, tokens[j], accepted=p.accepted,
                                  rejected=p.rejected,
@@ -1188,6 +1317,26 @@ class ServingEngine:
             per = (time.perf_counter() - wall0) / stride
             self._step_ewma = (per if self._step_ewma is None
                                else 0.8 * self._step_ewma + 0.2 * per)
+        if self._obs_on:
+            # Span duration: virtual clocks (explicit step_time_s) get the
+            # deterministic stride cost so replayed chaos traces are
+            # byte-identical; wall clocks get the measured launch time.
+            dur = (stride * self.step_time_s if self.step_time_s is not None
+                   else time.perf_counter() - wall0)
+            self.obs.complete("tick.advance", self._now, dur,
+                              pid=self.obs_pid, width=width, stride=stride,
+                              active=len(active))
+            self.metrics.counter(
+                "ticks_total", help="scheduler ticks executed").inc()
+            self.metrics.gauge(
+                "queue_depth", help="requests waiting").set(len(self._queue))
+            self.metrics.gauge(
+                "slots_active", help="RUNNING pool slots").set(len(active))
+            self.metrics.gauge(
+                "paused", help="parked snapshots").set(len(self._paused))
+            if self._recompiles is not None:
+                self._recompiles.observe(self.obs, self.metrics,
+                                         ts=self._now, pid=self.obs_pid)
 
         streaming = [(s, cb) for s, cb in
                      ((s, self._slot_stream_cb(s)) for s in active)
@@ -1290,7 +1439,7 @@ class ServingEngine:
             "finalize_rows": self._finalize_rows,
             "active_slot_steps": self._active_slot_steps,
             "paid_slot_steps": paid,
-            "occupancy": (self._active_slot_steps / paid) if paid else 0.0,
+            "occupancy": safe_div(self._active_slot_steps, paid),
             "scheduler_stride": self.scheduler_stride,
             "last_stride": self.last_stride,
             "compact": self.compact,
@@ -1301,11 +1450,9 @@ class ServingEngine:
             "adaptive": self._adaptive,
             "accepted_steps": self.accepted_steps,
             "rejected_steps": self.rejected_steps,
-            "reject_rate": (self.rejected_steps / attempts) if attempts
-                           else 0.0,
+            "reject_rate": safe_div(self.rejected_steps, attempts),
             "realized_nfe": self._nfe_served,
-            "mean_nfe_per_request": (self._nfe_served / served) if served
-                                    else 0.0,
+            "mean_nfe_per_request": safe_div(self._nfe_served, served),
             # SLA accounting
             "sched_policy": self._sched.name,
             "preempt": self._preempt,
@@ -1315,10 +1462,8 @@ class ServingEngine:
             "paused": len(self._paused),
             "deadline_hits": self.deadline_hits,
             "deadline_misses": self.deadline_misses,
-            "deadline_hit_rate": (
-                self.deadline_hits
-                / (self.deadline_hits + self.deadline_misses)
-                if (self.deadline_hits + self.deadline_misses) else 1.0),
+            "deadline_hit_rate": hit_rate(self.deadline_hits,
+                                          self.deadline_misses),
             # work-conserving shed salvage
             "salvage": self._salvage,
             "salvaged": self.salvaged,
@@ -1332,14 +1477,12 @@ class ServingEngine:
             "pit_sweep_rounds": self.pit_sweep_rounds,
             "pit_sweeps": self._pit_sweeps_total,
             "pit_steps": self._pit_steps_total,
-            "pit_mean_sweeps_per_request": (
-                self._pit_sweeps_total / self.pit_completed
-                if self.pit_completed else 0.0),
+            "pit_mean_sweeps_per_request": safe_div(self._pit_sweeps_total,
+                                                    self.pit_completed),
             # sequential rounds avoided: sum(T) over completed PIT requests
             # divided by their realized sweeps (1.0 = no reduction).
-            "pit_round_reduction": (
-                self._pit_steps_total / self._pit_sweeps_total
-                if self._pit_sweeps_total else 0.0),
+            "pit_round_reduction": safe_div(self._pit_steps_total,
+                                            self._pit_sweeps_total),
         }
 
 

@@ -46,6 +46,8 @@ from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core import DiffusionProcess, MaskedEngine, SamplerConfig
 from repro.models.config import ModelConfig
+from repro.obs import MetricsRegistry, merge_snapshots, resolve_recorder
+from repro.obs.stats_util import hit_rate, mean, safe_div
 
 from .cluster import PoolWorker, Router, RouterPolicy, _pct
 from .engine import QUEUED, Params, Request, Result, ServingEngine, make_score_fn
@@ -185,15 +187,29 @@ class FabricRouter(Router):
     silence (missed reply windows) onto the same tick clock.
     """
 
+    #: trace track for fabric-level events (worker tracks are the worker
+    #: ids, which start at 0 — the fabric needs its own lane).
+    OBS_PID = -1
+
     def __init__(self, transport: Transport,
                  policy: Union[str, RouterPolicy] = "join_shortest_queue",
                  rebalance: bool = False, heartbeat_timeout: int = 3,
-                 default_n_steps: int = 0):
+                 default_n_steps: int = 0, obs=None):
         if heartbeat_timeout < 1:
             raise ValueError(f"heartbeat_timeout must be >= 1 tick, got "
                              f"{heartbeat_timeout}")
         handles = [WorkerHandle(wid) for wid in transport.alive_ids]
         super().__init__(handles, policy=policy, rebalance=rebalance)
+        # Fabric-level observability.  Every fabric event stamps
+        # ``ts=float(self.tick)`` — the tick counter IS the fabric's clock,
+        # so seeded chaos schedules replay to identical traces.  Worker
+        # events arrive through TickReports: loopback engines share this
+        # recorder directly; process workers ship drained deltas that are
+        # re-stamped onto their pid track here.
+        self.obs = resolve_recorder(obs)
+        self._obs_on = self.obs.enabled
+        self.metrics = MetricsRegistry()
+        self._worker_metrics: Dict[int, dict] = {}
         self.transport = transport
         self.heartbeat_timeout = heartbeat_timeout
         #: budget assumed for requests without an explicit n_steps (feeds the
@@ -285,6 +301,13 @@ class FabricRouter(Router):
             handle._pending_work = 0
             handle.assigned.clear()
             self.joins += 1
+            if self._obs_on:
+                self.obs.instant("worker.respawn", cat="fabric",
+                                 ts=float(self.tick), pid=self.OBS_PID,
+                                 worker=reuse_id)
+                self.metrics.counter(
+                    "worker_joins_total",
+                    help="workers joined or respawned").inc()
             self._rebalance()
             return handle
         wid = self.transport.spawn()
@@ -293,6 +316,13 @@ class FabricRouter(Router):
         self.workers.append(handle)
         self._handles[wid] = handle
         self.joins += 1
+        if self._obs_on:
+            self.obs.instant("worker.join", cat="fabric",
+                             ts=float(self.tick), pid=self.OBS_PID,
+                             worker=wid)
+            self.metrics.counter(
+                "worker_joins_total",
+                help="workers joined or respawned").inc()
         self._rebalance()
         return handle
 
@@ -325,6 +355,11 @@ class FabricRouter(Router):
             handle.queued_est += 1
             handle._pending_work += self._req_budget(req)
             self.dispatched += 1
+            if self._obs_on:
+                self.obs.instant("req.dispatch", cat="fabric",
+                                 ts=float(self.tick), pid=self.OBS_PID,
+                                 rid=req.request_id,
+                                 worker=handle.worker_id)
 
     def _rebalance(self) -> int:
         """Even out worker backlogs by stealing QUEUED requests back through
@@ -386,6 +421,23 @@ class FabricRouter(Router):
         handle.assigned.clear()
         handle.queued_est = 0
         self.recovered += len(entries)
+        if self._obs_on:
+            ts = float(self.tick)
+            self.obs.instant("worker.dead", cat="fabric", ts=ts,
+                             pid=self.OBS_PID, worker=handle.worker_id,
+                             requeued=len(entries))
+            if entries:
+                self.obs.instant(
+                    "ledger.replay", cat="fabric", ts=ts, pid=self.OBS_PID,
+                    worker=handle.worker_id,
+                    rids=[e.req.request_id for e in entries])
+            self.metrics.counter(
+                "worker_deaths_total",
+                help="workers declared dead by the liveness check").inc()
+            self.metrics.counter(
+                "requests_recovered_total",
+                help="ledger entries requeued from dead workers").inc(
+                    len(entries))
 
     def step(self) -> List[Result]:
         """One fabric tick (see class docs).  Returns the requests whose
@@ -407,9 +459,27 @@ class FabricRouter(Router):
             handle = self._handles.get(wid)
             if handle is None:
                 continue
+            if self._obs_on:
+                # Worker obs deltas ride the report home: shipped events are
+                # re-stamped onto the worker's pid track (process workers
+                # emit on pid 0 locally); metrics snapshots are idempotent —
+                # keep the latest per worker, merge on demand.
+                if report.obs_events:
+                    self.obs.extend(report.obs_events, pid=wid)
+                if report.obs_metrics is not None:
+                    self._worker_metrics[wid] = report.obs_metrics
             if report.heartbeat is not None and handle.alive:
                 handle.observe(report.heartbeat, self.tick)
                 self.heartbeats += 1
+                if self._obs_on:
+                    hb = report.heartbeat
+                    self.obs.instant("worker.heartbeat", cat="fabric",
+                                     ts=float(self.tick), pid=self.OBS_PID,
+                                     worker=wid, queued=hb.queued,
+                                     backlog=hb.backlog, late=bool(hb.late))
+                    self.metrics.counter(
+                        "heartbeats_total",
+                        help="worker heartbeats observed").inc()
             for res in report.results:
                 entry = self._ledger.get(res.request_id)
                 if entry is None or entry.worker != wid:
@@ -417,6 +487,11 @@ class FabricRouter(Router):
                     # worker was fenced): tokens are placement-invariant, so
                     # dropping the duplicate loses nothing.
                     self.stale_results += 1
+                    if self._obs_on:
+                        self.obs.instant("result.stale", cat="fabric",
+                                         ts=float(self.tick),
+                                         pid=self.OBS_PID,
+                                         rid=res.request_id, worker=wid)
                     continue
                 del self._ledger[res.request_id]
                 handle.assigned.discard(res.request_id)
@@ -453,6 +528,16 @@ class FabricRouter(Router):
         self.transport.close()
 
     # ------------------------------------------------------------- accounting
+    def metrics_snapshot(self) -> dict:
+        """Fleet metrics: the fabric's own registry (deaths, joins,
+        heartbeats, recoveries) merged with the latest snapshot each worker
+        shipped in a TickReport (dead workers keep their last report — their
+        counters are history, not garbage)."""
+        return merge_snapshots(
+            [self.metrics.snapshot()]
+            + [self._worker_metrics[wid]
+               for wid in sorted(self._worker_metrics)])
+
     def stats(self) -> FabricStats:
         per_worker = []
         hits = sum(c["deadline_hits"] for c in self._class_counts.values())
@@ -462,9 +547,8 @@ class FabricRouter(Router):
         for prio in sorted(self._class_counts):
             cls = dict(self._class_counts[prio])
             lats = self._class_latencies.get(prio, [])
-            dl = cls["deadline_hits"] + cls["deadline_misses"]
-            cls["deadline_hit_rate"] = (cls["deadline_hits"] / dl) if dl \
-                else 1.0
+            cls["deadline_hit_rate"] = hit_rate(cls["deadline_hits"],
+                                                cls["deadline_misses"])
             cls["latency_p50_s"] = _pct(lats, 50)
             cls["latency_p95_s"] = _pct(lats, 95)
             per_class[prio] = cls
@@ -510,18 +594,15 @@ class FabricRouter(Router):
             shed_requests=self.shed_requests,
             deadline_hits=hits,
             deadline_misses=misses,
-            deadline_hit_rate=(hits / (hits + misses)) if (hits + misses)
-                              else 1.0,
+            deadline_hit_rate=hit_rate(hits, misses),
             per_class=per_class,
             salvaged=salvaged,
             pit_requests=pit_req,
             pit_completed=pit_done,
             pit_fallbacks=pit_fb,
             pit_sweeps=pit_sweeps,
-            pit_round_reduction=(pit_steps / pit_sweeps) if pit_sweeps
-                                else 0.0,
-            step_time_s=(sum(step_times) / len(step_times)) if step_times
-                        else None,
+            pit_round_reduction=safe_div(pit_steps, pit_sweeps),
+            step_time_s=mean(step_times),
             per_worker=per_worker,
         )
 
@@ -549,7 +630,14 @@ def ServingFabric(params: Params, cfg: ModelConfig, process: DiffusionProcess,
     """
     if n_workers < 1:
         raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+    # Resolve the recorder once at the fabric: loopback engines share the
+    # instance (events land directly, per-worker tracks via obs_pid);
+    # process workers can only receive the picklable ``True`` spelling —
+    # each child builds a private recorder and ships drained deltas home.
+    obs = resolve_recorder(engine_kw.pop("obs", None),
+                           clock=engine_kw.get("clock"))
     if transport == "loopback":
+        engine_kw = dict(engine_kw, obs=obs)
         if engine_kw.get("solver_engine") is None:
             shared = MaskedEngine(process=process,
                                   score_fn=make_score_fn(params, cfg,
@@ -572,9 +660,12 @@ def ServingFabric(params: Params, cfg: ModelConfig, process: DiffusionProcess,
         if extra_inputs:
             raise ValueError("extra_inputs cannot cross a process transport "
                              "(loopback-only)")
+        child_kw = dict(engine_kw)
+        if obs.enabled:
+            child_kw["obs"] = True  # picklable spelling; private per child
         spec = HostEngineSpec(cfg=cfg, sampler=sampler, param_seed=param_seed,
                               max_batch=max_batch, seq_len=seq_len,
-                              engine_kw=dict(engine_kw) or None,
+                              engine_kw=child_kw or None,
                               warmup=warmup)
         tp = ProcessTransport(spec, n_workers, tick_timeout_s=tick_timeout_s)
     else:
@@ -582,4 +673,4 @@ def ServingFabric(params: Params, cfg: ModelConfig, process: DiffusionProcess,
                          f"'loopback' or 'process'")
     return FabricRouter(tp, policy=policy, rebalance=rebalance,
                         heartbeat_timeout=heartbeat_timeout,
-                        default_n_steps=sampler.n_steps)
+                        default_n_steps=sampler.n_steps, obs=obs)

@@ -49,6 +49,18 @@ class SlaView:
     submit_t: float = 0.0
 
 
+def view_args(view: Optional[SlaView]) -> Dict[str, object]:
+    """The SLA facts as flat trace-event args (obs layer payloads for
+    shed/preempt/finish instants).  Empty dict when no view exists."""
+    if view is None:
+        return {}
+    out: Dict[str, object] = {"priority": view.priority,
+                              "submit_t": view.submit_t}
+    if view.deadline_t is not None:
+        out["deadline_t"] = view.deadline_t
+    return out
+
+
 # --------------------------------------------------------------------------- #
 # Registry (mirrors serve/cluster.py's router-policy registry)
 # --------------------------------------------------------------------------- #

@@ -74,6 +74,15 @@ class TickReport:
 
     results: List[Result]
     heartbeat: Optional[Heartbeat]
+    #: trace events drained from a worker's PRIVATE recorder this tick
+    #: (process workers; None for loopback fleets, whose engines share the
+    #: fabric's recorder and need no shipping).  The fabric re-stamps these
+    #: onto the worker's pid track.
+    obs_events: Optional[List[dict]] = None
+    #: the worker engine's full metrics snapshot (idempotent: the fabric
+    #: keeps the latest per worker and merges on demand, so a lost tick
+    #: reply only delays — never corrupts — fleet metrics).
+    obs_metrics: Optional[dict] = None
 
 
 class Transport:
@@ -254,7 +263,13 @@ class LoopbackTransport(Transport):
                 if delay:
                     self._delayed.append((self.tick_index + delay, hb))
                     hb = None
-            reports[wid] = TickReport(results, hb)
+            # Loopback engines share the fabric's recorder (events need no
+            # shipping — obs_events stays None); metrics snapshots still ride
+            # the report so fleet aggregation is transport-uniform.
+            reports[wid] = TickReport(
+                results, hb,
+                obs_metrics=(w.engine.metrics.snapshot()
+                             if w.engine.obs.enabled else None))
         # Deliver delayed heartbeats that are due this tick (stale load
         # figures and all) — even from workers killed in the meantime: a
         # packet already in flight still arrives.
@@ -362,6 +377,10 @@ def _host_worker_main(conn, spec: HostEngineSpec, worker_id: int,
                               seq_len=spec.seq_len, seed=0))
         engine.run_all()
         engine.reset_stats()
+        # Warmup is compile-time noise: drop its trace events and counters
+        # so the first real tick reports a clean steady state.
+        engine.obs.clear()
+        engine.metrics = type(engine.metrics)()
     shed_buf: List[Result] = []
     try:
         while True:
@@ -384,7 +403,14 @@ def _host_worker_main(conn, spec: HostEngineSpec, worker_id: int,
                              + engine.paused + engine.pending_finalize),
                     remaining_work=engine.remaining_work(),
                     stats=engine.stats())
-                conn.send(("tick", results, hb))
+                # Obs deltas ride the tick reply home: drain the private
+                # recorder (each event crosses the pipe once) and snapshot
+                # the metrics registry (idempotent full state).
+                if engine.obs.enabled:
+                    conn.send(("tick", results, hb, engine.obs.drain(),
+                               engine.metrics.snapshot()))
+                else:
+                    conn.send(("tick", results, hb))
             elif cmd == "steal":
                 least_urgent = bool(msg[2]) if len(msg) > 2 else False
                 conn.send(("steal",
@@ -563,12 +589,19 @@ class ProcessTransport(Transport):
             deadline = start + window
             try:
                 if w.conn.poll(max(0.0, deadline - time.monotonic())):
-                    tag, results, hb = w.conn.recv()
+                    msg = w.conn.recv()
+                    tag, results, hb = msg[0], msg[1], msg[2]
                     if tag == "tick":
                         hb.tick = self.tick_index  # delivery tick
                         hb.late = w.missed > 0
                         self._observe_step_time(w, hb)
-                        report = TickReport(results, hb)
+                        # Obs-enabled children reply with a 5-tuple (events
+                        # delta + metrics snapshot appended); plain children
+                        # keep the original 3-tuple.
+                        report = TickReport(
+                            results, hb,
+                            obs_events=msg[3] if len(msg) > 3 else None,
+                            obs_metrics=msg[4] if len(msg) > 4 else None)
                         w.awaiting = False
                         w.missed = 0
                 else:

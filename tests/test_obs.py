@@ -1,0 +1,342 @@
+"""Observability layer: recorder/metrics/export units, engine + fabric
+integration, and the acceptance gates — tokens bit-identical with tracing on
+vs off, and a seeded chaos run recorded twice producing byte-identical
+event streams under a virtual clock."""
+import itertools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MaskedEngine,
+    SamplerConfig,
+    loglinear_schedule,
+    masked_process,
+)
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.obs import (
+    NULL_RECORDER,
+    MetricsRegistry,
+    RecompileTracker,
+    TraceRecorder,
+    hit_rate,
+    merge_snapshots,
+    pct,
+    resolve_recorder,
+    safe_div,
+)
+from repro.obs.export import (
+    chrome_trace,
+    events_jsonl,
+    prometheus_text,
+    validate_chrome_trace,
+    validate_prometheus,
+)
+from repro.obs.stats_util import mean
+from repro.serve import Request, ServingEngine, ServingFabric, failure_schedule
+
+CFG = ModelConfig(name="obs", family="dense", n_layers=2, d_model=64,
+                  n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                  vocab_size=23, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)[0]
+
+
+# Injected i.i.d. solver engine (same idiom as test_fabric.py): each step is
+# a broadcast, so these tests spend their time in the scheduler + recorder.
+_PI = jnp.asarray(np.random.default_rng(3).dirichlet(
+    np.ones(CFG.vocab_size) * 2.0), jnp.float32)
+
+
+def _iid_engine():
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    return MaskedEngine(
+        process=proc,
+        score_fn=lambda toks, t: jnp.broadcast_to(
+            _PI, toks.shape + (CFG.vocab_size,)))
+
+
+_SAMPLER = SamplerConfig(method="theta_trapezoidal", n_steps=3, theta=0.4)
+
+
+def _counting_clock():
+    c = itertools.count()
+    return lambda: float(next(c))
+
+
+# --------------------------------------------------------------------------- #
+# Recorder units
+# --------------------------------------------------------------------------- #
+
+
+def test_recorder_instant_complete_span():
+    rec = TraceRecorder(clock=lambda: 5.0)
+    rec.instant("a", rid=1)
+    rec.complete("b", 1.0, 2.0, tid=3, width=4)
+    with rec.span("c", cat="x") as args:
+        args["grew"] = True
+    evs = rec.events()
+    assert [e["name"] for e in evs] == ["a", "b", "c"]
+    assert evs[0] == {"name": "a", "cat": "serve", "ph": "i", "ts": 5.0,
+                      "pid": 0, "tid": 0, "args": {"rid": 1}}
+    assert evs[1]["ph"] == "X" and evs[1]["dur"] == 2.0 and evs[1]["tid"] == 3
+    assert evs[2]["args"] == {"grew": True} and evs[2]["cat"] == "x"
+
+
+def test_recorder_ring_drops_oldest():
+    rec = TraceRecorder(clock=lambda: 0.0, capacity=3)
+    for i in range(5):
+        rec.instant(f"e{i}")
+    assert rec.dropped == 2
+    assert [e["name"] for e in rec.events()] == ["e2", "e3", "e4"]
+
+
+def test_recorder_drain_and_extend_restamp_pid():
+    rec = TraceRecorder(clock=lambda: 0.0)
+    rec.instant("x")
+    shipped = rec.drain()
+    assert len(rec) == 0 and len(shipped) == 1
+    sink = TraceRecorder(clock=lambda: 0.0)
+    sink.extend(shipped, pid=7)
+    assert sink.events()[0]["pid"] == 7
+    assert shipped[0]["pid"] == 0  # extend copies, never mutates in place
+
+
+def test_null_recorder_is_inert_singleton():
+    assert not NULL_RECORDER.enabled
+    NULL_RECORDER.instant("x")
+    NULL_RECORDER.complete("y", 0.0, 1.0)
+    with NULL_RECORDER.span("z"):
+        pass
+    NULL_RECORDER.extend([{"name": "w"}])
+    assert len(NULL_RECORDER) == 0
+
+
+def test_resolve_recorder_convention():
+    assert resolve_recorder(None) is NULL_RECORDER
+    assert resolve_recorder(False) is NULL_RECORDER
+    fresh = resolve_recorder(True, clock=lambda: 9.0)
+    assert fresh.enabled and fresh is not NULL_RECORDER
+    assert resolve_recorder(fresh) is fresh
+    with pytest.raises(TypeError):
+        resolve_recorder("yes")
+
+
+# --------------------------------------------------------------------------- #
+# Metrics units
+# --------------------------------------------------------------------------- #
+
+
+def test_metrics_counter_gauge_histogram_summary():
+    m = MetricsRegistry()
+    m.counter("reqs_total", labels={"kind": "a"}).inc()
+    m.counter("reqs_total", labels={"kind": "a"}).inc(2)
+    m.gauge("depth").set(4.0)
+    h = m.histogram("lat_s", buckets=(1.0, 2.0))
+    for v in (0.5, 1.5, 99.0):
+        h.observe(v)
+    m.summary("qd_s").observe(3.0)
+    snap = m.snapshot()
+    assert snap["counters"]['reqs_total{kind="a"}'] == 3
+    assert snap["gauges"]["depth"] == 4.0
+    hs = snap["histograms"]["lat_s"]
+    assert hs["bounds"] == [1.0, 2.0]
+    assert hs["counts"] == [1, 1, 1] and hs["count"] == 3
+    assert hs["sum"] == pytest.approx(101.0)
+    assert snap["summaries"]["qd_s"] == [3.0]
+
+
+def test_metrics_get_or_create_is_stable():
+    m = MetricsRegistry()
+    assert m.counter("c") is m.counter("c")
+    assert m.counter("c", labels={"x": "1"}) is not m.counter("c")
+
+
+def test_merge_snapshots():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("n").inc(1)
+    b.counter("n").inc(2)
+    a.gauge("g").set(1.0)
+    b.gauge("g").set(5.0)
+    a.histogram("h", buckets=(1.0,)).observe(0.5)
+    b.histogram("h", buckets=(1.0,)).observe(2.0)
+    a.summary("s").observe(1.0)
+    b.summary("s").observe(2.0)
+    merged = merge_snapshots([a.snapshot(), b.snapshot()])
+    assert merged["counters"]["n"] == 3
+    assert merged["gauges"]["g"] == 5.0  # last writer wins
+    assert merged["histograms"]["h"]["counts"] == [1, 1]
+    assert sorted(merged["summaries"]["s"]) == [1.0, 2.0]
+    bad = MetricsRegistry()
+    bad.histogram("h", buckets=(9.0,)).observe(0.1)
+    with pytest.raises(ValueError):
+        merge_snapshots([a.snapshot(), bad.snapshot()])
+
+
+def test_stats_util_idle_safety():
+    assert pct([], 50) == 0.0
+    assert pct([1.0, 3.0], 50) == 2.0
+    assert safe_div(1, 0) == 0.0 and safe_div(6, 3) == 2.0
+    assert hit_rate(0, 0) == 1.0 and hit_rate(1, 3) == 0.25
+    assert mean([]) is None and mean([2.0, 4.0]) == 3.0
+
+
+# --------------------------------------------------------------------------- #
+# Export units
+# --------------------------------------------------------------------------- #
+
+
+def test_chrome_trace_roundtrip_and_validation():
+    rec = TraceRecorder(clock=lambda: 0.0)
+    rec.instant("i1", ts=1.0, pid=2, tid=3)
+    rec.complete("x1", 2.0, 0.5)
+    doc = chrome_trace(rec.events(), process_names={2: "fabric"})
+    n = validate_chrome_trace(doc)
+    assert n == len(doc["traceEvents"])
+    by_name = {e["args"].get("name") for e in doc["traceEvents"]
+               if e["ph"] == "M" and e["name"] == "process_name"}
+    assert "fabric" in by_name
+    ev = [e for e in doc["traceEvents"] if e["name"] == "i1"][0]
+    assert ev["ts"] == 1.0e6 and ev["s"] == "t"
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"traceEvents": [{"name": "bad", "ph": "?"}]})
+
+
+def test_events_jsonl_byte_stable():
+    evs = [{"name": "a", "ts": 0.0, "args": {"b": 1, "a": 2}}]
+    assert events_jsonl(evs) == events_jsonl(list(map(dict, evs)))
+    assert json.loads(events_jsonl(evs)) == evs[0]
+
+
+def test_prometheus_text_validates_small_values():
+    m = MetricsRegistry()
+    m.summary("qd_s").observe(1.7e-05)  # repr -> negative exponent
+    m.counter("n").inc()
+    m.histogram("h", buckets=(1.0,)).observe(0.5)
+    text = prometheus_text(m.snapshot())
+    assert validate_prometheus(text) > 0
+    assert 'h_bucket{le="1.0"} 1' in text
+    assert 'h_bucket{le="+Inf"} 1' in text
+    with pytest.raises(ValueError):
+        validate_prometheus("not a sample line !!!\n")
+
+
+def test_recompile_tracker_delta():
+    trk = RecompileTracker(sources={"fake": itertools.count(2).__next__})
+    assert trk.delta() == {"fake": 1}   # 2 -> 3: one new executable
+    assert trk.delta() == {"fake": 1}   # baseline advanced: 3 -> 4
+    assert trk.total() == {"fake": 3}   # cumulative since construction
+
+    steady = RecompileTracker(sources={"cache": lambda: 5})
+    assert steady.delta() == {}         # no growth -> empty dict
+
+
+# --------------------------------------------------------------------------- #
+# Engine integration: the acceptance gates
+# --------------------------------------------------------------------------- #
+
+
+def _run_engine(params, obs):
+    eng = ServingEngine(params, CFG, _iid_engine().process, _SAMPLER,
+                        max_batch=2, seq_len=10, solver_engine=_iid_engine(),
+                        clock=_counting_clock(), step_time_s=1.0, obs=obs)
+    for i in range(6):
+        eng.submit(Request(request_id=i, seq_len=10, seed=i))
+    return eng, {r.request_id: np.asarray(r.tokens) for r in eng.run_all()}
+
+
+def test_tokens_bit_identical_tracing_on_vs_off(params):
+    """The non-negotiable: observation never changes scheduling, so served
+    tokens are bit-identical with the recorder on or off — even under a
+    counting clock, where one stray clock() call would shift every
+    subsequent stamp."""
+    eng_off, res_off = _run_engine(params, obs=None)
+    eng_on, res_on = _run_engine(params, obs=True)
+    assert res_off.keys() == res_on.keys()
+    for rid in res_off:
+        assert (res_off[rid] == res_on[rid]).all()
+    assert len(eng_off.obs) == 0          # disabled recorder stays empty
+    assert len(eng_on.obs.events()) > 0
+
+
+def test_engine_trace_covers_request_lifecycle(params):
+    eng, _ = _run_engine(params, obs=True)
+    names = {e["name"] for e in eng.obs.events()}
+    assert {"req.submit", "req.admit", "req.finish", "tick.advance",
+            "finalize.flush"} <= names
+    # every stamp came from the engine's counting clock, not the wall clock
+    assert all(float(e["ts"]) < 1e6 for e in eng.obs.events())
+    doc = chrome_trace(eng.obs.events())
+    assert validate_chrome_trace(doc) > 0
+    snap = eng.metrics.snapshot()
+    assert snap["counters"]["requests_served_total"] == 6
+    assert validate_prometheus(prometheus_text(snap)) > 0
+
+
+def test_engine_metrics_match_stats(params):
+    eng, res = _run_engine(params, obs=True)
+    stats = eng.stats()
+    snap = eng.metrics.snapshot()
+    assert snap["counters"]["requests_submitted_total"] == 6
+    assert snap["counters"]["requests_served_total"] == \
+        stats["requests_served"] == len(res)
+    assert snap["counters"]["ticks_total"] == stats["global_steps"]
+    assert len(snap["summaries"]["request_latency_s"]) == len(res)
+
+
+# --------------------------------------------------------------------------- #
+# Fabric chaos determinism: recorded twice -> byte-identical streams
+# --------------------------------------------------------------------------- #
+
+
+def _chaos_run(params):
+    fab = ServingFabric(params, CFG, _iid_engine().process, _SAMPLER,
+                        n_workers=3, max_batch=2, seq_len=10,
+                        heartbeat_timeout=1, solver_engine=_iid_engine(),
+                        obs=True, clock=_counting_clock(), step_time_s=1.0)
+    fab.apply_failure_schedule(failure_schedule(
+        n_workers=3, n_failures=2, horizon=6, p_rejoin=1.0, seed=11))
+    for i in range(10):
+        fab.submit(Request(request_id=i, seq_len=10, seed=i), submit_t=0.0)
+    res = {r.request_id: np.asarray(r.tokens) for r in fab.run_all()}
+    return fab, res
+
+
+def test_fabric_chaos_trace_byte_identical(params):
+    """A seeded chaos scenario (kills + rejoins under a virtual clock),
+    recorded twice: the JSONL event streams are byte-identical and the
+    tokens match — the determinism invariant the CI obs-smoke job pins."""
+    fab1, res1 = _chaos_run(params)
+    fab2, res2 = _chaos_run(params)
+    j1, j2 = events_jsonl(fab1.obs.events()), events_jsonl(fab2.obs.events())
+    assert j1 == j2
+    assert res1.keys() == res2.keys()
+    for rid in res1:
+        assert (res1[rid] == res2[rid]).all()
+
+    names = {e["name"] for e in fab1.obs.events()}
+    assert {"worker.heartbeat", "worker.dead", "worker.join", "ledger.replay",
+            "req.dispatch", "req.submit", "req.finish"} <= names
+    st = fab1.stats()
+    assert st.deaths == 2 and st.joins == 2 and st.requests_served == 10
+    # fabric-level events live on the fabric track (-1); worker events on
+    # non-negative worker-id tracks (rejoined workers get fresh ids)
+    pids = {int(e["pid"]) for e in fab1.obs.events()}
+    assert -1 in pids and len(pids) > 1
+    assert all(p >= 0 for p in pids - {-1})
+
+
+def test_fabric_metrics_snapshot_merges_fleet(params):
+    fab, res = _chaos_run(params)
+    snap = fab.metrics_snapshot()
+    assert snap["counters"]["requests_served_total"] == len(res) == 10
+    assert snap["counters"]["worker_deaths_total"] == 2
+    assert snap["counters"]["requests_recovered_total"] > 0
+    assert validate_prometheus(prometheus_text(snap)) > 0

@@ -1,0 +1,97 @@
+"""End-to-end smoke tests for the serving launcher CLI.
+
+Each test drives ``repro.launch.serve.main()`` exactly as the command line
+would — tiny reduced configs, a handful of requests — covering the flag
+surface the README advertises: basic serving, fabric chaos, parallel-in-
+time, SLA scheduling, and the observability outputs (which are validated
+with the same functions the ``python -m repro.obs.export`` CI gate uses).
+"""
+import json
+import sys
+
+import pytest
+
+from repro.launch import serve as serve_cli
+from repro.obs.export import validate_chrome_trace, validate_prometheus
+
+BASE = ["serve", "--arch", "radd_small", "--reduced",
+        "--method", "theta_trapezoidal", "--nfe", "3",
+        "--requests", "3", "--seq-len", "12", "--max-batch", "2"]
+
+
+def run_cli(monkeypatch, *extra):
+    monkeypatch.setattr(sys, "argv", BASE + list(extra))
+    serve_cli.main()
+
+
+def test_cli_basic(monkeypatch, capsys):
+    run_cli(monkeypatch)
+    out = capsys.readouterr().out
+    assert "served 3 requests" in out
+    assert "occupancy" in out
+    assert "first sample head:" in out
+
+
+def test_cli_fabric_loopback_kill_worker(monkeypatch, capsys):
+    run_cli(monkeypatch, "--workers", "2", "--fabric", "loopback",
+            "--kill-worker", "0@1", "--heartbeat-timeout", "1",
+            "--requests", "4", "--nfe", "6")
+    out = capsys.readouterr().out
+    assert "served 4 requests" in out
+    assert "fabric[loopback]:" in out
+    assert "1 deaths" in out
+
+
+def test_cli_pit_window(monkeypatch, capsys):
+    run_cli(monkeypatch, "--pit-window", "2", "--time-parallel",
+            "--requests", "2", "--nfe", "8", "--max-batch", "4")
+    out = capsys.readouterr().out
+    assert "served 2 requests" in out
+    assert "pit[window 2]:" in out
+
+
+def test_cli_sla_edf_shed(monkeypatch, capsys):
+    run_cli(monkeypatch, "--sched-policy", "edf", "--preempt", "--shed",
+            "--deadline-ms", "60000")
+    out = capsys.readouterr().out
+    assert "sla[edf]:" in out
+    assert "deadline hit rate" in out
+
+
+def test_cli_obs_outputs_validate(monkeypatch, capsys, tmp_path):
+    trace = tmp_path / "trace.json"
+    metrics = tmp_path / "metrics.prom"
+    events = tmp_path / "events.jsonl"
+    run_cli(monkeypatch, "--trace-out", str(trace),
+            "--metrics-out", str(metrics), "--events-out", str(events))
+    out = capsys.readouterr().out
+    assert "obs: wrote" in out and "events recorded" in out
+
+    with open(trace) as f:
+        assert validate_chrome_trace(json.load(f)) > 0
+    assert validate_prometheus(metrics.read_text()) > 0
+    lines = events.read_text().splitlines()
+    assert lines and all(json.loads(ln)["name"] for ln in lines)
+    names = {json.loads(ln)["name"] for ln in lines}
+    assert {"req.submit", "req.finish", "tick.advance"} <= names
+
+
+def test_cli_obs_export_validator_cli(monkeypatch, capsys, tmp_path):
+    """The CI obs-smoke parse gate: produce outputs via the launcher, then
+    validate them through the ``python -m repro.obs.export`` entry point."""
+    from repro.obs import export as export_cli
+
+    trace = tmp_path / "trace.json"
+    metrics = tmp_path / "metrics.prom"
+    run_cli(monkeypatch, "--workers", "2", "--fabric", "loopback",
+            "--trace-out", str(trace), "--metrics-out", str(metrics))
+    capsys.readouterr()
+    export_cli.main([str(trace), str(metrics)])
+    out = capsys.readouterr().out
+    assert "valid chrome trace" in out
+    assert "valid prometheus exposition" in out
+
+
+def test_cli_kill_worker_requires_fabric(monkeypatch):
+    with pytest.raises(SystemExit):
+        run_cli(monkeypatch, "--kill-worker", "0@2")

@@ -1,0 +1,123 @@
+"""Golden schemas for the serving stats surfaces.
+
+Dashboards, the benchmark harness, and the launchers all key into
+``ServingEngine.stats()`` / ``ClusterStats`` / ``FabricStats`` by name;
+renaming or dropping a field silently breaks them.  These tests pin the key
+sets: growing a surface is fine (add the key here too — that's the review
+hook), shrinking or renaming one fails loudly.
+"""
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MaskedEngine,
+    SamplerConfig,
+    loglinear_schedule,
+    masked_process,
+)
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serve import Request, ServingEngine
+from repro.serve.cluster import ClusterStats
+from repro.serve.fabric import FabricStats
+
+CFG = ModelConfig(name="schema", family="dense", n_layers=2, d_model=64,
+                  n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                  vocab_size=23, dtype="float32")
+
+ENGINE_STATS_KEYS = {
+    # pool accounting
+    "requests_served", "global_steps", "score_evals", "finalize_passes",
+    "finalize_rows", "active_slot_steps", "paid_slot_steps", "occupancy",
+    "scheduler_stride", "last_stride", "compact", "stream_fetches",
+    # adaptive stepping
+    "adaptive", "accepted_steps", "rejected_steps", "reject_rate",
+    "realized_nfe", "mean_nfe_per_request",
+    # SLA
+    "sched_policy", "preempt", "shed", "shed_requests", "preemptions",
+    "paused", "deadline_hits", "deadline_misses", "deadline_hit_rate",
+    "salvage", "salvaged",
+    # parallel-in-time
+    "pit_window", "pit_requests", "pit_completed", "pit_active",
+    "pit_fallbacks", "pit_sweep_rounds", "pit_sweeps", "pit_steps",
+    "pit_mean_sweeps_per_request", "pit_round_reduction",
+}
+
+CLUSTER_STATS_FIELDS = {
+    "n_workers", "policy", "requests_served", "dispatched", "rebalanced",
+    "global_queued", "paid_slot_steps", "active_slot_steps", "occupancy",
+    "finalize_rows", "accepted_steps", "rejected_steps",
+    "mean_nfe_per_request", "queue_delay_p50_s", "queue_delay_p95_s",
+    "latency_p50_s", "latency_p95_s", "shed_requests", "preemptions",
+    "deadline_hits", "deadline_misses", "deadline_hit_rate", "per_class",
+    "salvaged", "pit_requests", "pit_completed", "pit_fallbacks",
+    "pit_sweeps", "pit_round_reduction", "per_worker",
+}
+
+FABRIC_STATS_FIELDS = {
+    "n_workers", "n_spawned", "policy", "heartbeat_timeout", "tick",
+    "requests_served", "dispatched", "rebalanced", "recovered", "deaths",
+    "joins", "stale_results", "heartbeats", "global_queued", "in_flight",
+    "queue_delay_p50_s", "queue_delay_p95_s", "latency_p50_s",
+    "latency_p95_s", "shed_requests", "deadline_hits", "deadline_misses",
+    "deadline_hit_rate", "per_class", "salvaged", "pit_requests",
+    "pit_completed", "pit_fallbacks", "pit_sweeps", "pit_round_reduction",
+    "step_time_s", "per_worker",
+}
+
+
+def test_cluster_stats_schema():
+    assert {f.name for f in dataclasses.fields(ClusterStats)} \
+        == CLUSTER_STATS_FIELDS
+
+
+def test_fabric_stats_schema():
+    assert {f.name for f in dataclasses.fields(FabricStats)} \
+        == FABRIC_STATS_FIELDS
+
+
+@pytest.fixture(scope="module")
+def engine_stats():
+    params = init_params(jax.random.PRNGKey(0), CFG)[0]
+    pi = jnp.asarray(np.random.default_rng(3).dirichlet(
+        np.ones(CFG.vocab_size) * 2.0), jnp.float32)
+    solver_eng = MaskedEngine(
+        process=masked_process(CFG.vocab_size, loglinear_schedule()),
+        score_fn=lambda toks, t: jnp.broadcast_to(
+            pi, toks.shape + (CFG.vocab_size,)))
+    c = itertools.count()
+    eng = ServingEngine(params, CFG, solver_eng.process,
+                        SamplerConfig(method="theta_trapezoidal", n_steps=3,
+                                      theta=0.4),
+                        max_batch=2, seq_len=10, solver_engine=solver_eng,
+                        clock=lambda: float(next(c)), step_time_s=1.0)
+    for i in range(3):
+        eng.submit(Request(request_id=i, seq_len=10, seed=i))
+    eng.run_all()
+    return eng.stats()
+
+
+def test_engine_stats_schema(engine_stats):
+    assert set(engine_stats) == ENGINE_STATS_KEYS
+
+
+def test_engine_stats_idle_schema_matches():
+    """A never-ticked engine reports the same keys with clean zeros — no
+    division errors, no conditionally-present fields."""
+    params = init_params(jax.random.PRNGKey(0), CFG)[0]
+    proc = masked_process(CFG.vocab_size, loglinear_schedule())
+    eng = ServingEngine(params, CFG, proc,
+                        SamplerConfig(method="theta_trapezoidal", n_steps=3,
+                                      theta=0.4),
+                        max_batch=2, seq_len=10)
+    stats = eng.stats()
+    assert set(stats) == ENGINE_STATS_KEYS
+    assert stats["occupancy"] == 0.0
+    assert stats["deadline_hit_rate"] == 1.0
+    assert stats["mean_nfe_per_request"] == 0.0
+    assert stats["pit_round_reduction"] == 0.0
